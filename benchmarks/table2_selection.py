@@ -1,0 +1,47 @@
+"""Table II reproduction: the number-system selection matrix.
+
+``core.cost_model.selection_matrix`` ranks {RNS, SD, SD-RNS} by Eq. 3 total
+delay for each (addition-class, multiplication-class) cell and reports ties
+within 10%.  We compare against the paper's published matrix cell-by-cell:
+a cell "agrees" when our best system appears in the paper's entry and every
+system the paper lists appears in our tie set (order-insensitive).
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import (ADD_LEVELS, MUL_LEVELS, PAPER_TABLE_II,
+                                   selection_matrix)
+
+
+def _agrees(ours: str, paper: str) -> bool:
+    if paper == "-":
+        return ours == "-"
+    ours_set = set(ours.split("/"))
+    paper_set = set(paper.split("/"))
+    # our winner must be acceptable to the paper, and we must not miss a
+    # system the paper says is co-optimal
+    return (ours.split("/")[0] in paper_set) and paper_set <= ours_set
+
+
+def run(verbose: bool = True, precision: int = 24) -> dict:
+    ours = selection_matrix(precision)
+    agree = 0
+    cells = []
+    for a in ADD_LEVELS:
+        for m in MUL_LEVELS:
+            o = ours[(a, m)]
+            p = PAPER_TABLE_II[(a, m)]
+            ok = _agrees(o, p)
+            agree += ok
+            cells.append((a, m, o, p, ok))
+    total = len(cells)
+    if verbose:
+        print(f"\n== Table II (selection matrix, P={precision}) ==")
+        print(f"{'adds':8s}{'muls':8s}{'ours':16s}{'paper':14s}match")
+        for a, m, o, p, ok in cells:
+            print(f"{a:8s}{m:8s}{o:16s}{p:14s}{'Y' if ok else 'N'}")
+        print(f"agreement: {agree}/{total}")
+    return {"agreement": agree, "total": total, "cells": cells}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's SD-RNS arithmetic in five minutes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sd
+from repro.core.moduli import P21, special_set
+from repro.core.rns import RnsTensor
+from repro.core.sdrns import SdRnsNumber
+from repro.core.cost_model import eq3_total, select_number_system
+from repro.kernels import ops
+
+print("== 1. residue decomposition (the paper's Eq. 2 moduli) ==")
+ms = special_set(5)                    # {31, 32, 33}, P=16 row of Table I
+x = jnp.array([1234, -987, 12345])     # |x| must stay < M/2 = 16367
+r = ms.to_residues(x)
+print(f"moduli {ms.moduli}, dynamic range M={ms.M} (signed: +-{ms.M//2})")
+print(f"x={np.asarray(x)} -> residues\n{np.asarray(r)}")
+print(f"reverse conversion: {np.asarray(ms.from_residues(r))}")
+
+print("\n== 2. carry-free signed-digit addition (Eq. 1 layer) ==")
+a, b = jnp.int32(27), jnp.int32(-14)
+da, db = sd.from_int(a, 8), sd.from_int(b, 8)
+s = sd.carry_free_add(da, db)
+print(f"{int(a)} + {int(b)} in SD digits -> {int(sd.to_int(s))} "
+      "(constant depth, no carry chain)")
+
+print("\n== 3. SD-RNS numbers: add & multiply mod M ==")
+xs = SdRnsNumber.from_int(jnp.array([57, -33]), ms)
+ys = SdRnsNumber.from_int(jnp.array([12, 41]), ms)
+print(f"(57,-33) + (12,41) = {np.asarray((xs + ys).to_int())}")
+print(f"(57,-33) * (12,41) = {np.asarray((xs * ys).to_int())}")
+
+print("\n== 4. exact integer matmul through RNS channels (TPU kernel) ==")
+rng = np.random.default_rng(0)
+A = jnp.asarray(rng.integers(-7, 8, (64, 128)), jnp.int32)
+B = jnp.asarray(rng.integers(-7, 8, (128, 64)), jnp.int32)
+C = ops.rns_matmul(A, B, mset=P21, max_abs_a=7, max_abs_b=7, interpret=True)
+print(f"A@B exact: {bool(jnp.array_equal(C, A @ B))}  "
+      f"(3 int8 channels, zero in-loop reductions)")
+
+print("\n== 5. which number system should your workload use? ==")
+for (x_, y_) in ((1000, 0), (0, 1000), (500, 500)):
+    pick = select_number_system(x_, y_, 24)
+    t = {s: eq3_total(s, 24, x_, y_) for s in ("BNS", "RNS", "SD", "SD-RNS")}
+    print(f"adds={x_:5d} muls={y_:5d} -> {'/'.join(pick):12s} "
+          f"(ns: " + ", ".join(f"{k}={v:.0f}" for k, v in t.items()) + ")")

@@ -1,0 +1,56 @@
+"""Batched LM serving demo: prefill a request batch, decode with KV caches.
+
+Exercises the exact prefill/decode step functions the decode_32k / long_500k
+dry-run cells compile — at reduced scale so it runs on CPU in seconds.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch yi-6b] [--batch 4]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    engine = ServingEngine(model, params, batch=args.batch,
+                           s_max=args.prompt_len + args.max_new + 1)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.time()
+    res = engine.generate({"tokens": prompts}, max_new=args.max_new,
+                          temperature=args.temperature, key=key)
+    dt = time.time() - t0
+    print(f"[serve_lm] {args.arch} (reduced) B={args.batch}: "
+          f"{args.batch * args.max_new} tokens in {dt:.2f}s "
+          f"({args.batch * args.max_new / dt:.1f} tok/s on CPU)")
+    for b in range(args.batch):
+        print(f"  request {b}: prompt[-4:]={prompts[b, -4:].tolist()} -> "
+              f"generated {res.tokens[b, :12].tolist()}...")
+    # consistency: greedy decode twice is deterministic
+    res2 = engine.generate({"tokens": prompts}, max_new=4)
+    res3 = engine.generate({"tokens": prompts}, max_new=4)
+    assert np.array_equal(res2.tokens, res3.tokens)
+    print("[serve_lm] greedy decode deterministic across calls: True")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end LM training driver on synthetic data with fault tolerance.
+
+Default preset trains a ~2M-param qwen3-family model for 300 steps on CPU in
+a few minutes and prints the falling loss; ``--preset m100`` builds the
+~100M-param variant of the same family (the assignment's end-to-end driver
+scale — same code path, more compute).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--preset tiny]
+      PYTHONPATH=src python examples/train_lm.py --backend rns --steps 40
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.models.api import build_model
+from repro.train.ft import FtConfig, run_training
+from repro.train.loop import make_train_step
+from repro.train.optimizer import OptConfig, init_opt_state
+
+PRESETS = {
+    # name: (d_model, n_layers, n_heads, n_kv, d_ff, vocab, seq, batch)
+    "tiny": (128, 4, 4, 2, 384, 2048, 128, 8),
+    "m100": (768, 12, 12, 4, 2304, 32768, 512, 32),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--backend", default="bns", choices=("bns", "rns"))
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train_lm")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from an existing checkpoint (default: "
+                         "start fresh)")
+    args = ap.parse_args()
+
+    if not args.resume:
+        import shutil
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    d, L, H, kv, ff, vocab, seq, batch = PRESETS[args.preset]
+    cfg = dataclasses.replace(
+        get_config("qwen3-8b").reduced(),
+        d_model=d, n_layers=L, n_heads=H, n_kv=kv, d_ff=ff, vocab=vocab,
+        head_dim=d // H)
+    model = build_model(cfg, backend=args.backend,
+                        rns_impl="interpret" if args.backend == "rns"
+                        else "ref")
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        jax.eval_shape(model.init, jax.random.key(0))))
+    print(f"[train_lm] {args.preset}: {n_params/1e6:.1f}M params, "
+          f"seq={seq} batch={batch} backend={args.backend}")
+
+    opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=20,
+                        total_steps=args.steps)
+    step = jax.jit(make_train_step(model, opt_cfg, 1))
+    pipe = TokenPipeline(vocab=vocab, seq_len=seq, global_batch=batch)
+
+    def init_state():
+        params = model.init(jax.random.PRNGKey(0))
+        return {"params": params, "opt_state": init_opt_state(params,
+                                                              opt_cfg)}
+
+    res = run_training(
+        init_state=init_state, train_step=step, batch_at=pipe.batch_at,
+        cfg=FtConfig(ckpt_dir=args.ckpt_dir, total_steps=args.steps,
+                     ckpt_every=max(args.steps // 4, 10), log_every=10))
+    h = res["history"]
+    if not h:
+        print("[train_lm] nothing to do (checkpoint already at "
+              f"{res['step']} steps; use a fresh --ckpt-dir)")
+        return
+    print(f"[train_lm] loss: start {h[0]:.3f} -> "
+          f"min {min(h):.3f} -> final {h[-1]:.3f}")
+    assert min(h) < h[0], "loss did not fall"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — SD-RNS (Signed-Digit Redundant Residue Number System) framework.
+
+A production-grade JAX training/inference stack whose arithmetic backend
+implements Mousavi et al., "Enhancing Efficiency in Computational Intensive
+Domains via Redundant Residue Number Systems" (2024), adapted to TPU.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    ShapeConfig,
+    SHAPES,
+    ARCH_IDS,
+    get_config,
+    cells_for,
+    all_cells,
+)

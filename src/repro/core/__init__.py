@@ -1,0 +1,26 @@
+"""Core SD-RNS arithmetic: the paper's contribution as a composable library."""
+from repro.core.moduli import (
+    CRT40,
+    P16,
+    P21,
+    P24,
+    P33,
+    P64,
+    ModuliSet,
+    special_set,
+)
+from repro.core.rns import RnsTensor
+from repro.core.sdrns import SdRnsNumber
+
+__all__ = [
+    "ModuliSet",
+    "RnsTensor",
+    "SdRnsNumber",
+    "special_set",
+    "P16",
+    "P21",
+    "P24",
+    "P33",
+    "P64",
+    "CRT40",
+]

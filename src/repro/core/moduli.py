@@ -1,0 +1,399 @@
+"""Moduli sets and residue conversions for (redundant) residue number systems.
+
+The paper's working set is ``{2^n - 1, 2^n, 2^n + 1}`` (pairwise coprime for any
+n >= 1).  This module provides:
+
+* :class:`ModuliSet` — arbitrary pairwise-coprime moduli with exact host-side
+  conversions (Python ints, any width — covers the paper's P=64 / n=21 row) and
+  int32-safe jitted conversions for the TPU path.
+* Fast *special-modulus* forward conversion (chunk folding for ``2^n - 1``,
+  masking for ``2^n``, alternating chunk folding for ``2^n + 1``) — the JAX
+  analogue of the paper's "wiring-only" conversions.
+* Mixed-radix (MRC) reverse conversion — chosen over CRT because CRT's
+  ``r_i * (M/m_i) * inv`` terms overflow int32 for n >= 8, while every MRC
+  intermediate stays below ``max(m)^2`` and the final Horner reconstruction is
+  exact in int32 under the application bound ``|X| < 2**30``.
+
+Residues are stored **centered**: ``r in [-floor(m/2), floor(m/2)]``.  This
+halves product magnitude (key to fitting int8 MXU channels) and makes signed
+reconstruction exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ModuliSet",
+    "special_set",
+    "mod_pow2_minus1",
+    "mod_pow2",
+    "mod_pow2_plus1",
+    "P16",
+    "P21",
+    "P24",
+    "P33",
+    "P64",
+    "CRT40",
+]
+
+
+def _egcd(a: int, b: int) -> tuple[int, int, int]:
+    if a == 0:
+        return b, 0, 1
+    g, x, y = _egcd(b % a, a)
+    return g, y - (b // a) * x, x
+
+
+def modinv(a: int, m: int) -> int:
+    """Modular inverse of ``a`` mod ``m`` (host-side, exact)."""
+    g, x, _ = _egcd(a % m, m)
+    if g != 1:
+        raise ValueError(f"{a} is not invertible mod {m}")
+    return x % m
+
+
+# ---------------------------------------------------------------------------
+# Special-modulus fast reductions (jit path).  Inputs are int32 tensors whose
+# *mathematical* value may be any int32; outputs are canonical residues in
+# [0, m).  These are the paper's Eq.-2-style "free" conversions: shifts, masks
+# and a couple of adds.
+# ---------------------------------------------------------------------------
+
+
+def mod_pow2(x: jax.Array, n: int) -> jax.Array:
+    """``x mod 2**n`` for int32 ``x`` (works for negative x: two's complement)."""
+    return jnp.bitwise_and(x, (1 << n) - 1)
+
+
+def mod_pow2_minus1(x: jax.Array, n: int) -> jax.Array:
+    """``x mod (2**n - 1)`` via end-around chunk folding.
+
+    Folds 32-bit (or narrower) values into n-bit chunks summed with end-around
+    carry; two folds plus one conditional subtract suffice for int32 inputs
+    because each fold shrinks the value to < 2**(n+6) for n >= 5.
+    """
+    m = (1 << n) - 1
+    # Map negatives into the nonneg domain first: x mod m == (x mod 2**32) mod m
+    # would need 64-bit; instead use x mod m = ((x % m) + m) % m semantics via
+    # jnp remainder once the value is small.  For the fold to be valid we work
+    # on the nonnegative part and correct the sign at the end.
+    neg = x < 0
+    ax = jnp.abs(x)
+    y = ax
+    for _ in range(_folds_needed(31, n)):
+        y = (y & m) + (y >> n)
+    y = jnp.where(y >= m, y - m, y)
+    # -a mod m == (m - (a mod m)) mod m
+    y = jnp.where(neg & (y != 0), m - y, jnp.where(neg, 0, y))
+    return y
+
+
+def mod_pow2_plus1(x: jax.Array, n: int) -> jax.Array:
+    """``x mod (2**n + 1)`` via alternating chunk folding (diminished-style)."""
+    m = (1 << n) + 1
+    neg = x < 0
+    ax = jnp.abs(x)
+    mask = (1 << n) - 1
+    y = ax
+    # chunk_i alternates sign: sum (-1)^i chunk_i mod (2^n + 1)
+    for _ in range(_folds_needed(31, n)):
+        y = (y & mask) - (y >> n)
+    # y is now in (-(2**n), 2**n + something small); canonicalize.
+    y = jnp.remainder(y, m)
+    y = jnp.where(neg & (y != 0), m - y, jnp.where(neg, 0, y))
+    return y
+
+
+def _folds_needed(bits: int, n: int) -> int:
+    """Number of fold iterations to bring a ``bits``-bit value under ~2**(n+1)."""
+    k = 0
+    width = bits
+    while width > n + 1:
+        width = max(n + 1, width - n + 1)
+        k += 1
+        if k > 8:  # safety; never hit for n >= 4
+            break
+    return max(k, 1)
+
+
+# ---------------------------------------------------------------------------
+# ModuliSet
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuliSet:
+    """A pairwise-coprime moduli set with conversion machinery.
+
+    Attributes:
+      moduli: tuple of pairwise-coprime ints, ascending not required.
+      kinds:  per-modulus tag: ``("pow2m1", n)``, ``("pow2", n)``,
+              ``("pow2p1", n)`` or ``("generic", 0)`` — drives the fast
+              forward-conversion path.
+    """
+
+    moduli: tuple[int, ...]
+    kinds: tuple[tuple[str, int], ...]
+
+    # ---- constructors -----------------------------------------------------
+    @staticmethod
+    def make(moduli: Sequence[int]) -> "ModuliSet":
+        mods = tuple(int(m) for m in moduli)
+        for i in range(len(mods)):
+            for j in range(i + 1, len(mods)):
+                if math.gcd(mods[i], mods[j]) != 1:
+                    raise ValueError(
+                        f"moduli must be pairwise coprime, got {mods[i]}, {mods[j]}"
+                    )
+        kinds = []
+        for m in mods:
+            nb = m.bit_length()
+            if m == (1 << nb) - 1:
+                kinds.append(("pow2m1", nb))
+            elif m == (1 << (nb - 1)):
+                kinds.append(("pow2", nb - 1))
+            elif m == (1 << (nb - 1)) + 1:
+                kinds.append(("pow2p1", nb - 1))
+            else:
+                kinds.append(("generic", 0))
+        return ModuliSet(mods, tuple(kinds))
+
+    # ---- basic properties --------------------------------------------------
+    @property
+    def num_channels(self) -> int:
+        return len(self.moduli)
+
+    @functools.cached_property
+    def M(self) -> int:
+        """Dynamic range (product of moduli).  Python int — exact at any width."""
+        out = 1
+        for m in self.moduli:
+            out *= m
+        return out
+
+    @property
+    def precision_bits(self) -> int:
+        return self.M.bit_length()
+
+    @functools.cached_property
+    def half_range(self) -> int:
+        """Max |X| representable in the signed (centered) interpretation."""
+        return (self.M - 1) // 2
+
+    @functools.cached_property
+    def _mrc_pair_inv(self) -> np.ndarray:
+        """inv(m_i) mod m_j for i<j, as an int32 matrix (for the stepwise MRC)."""
+        C = self.num_channels
+        out = np.zeros((C, C), dtype=np.int64)
+        for j in range(C):
+            for i in range(j):
+                out[i, j] = modinv(self.moduli[i] % self.moduli[j], self.moduli[j])
+        return out
+
+    # ---- host-side exact conversions (any width) ---------------------------
+    def to_residues_host(self, x) -> np.ndarray:
+        """Exact forward conversion on host.  ``x``: int array-like (Python ints
+        ok).  Returns centered residues, shape ``(C,) + x.shape`` (int64)."""
+        xs = np.asarray(x, dtype=object)
+        C = self.num_channels
+        out = np.empty((C,) + xs.shape, dtype=np.int64)
+        for c, m in enumerate(self.moduli):
+            r = np.vectorize(lambda v, m=m: int(v) % m, otypes=[object])(xs)
+            half = m // 2
+            r = np.vectorize(lambda v, m=m, h=half: v - m if v > h else v,
+                             otypes=[object])(r)
+            out[c] = r.astype(np.int64)
+        return out
+
+    def from_residues_host(self, residues) -> np.ndarray:
+        """Exact MRC reverse conversion on host.  ``residues``: (C, ...) ints.
+        Returns signed values in ``[-M//2, M//2]`` as object array of ints."""
+        res = np.asarray(residues)
+        C = self.num_channels
+        digits = []
+        acc = np.vectorize(lambda v: int(v) % self.moduli[0], otypes=[object])(res[0])
+        digits.append(acc)
+        # standard MRC: d_j = ((r_j - partial) * inv mod m_j)
+        for j in range(1, C):
+            mj = self.moduli[j]
+            part = np.vectorize(lambda *_: 0, otypes=[object])(res[0])
+            prod = 1
+            for i in range(j):
+                part = part + digits[i] * prod
+                prod *= self.moduli[i]
+            inv = modinv(prod % mj, mj)
+            dj = np.vectorize(
+                lambda r, p, mj=mj, inv=inv: ((int(r) - int(p)) * inv) % mj,
+                otypes=[object],
+            )(res[j], part)
+            digits.append(dj)
+        val = np.vectorize(lambda *_: 0, otypes=[object])(res[0])
+        prod = 1
+        for j in range(C):
+            val = val + digits[j] * prod
+            prod *= self.moduli[j]
+        # centered interpretation
+        half = self.M // 2
+        val = np.vectorize(
+            lambda v, M=self.M, h=half: v - M if v > h else v, otypes=[object]
+        )(val)
+        return val
+
+    # ---- jit path: fast forward conversion ---------------------------------
+    def to_residues(self, x: jax.Array, *, centered: bool = True) -> jax.Array:
+        """Forward conversion for int32 tensors.  Output (C, ...) int32.
+
+        Uses the special-modulus folds where the modulus kind allows, else
+        ``jnp.remainder``.  Exact for any int32 input.
+        """
+        x = x.astype(jnp.int32)
+        planes = []
+        for (kind, n), m in zip(self.kinds, self.moduli):
+            if kind == "pow2":
+                # two's-complement masking handles negatives directly
+                r = mod_pow2(x, n)
+            elif kind == "pow2m1":
+                r = mod_pow2_minus1(x, n)
+            elif kind == "pow2p1":
+                r = mod_pow2_plus1(x, n)
+            else:
+                r = jnp.remainder(x, m)
+            if centered:
+                half = m // 2
+                r = jnp.where(r > half, r - m, r)
+            planes.append(r)
+        return jnp.stack(planes, axis=0)
+
+    def center(self, residues: jax.Array) -> jax.Array:
+        """Map canonical residues (C, ...) to centered form."""
+        out = []
+        for c, m in enumerate(self.moduli):
+            r = jnp.remainder(residues[c], m)
+            half = m // 2
+            out.append(jnp.where(r > half, r - m, r))
+        return jnp.stack(out, axis=0)
+
+    def canon(self, residues: jax.Array) -> jax.Array:
+        """Map (possibly redundant / centered) residues to canonical [0, m)."""
+        return jnp.stack(
+            [jnp.remainder(residues[c], m) for c, m in enumerate(self.moduli)],
+            axis=0,
+        )
+
+    @functools.cached_property
+    def _half_mrc_digits(self) -> tuple[int, ...]:
+        """Mixed-radix digits of (M-1)//2 — the sign-test threshold."""
+        h = (self.M - 1) // 2
+        digs = []
+        for m in self.moduli:
+            digs.append(h % m)
+            h //= m
+        return tuple(digs)
+
+    @functools.cached_property
+    def _wrapped_weights(self) -> tuple[int, ...]:
+        """``prod_{k<j} m_k  mod 2**32`` as signed int32 values, plus M mod
+        2**32 appended last (for the negative-value correction)."""
+
+        def wrap(v: int) -> int:
+            v %= 1 << 32
+            return v - (1 << 32) if v >= (1 << 31) else v
+
+        out, prod = [], 1
+        for m in self.moduli:
+            out.append(wrap(prod))
+            prod *= m
+        out.append(wrap(self.M))
+        return tuple(out)
+
+    # ---- jit path: int32-safe MRC reverse conversion -----------------------
+    def from_residues(self, residues: jax.Array) -> jax.Array:
+        """Reverse conversion (C, ...) -> signed int32 values.
+
+        Exact whenever the represented (centered) value fits int32, i.e.
+        ``|X| <= min(half_range, 2**31 - 1)``.  Strategy: stepwise MRC gives
+        digits with all intermediates < max(m)^2 (int32-safe for moduli up to
+        46340 — the paper's n=21 row uses the host path); the sign is decided
+        by an exact lexicographic compare against the mixed-radix digits of
+        (M-1)/2; reconstruction runs in deliberately *wrapping* int32
+        arithmetic mod 2**32 (XLA integer ops wrap), which equals the true
+        value because |X| < 2**31.
+        """
+        if max(self.moduli) > 46340:
+            raise ValueError(
+                "jit reverse conversion needs moduli <= 46340 (use "
+                "from_residues_host for the P=64 set)"
+            )
+        C = self.num_channels
+        res = self.canon(residues).astype(jnp.int32)
+        inv = self._mrc_pair_inv
+        # Stepwise MRC (Szabo-Tanaka): v_j starts at r_j; for each fixed i,
+        #   v_j <- (v_j - d_i) * inv(m_i, m_j) mod m_j   for all j > i.
+        digits = []
+        vs = [res[j] for j in range(C)]
+        for i in range(C):
+            d_i = vs[i]
+            digits.append(d_i)
+            for j in range(i + 1, C):
+                mj = self.moduli[j]
+                t = jnp.remainder(vs[j] - d_i, mj)  # in [0, mj)
+                vs[j] = jnp.remainder(t * jnp.int32(inv[i, j]), mj)
+        # Exact sign: X_canonical > (M-1)/2  <=>  digits >lex threshold digits.
+        half_digs = self._half_mrc_digits
+        gt = jnp.zeros_like(digits[0], dtype=bool)
+        eq = jnp.ones_like(digits[0], dtype=bool)
+        for j in range(C - 1, -1, -1):
+            gt = gt | (eq & (digits[j] > half_digs[j]))
+            eq = eq & (digits[j] == half_digs[j])
+        # Wrapping Horner: X = sum d_j * w_j  - neg * M   (all mod 2**32).
+        w = self._wrapped_weights
+        val = jnp.zeros_like(digits[0])
+        for j in range(C):
+            val = val + digits[j] * jnp.int32(w[j])
+        val = val - jnp.where(gt, jnp.int32(w[C]), jnp.int32(0))
+        return val.astype(jnp.int32)
+
+    # ---- channel-wise modular arithmetic (canonical or centered in, centered
+    #      out); used by RnsTensor and the kernel reference ------------------
+    def channel_mod(self, residues: jax.Array) -> jax.Array:
+        """Reduce each channel mod m_c and re-center (lazy-reduction flush)."""
+        return self.center(residues)
+
+    def add(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return self.center(a + b)
+
+    def sub(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return self.center(a - b)
+
+    def mul(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return self.center(a * b)
+
+    def lazy_add_capacity(self) -> int:
+        """How many centered-residue *products* an int32 can accumulate before a
+        reduction is required (the redundancy budget — TPU analogue of the
+        paper's carry-free window)."""
+        worst = max((m // 2) ** 2 for m in self.moduli)
+        return (1 << 31) // (2 * worst)
+
+
+def special_set(n: int) -> ModuliSet:
+    """The paper's ``{2^n - 1, 2^n, 2^n + 1}`` set."""
+    return ModuliSet.make(((1 << n) - 1, 1 << n, (1 << n) + 1))
+
+
+# The paper's Table-I precision rows (P=16/24/32/64 <-> n=5/8/11/21) plus the
+# TPU-native sweet spot P21 (n=7: every centered residue fits int8 -> MXU) and
+# a 6-channel int8-friendly wide set (~2^42 dynamic range).
+P16 = special_set(5)
+P21 = special_set(7)
+P24 = special_set(8)
+P33 = special_set(11)
+P64 = special_set(21)
+CRT40 = ModuliSet.make((121, 125, 127, 128, 129, 131))

@@ -1,0 +1,130 @@
+"""RnsTensor — a tensor of integers represented in residue channels.
+
+This is the framework-level carrier of the paper's RNS representation: a pytree
+holding ``(C, ...)`` stacked residue planes plus (static) moduli metadata, with
+arithmetic that mirrors integer arithmetic mod M.  It is jit/vmap/scan-friendly
+(the moduli ride along as aux data) and is what the quantized model layers and
+the Pallas kernels exchange.
+
+Redundancy contract: residue planes may be *non-canonical* (outside
+``[-m/2, m/2]``) between operations — the TPU analogue of the paper's
+signed-digit redundancy.  ``flush()`` re-centers.  Every op documents how much
+redundancy headroom it consumes; ``ModuliSet.lazy_add_capacity`` gives the
+budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moduli import ModuliSet
+
+__all__ = ["RnsTensor"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RnsTensor:
+    residues: jax.Array  # (C, ...) int32 (int8 storage allowed for small sets)
+    mset: ModuliSet      # static aux data
+
+    # -- pytree protocol ------------------------------------------------------
+    def tree_flatten(self):
+        return (self.residues,), self.mset
+
+    @classmethod
+    def tree_unflatten(cls, mset, children):
+        return cls(children[0], mset)
+
+    # -- constructors ----------------------------------------------------------
+    @classmethod
+    def from_int(cls, x: jax.Array, mset: ModuliSet) -> "RnsTensor":
+        return cls(mset.to_residues(x, centered=True), mset)
+
+    # -- views ------------------------------------------------------------------
+    @property
+    def shape(self):
+        return self.residues.shape[1:]
+
+    @property
+    def dtype(self):
+        return self.residues.dtype
+
+    def to_int(self) -> jax.Array:
+        """Reverse conversion.  Exact when the represented |value| < 2**30 and
+        < M/2 (the framework's quantizers enforce this via K-segmentation)."""
+        return self.mset.from_residues(self.residues)
+
+    def flush(self) -> "RnsTensor":
+        """Reduce all channels to centered canonical form (spends no headroom)."""
+        return RnsTensor(self.mset.center(self.residues), self.mset)
+
+    # -- arithmetic (exact mod M) -----------------------------------------------
+    def __add__(self, other: "RnsTensor") -> "RnsTensor":
+        assert self.mset.moduli == other.mset.moduli
+        return RnsTensor(
+            self.mset.center(self.residues + other.residues), self.mset
+        )
+
+    def __sub__(self, other: "RnsTensor") -> "RnsTensor":
+        assert self.mset.moduli == other.mset.moduli
+        return RnsTensor(
+            self.mset.center(self.residues - other.residues), self.mset
+        )
+
+    def __mul__(self, other: "RnsTensor") -> "RnsTensor":
+        assert self.mset.moduli == other.mset.moduli
+        return RnsTensor(
+            self.mset.center(self.residues * other.residues), self.mset
+        )
+
+    def __neg__(self) -> "RnsTensor":
+        return RnsTensor(-self.residues, self.mset)
+
+    # Lazy variants: skip the re-centering; caller owns the headroom budget.
+    def lazy_add(self, other: "RnsTensor") -> "RnsTensor":
+        return RnsTensor(self.residues + other.residues, self.mset)
+
+    def lazy_mul(self, other: "RnsTensor") -> "RnsTensor":
+        return RnsTensor(self.residues * other.residues, self.mset)
+
+    def scale(self, k: int) -> "RnsTensor":
+        """Multiply by an integer scalar (converted per-channel)."""
+        planes = jnp.stack(
+            [
+                jnp.remainder(
+                    self.residues[c] * jnp.int32(k % m), jnp.int32(m)
+                )
+                for c, m in enumerate(self.mset.moduli)
+            ]
+        )
+        return RnsTensor(self.mset.center(planes), self.mset)
+
+    # -- linalg -------------------------------------------------------------------
+    def matmul(self, other: "RnsTensor") -> "RnsTensor":
+        """Channel-wise modular matmul (reference path; the Pallas kernel in
+        ``repro.kernels`` is the production path).  Lazy reduction: a single
+        mod at the end, valid while K <= lazy_add_capacity()."""
+        assert self.mset.moduli == other.mset.moduli
+        K = self.residues.shape[-1]
+        cap = self.mset.lazy_add_capacity()
+        if K > cap:
+            raise ValueError(
+                f"K={K} exceeds lazy capacity {cap}; segment the contraction"
+            )
+        acc = jnp.einsum(
+            "c...ik,c...kj->c...ij",
+            self.residues.astype(jnp.int32),
+            other.residues.astype(jnp.int32),
+        )
+        return RnsTensor(self.mset.center(acc), self.mset)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"RnsTensor(shape={self.shape}, moduli={self.mset.moduli})"
+
+
+def _hash_mset(m: ModuliSet) -> int:  # ensures jit cache keys are stable
+    return hash(m.moduli)

@@ -1,0 +1,228 @@
+"""SD-RNS: signed-digit arithmetic inside residue channels (the paper's core).
+
+Residues for the moduli ``{2^n - 1, 2^n, 2^n + 1}`` are held as n-digit SD
+vectors.  Addition is carry-free with an **end-around transfer** (the single
+wrap the paper notes an SD-RNS adder needs): the transfer emitted by the top
+position re-enters position 0 — identically for ``2^n - 1`` (since
+``2^n ≡ 1``), negated for ``2^n + 1`` (``2^n ≡ -1``), dropped for ``2^n``.
+The lookahead vector is rotated the same way, which preserves the
+{-1,0,1}-closure argument of :mod:`repro.core.sd`, so the modular adder keeps
+the same constant depth as the plain SD adder — exactly Table I's observation
+(SD module adder delay == SD adder delay == 0.21 ns at every width).
+
+Multiplication follows the paper's Eq. 2: a partial product ``x * y_i * 2^i``
+is a *rotation* of x's digit vector (cyclic for ``2^n-1``, shift-with-zero-fill
+for ``2^n``, negate-on-wrap for ``2^n+1``) — wiring only — and the PPs are
+summed with a carry-free modular adder tree of depth ceil(log2 n).
+
+Note on fidelity: the paper's hardware uses radix-4 Booth recoding to halve
+the PP count; that changes the *synthesized delay* (we take those numbers from
+Table I in ``cost_model``) but not the arithmetic, so this digit-level model
+uses radix-2 PPs for clarity.  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sd
+from repro.core.moduli import ModuliSet
+
+Kind = Literal["pow2m1", "pow2", "pow2p1"]
+
+__all__ = [
+    "encode_residue",
+    "decode_residue",
+    "modular_add",
+    "rotate_pp",
+    "modular_mul",
+    "SdRnsNumber",
+    "sdrns_add",
+    "sdrns_mul",
+    "sdrns_encode",
+    "sdrns_decode",
+]
+
+
+# ---------------------------------------------------------------------------
+# Per-channel encode/decode.  A centered residue r (|r| <= m/2 <= 2^n) fits in
+# n SD digits for the 2^n-1 and 2^n channels; the 2^n+1 channel's extreme
+# +-2^(n-1) also fits.  decode re-centers mod m.
+# ---------------------------------------------------------------------------
+
+
+def encode_residue(r: jax.Array, n: int) -> jax.Array:
+    return sd.from_int(r, n)
+
+
+def decode_residue(digits: jax.Array, kind: Kind, n: int) -> jax.Array:
+    """Digits -> centered residue value.  The SD value may be any representative
+    in [-(2^n - 1), 2^n - 1]; reduce mod m and center."""
+    v = sd.to_int(digits)
+    if kind == "pow2m1":
+        m = (1 << n) - 1
+    elif kind == "pow2":
+        m = 1 << n
+    else:
+        m = (1 << n) + 1
+    r = jnp.remainder(v, m)
+    half = m // 2
+    return jnp.where(r > half, r - m, r)
+
+
+# ---------------------------------------------------------------------------
+# Carry-free modular addition with end-around transfer.
+# ---------------------------------------------------------------------------
+
+
+def _wrap_sign(kind: Kind) -> int:
+    return {"pow2m1": 1, "pow2": 0, "pow2p1": -1}[kind]
+
+
+def modular_add(x: jax.Array, y: jax.Array, kind: Kind) -> jax.Array:
+    """Carry-free SD addition mod 2^n±1 / 2^n.  x, y, out: (..., n) digits.
+
+    Single combined pass: position sums -> (w, t) with *rotated* lookahead ->
+    s = w + rotated t.  Constant depth, no iteration, no carry chain.
+    """
+    ws = _wrap_sign(kind)
+    p = x.astype(jnp.int8) + y.astype(jnp.int8)
+    # lookahead: prev_i = p_{i-1}; position 0 sees the wrapped top position
+    # (sign-adjusted) so the closure argument still holds end-around.
+    prev = jnp.roll(p, 1, axis=-1)
+    prev = prev.at[..., 0].set(ws * prev[..., 0])
+    w, t = sd.add_interim(p, prev)
+    t_in = jnp.roll(t, 1, axis=-1)
+    t_in = t_in.at[..., 0].set(ws * t_in[..., 0])
+    return sd.combine(w, t_in)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 rotations: <2^a * y> mod m as digit-vector wiring.
+# ---------------------------------------------------------------------------
+
+
+def rotate_pp(digits: jax.Array, a: int, kind: Kind) -> jax.Array:
+    """Compute digits of ``2^a * value`` mod the channel modulus (Eq. 2).
+
+    pow2m1: [y_{p-1-a} .. y_0 | y_{p-1} .. y_{p-a}]  — cyclic rotation.
+    pow2:   [y_{p-1-a} .. y_0 | 0 .. 0]              — shift, zero fill.
+    pow2p1: [y_{p-1-a} .. y_0 | -y_{p-1} .. -y_{p-a}] — negate on wrap.
+    (LSB-first storage: 'left rotation by a' == jnp.roll(+a).)
+    """
+    n = digits.shape[-1]
+    a = a % (2 * n) if kind == "pow2p1" else a % n if kind == "pow2m1" else a
+    if kind == "pow2m1":
+        return jnp.roll(digits, a, axis=-1)
+    if kind == "pow2":
+        if a >= n:
+            return jnp.zeros_like(digits)
+        rolled = jnp.roll(digits, a, axis=-1)
+        mask = (jnp.arange(n) >= a).astype(digits.dtype)
+        return rolled * mask
+    # pow2p1: 2^n == -1, so rotating past the top negates the wrapped digits.
+    # A rotation by a (< n) wraps the top a digits negated; a in [n, 2n) is a
+    # full negation plus rotation by a-n.
+    neg_all = a >= n
+    a = a - n if a >= n else a
+    rolled = jnp.roll(digits, a, axis=-1)
+    wrapped = (jnp.arange(n) < a)
+    out = jnp.where(wrapped, -rolled, rolled)
+    if neg_all:
+        out = -out
+    return out.astype(jnp.int8)
+
+
+def modular_mul(x: jax.Array, y: jax.Array, kind: Kind) -> jax.Array:
+    """SD modular multiply: PPs by Eq. 2 rotations, carry-free adder tree.
+
+    x, y: (..., n) digit tensors -> (..., n) digit product mod m.
+    Depth: 1 (PP select) + ceil(log2 n) carry-free adds — no carry chains.
+    """
+    n = x.shape[-1]
+    pps = []
+    for i in range(n):
+        rot = rotate_pp(x, i, kind)               # digits of x * 2^i mod m
+        yi = y[..., i : i + 1].astype(jnp.int8)   # in {-1, 0, 1}
+        pps.append(rot * yi)                      # +-rot or 0 (mux, not mult)
+    pp = jnp.stack(pps, axis=-2)                  # (..., n, n)
+    # modular adder tree (end-around at every level -> width never grows)
+    while pp.shape[-2] > 1:
+        k = pp.shape[-2]
+        if k % 2 == 1:
+            pad = [(0, 0)] * (pp.ndim - 2) + [(0, 1), (0, 0)]
+            pp = jnp.pad(pp, pad)
+            k += 1
+        pp = modular_add(pp[..., 0::2, :], pp[..., 1::2, :], kind)
+    return pp[..., 0, :]
+
+
+# ---------------------------------------------------------------------------
+# Whole-number SD-RNS interface over a {2^n-1, 2^n, 2^n+1} set.
+# ---------------------------------------------------------------------------
+
+
+class SdRnsNumber:
+    """A tensor of integers as SD-digit residue channels: (C, ..., n) digits."""
+
+    def __init__(self, digits: jax.Array, mset: ModuliSet):
+        if any(kind == "generic" for kind, _ in mset.kinds):
+            raise ValueError("SD-RNS digit form needs 2^n±1 / 2^n moduli")
+        self.digits = digits
+        self.mset = mset
+
+    @classmethod
+    def from_int(cls, x: jax.Array, mset: ModuliSet) -> "SdRnsNumber":
+        return cls(sdrns_encode(x, mset), mset)
+
+    def to_int(self) -> jax.Array:
+        return sdrns_decode(self.digits, self.mset)
+
+    def __add__(self, other: "SdRnsNumber") -> "SdRnsNumber":
+        return SdRnsNumber(sdrns_add(self.digits, other.digits, self.mset), self.mset)
+
+    def __mul__(self, other: "SdRnsNumber") -> "SdRnsNumber":
+        return SdRnsNumber(sdrns_mul(self.digits, other.digits, self.mset), self.mset)
+
+    def __neg__(self) -> "SdRnsNumber":
+        return SdRnsNumber(sd.negate(self.digits), self.mset)
+
+
+def _digit_width(mset: ModuliSet) -> int:
+    return max(n for _, n in mset.kinds)
+
+
+def sdrns_encode(x: jax.Array, mset: ModuliSet) -> jax.Array:
+    n = _digit_width(mset)
+    residues = mset.to_residues(x, centered=True)  # (C, ...)
+    return jnp.stack(
+        [encode_residue(residues[c], n) for c in range(mset.num_channels)]
+    )
+
+
+def sdrns_decode(digits: jax.Array, mset: ModuliSet) -> jax.Array:
+    planes = [
+        decode_residue(digits[c], kind, n)
+        for c, (kind, n) in enumerate(mset.kinds)
+    ]
+    return mset.from_residues(jnp.stack(planes))
+
+
+def sdrns_add(xd: jax.Array, yd: jax.Array, mset: ModuliSet) -> jax.Array:
+    return jnp.stack(
+        [
+            modular_add(xd[c], yd[c], kind)
+            for c, (kind, _) in enumerate(mset.kinds)
+        ]
+    )
+
+
+def sdrns_mul(xd: jax.Array, yd: jax.Array, mset: ModuliSet) -> jax.Array:
+    return jnp.stack(
+        [
+            modular_mul(xd[c], yd[c], kind)
+            for c, (kind, _) in enumerate(mset.kinds)
+        ]
+    )

@@ -1,0 +1,190 @@
+"""Synthetic CIFAR-10-like data + the paper's DNN evaluation networks.
+
+The paper evaluates SD-RNS on AlexNet and VGG-16 over CIFAR-10.  Offline we
+cannot download CIFAR-10, so this module provides:
+
+* a deterministic synthetic 10-class 32x32x3 dataset whose classes are
+  linearly-separable-ish Gaussian blobs over fixed per-class templates —
+  enough signal for the CNN examples to train to high accuracy on CPU;
+* CIFAR-scale **AlexNet** (the classic 5-conv/3-fc shape adapted to 32x32)
+  and **VGG-16** definitions built on an im2col conv that routes every
+  matmul through ``models.linear.dense`` — i.e. the whole CNN can run under
+  ``backend="rns"`` (the paper's SD-RNS arithmetic) or ``backend="bns"``;
+* exact per-layer (adds, muls) op counts for both networks at full CIFAR
+  scale — the (x, y) mixes that ``benchmarks/dnn_speedup.py`` feeds into the
+  Eq. 3 delay model to reproduce the paper's 1.27x / 2.25x speedups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import linear
+
+__all__ = ["synthetic_cifar", "init_cnn", "cnn_forward", "ALEXNET", "VGG16",
+           "CnnSpec", "op_counts"]
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset
+# ---------------------------------------------------------------------------
+
+
+def synthetic_cifar(n: int, *, seed: int = 0,
+                    split: str = "train") -> tuple[np.ndarray, np.ndarray]:
+    """(images (n, 32, 32, 3) f32 in [0,1], labels (n,) int32)."""
+    rng = np.random.default_rng(seed + (10_007 if split == "test" else 0))
+    tmpl_rng = np.random.default_rng(1234)           # shared class templates
+    templates = tmpl_rng.random((10, 32, 32, 3)).astype(np.float32)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    noise = rng.normal(0, 0.25, size=(n, 32, 32, 3)).astype(np.float32)
+    images = np.clip(templates[labels] + noise, 0.0, 1.0)
+    return images, labels
+
+
+# ---------------------------------------------------------------------------
+# CNN spec + op counting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnSpec:
+    """layers: ("conv", c_out, k, stride) | ("pool", k) | ("fc", d_out)."""
+
+    name: str
+    layers: tuple[tuple, ...]
+    input_hw: int = 32
+    input_c: int = 3
+    n_classes: int = 10
+
+
+# Classic AlexNet shape adapted to 32x32 CIFAR inputs.
+ALEXNET = CnnSpec("alexnet", (
+    ("conv", 64, 3, 1), ("pool", 2),
+    ("conv", 192, 3, 1), ("pool", 2),
+    ("conv", 384, 3, 1),
+    ("conv", 256, 3, 1),
+    ("conv", 256, 3, 1), ("pool", 2),
+    ("fc", 1024), ("fc", 1024), ("fc", 10),
+))
+
+VGG16 = CnnSpec("vgg16", (
+    ("conv", 64, 3, 1), ("conv", 64, 3, 1), ("pool", 2),
+    ("conv", 128, 3, 1), ("conv", 128, 3, 1), ("pool", 2),
+    ("conv", 256, 3, 1), ("conv", 256, 3, 1), ("conv", 256, 3, 1),
+    ("pool", 2),
+    ("conv", 512, 3, 1), ("conv", 512, 3, 1), ("conv", 512, 3, 1),
+    ("pool", 2),
+    ("conv", 512, 3, 1), ("conv", 512, 3, 1), ("conv", 512, 3, 1),
+    ("pool", 2),
+    ("fc", 4096), ("fc", 4096), ("fc", 10),
+))
+
+
+def op_counts(spec: CnnSpec) -> dict[str, int]:
+    """Exact MAC-level (adds, muls) for one inference of the network.
+
+    Each output element of a conv with fan-in F = k*k*c_in costs F muls and
+    F-1 adds (+1 add for bias); fc likewise.  Pooling costs k*k-1 adds per
+    output (max treated as compare-adds, the paper's 'addition-class' ops).
+    """
+    adds = muls = 0
+    hw, c = spec.input_hw, spec.input_c
+    for layer in spec.layers:
+        if layer[0] == "conv":
+            _, c_out, k, stride = layer
+            out_hw = hw // stride
+            fan_in = k * k * c
+            n_out = out_hw * out_hw * c_out
+            muls += n_out * fan_in
+            adds += n_out * fan_in          # (F-1) accum + 1 bias
+            hw, c = out_hw, c_out
+        elif layer[0] == "pool":
+            k = layer[1]
+            out_hw = hw // k
+            adds += out_hw * out_hw * c * (k * k - 1)
+            hw = out_hw
+        else:  # fc
+            d_out = layer[1]
+            d_in = hw * hw * c if hw else c
+            muls += d_in * d_out
+            adds += d_in * d_out
+            hw, c = 0, d_out
+    return {"adds": adds, "muls": muls}
+
+
+# ---------------------------------------------------------------------------
+# Runnable CNN (im2col conv over models.linear.dense -> RNS-able)
+# ---------------------------------------------------------------------------
+
+
+def _im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """(B, H, W, C) -> (B, Ho, Wo, k*k*C) patches (SAME-ish valid padding)."""
+    B, H, W, C = x.shape
+    pad = (k - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    Ho, Wo = H // stride, W // stride
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(jax.lax.slice(
+                xp, (0, di, dj, 0),
+                (B, di + H, dj + W, C), (1, stride, stride, 1)))
+    return jnp.concatenate(cols, axis=-1)[:, :Ho, :Wo, :]
+
+
+def init_cnn(key: jax.Array, spec: CnnSpec) -> dict[str, Any]:
+    params: dict[str, Any] = {}
+    hw, c = spec.input_hw, spec.input_c
+    keys = jax.random.split(key, len(spec.layers))
+    for i, layer in enumerate(spec.layers):
+        if layer[0] == "conv":
+            _, c_out, k, stride = layer
+            params[f"l{i}"] = {
+                **linear.init_dense(keys[i], k * k * c, c_out),
+                "b": jnp.zeros((c_out,), jnp.float32),
+            }
+            hw, c = hw // stride, c_out
+        elif layer[0] == "pool":
+            hw //= layer[1]
+        else:
+            d_out = layer[1]
+            d_in = hw * hw * c if hw else c
+            params[f"l{i}"] = {
+                **linear.init_dense(keys[i], d_in, d_out),
+                "b": jnp.zeros((d_out,), jnp.float32),
+            }
+            hw, c = 0, d_out
+    return params
+
+
+def cnn_forward(params: dict[str, Any], spec: CnnSpec, images: jax.Array,
+                *, dense_kw: dict[str, Any] | None = None) -> jax.Array:
+    """images (B, 32, 32, 3) f32 -> logits (B, n_classes) f32."""
+    dense_kw = dense_kw or {"backend": "bns", "compute_dtype": jnp.float32}
+    x = images
+    for i, layer in enumerate(spec.layers):
+        if layer[0] == "conv":
+            _, c_out, k, stride = layer
+            patches = _im2col(x, k, stride)
+            B, Ho, Wo, F = patches.shape
+            y = linear.dense(params[f"l{i}"], patches.reshape(B * Ho * Wo, F),
+                             **dense_kw)
+            y = y.reshape(B, Ho, Wo, c_out) + params[f"l{i}"]["b"]
+            x = jax.nn.relu(y)
+        elif layer[0] == "pool":
+            k = layer[1]
+            B, H, W, C = x.shape
+            x = x.reshape(B, H // k, k, W // k, k, C).max(axis=(2, 4))
+        else:
+            B = x.shape[0]
+            x = x.reshape(B, -1)
+            y = linear.dense(params[f"l{i}"], x, **dense_kw)
+            y = y + params[f"l{i}"]["b"]
+            is_last = i == len(spec.layers) - 1
+            x = y if is_last else jax.nn.relu(y)
+    return x.astype(jnp.float32)

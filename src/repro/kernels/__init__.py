@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+rns_matmul — C-channel modular matmul, lazy (redundant) reduction, MXU tiling.
+sd_add     — digit-parallel carry-free SD-RNS addition (VPU).
+
+``ops`` holds the public jit'd wrappers, ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels.ops import rns_matmul, sd_add
+
+__all__ = ["rns_matmul", "sd_add"]

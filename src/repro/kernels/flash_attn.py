@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: flash attention (online-softmax, tiled).
+
+Beyond-paper optimization for the serving/training attention hot-spot: the
+baseline attention materializes (B, H, Sq, Skv) f32 scores in HBM (measured
+at ~10% of granite-20b's training traffic and the whole of the long-context
+prefill wall); this kernel keeps every score tile in VMEM and carries the
+online-softmax statistics (running max m, normalizer l, weighted
+accumulator) in f32 scratch — HBM traffic drops to Q/K/V/O only.
+
+Tiling: grid ``(B*H, Sq/bq, Skv/bk)`` with the KV axis innermost/sequential
+("arbitrary") so the scratch carry is valid; blocks are MXU-aligned
+(multiples of 128 on the Sq/Skv dims; head_dim rides whole).  VMEM per step:
+``bq*hd + bk*hd`` (operand tiles, bf16) + ``bq*(hd+2)`` f32 scratch — the
+default (256, 512) tiles use well under 1 MiB, leaving VMEM for
+double-buffered pipelining.
+
+Exactness: this is *exact* attention (same math as the reference, different
+summation order); tests sweep shapes/causal masks against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas", "DEFAULT_BLOCKS"]
+
+DEFAULT_BLOCKS = (256, 512)   # (bq, bk)
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *,
+            n_k: int, causal: bool, scale: float, bq: int, bk: int,
+            kv_len: int):
+    """One (bh, qi, ki) grid step.
+
+    q_ref: (1, bq, hd);  k_ref/v_ref: (1, bk, hd);  o_ref: (1, bq, hd).
+    acc: (bq, hd) f32 scratch;  m, l: (bq, 1) f32 scratch.
+    """
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m[...] = jnp.full_like(m, _NEG_INF)
+        l[...] = jnp.zeros_like(l)
+        acc[...] = jnp.zeros_like(acc)
+
+    qb = q_ref[0]                                    # (bq, hd)
+    kb = k_ref[0]                                    # (bk, hd)
+    s = jax.lax.dot_general(
+        qb, kb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_len                            # padded KV tail
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m[...]                                  # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+    p = jnp.exp(s - m_new)                           # (bq, bk)
+    l[...] = l[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (bq, hd)
+    acc[...] = acc[...] * alpha + pv
+    m[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        o_ref[0] = (acc[...] / jnp.maximum(l[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "kv_len", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    kv_len: int | None = None,
+    bq: int = DEFAULT_BLOCKS[0],
+    bk: int = DEFAULT_BLOCKS[1],
+    interpret: bool = False,
+) -> jax.Array:
+    """Exact attention without materialized scores.
+
+    Args:
+      q: (BH, Sq, hd);  k, v: (BH, Skv, hd) — heads pre-merged into the
+        batch dim (ops.py reshapes / pads).  Sq % bq == 0, Skv % bk == 0.
+      kv_len: number of *valid* KV positions (<= Skv; rest is padding).
+    Returns:
+      (BH, Sq, hd) in q's dtype.
+    """
+    BH, Sq, hd = q.shape
+    _, Skv, _ = k.shape
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
+    n_k = Skv // bk
+    scale = 1.0 / (hd ** 0.5)
+    kv_len = Skv if kv_len is None else kv_len
+
+    grid = (BH, Sq // bq, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, causal=causal, scale=scale,
+                          bq=bq, bk=bk, kv_len=kv_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,139 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``rns_matmul`` is the production entry point used by ``models/linear.py``:
+integer operands in, exact int32 matmul out, with
+
+* forward conversion to centered residues (int8 when all moduli allow),
+* shape padding to MXU-aligned blocks,
+* automatic K-segmentation when the exact result could exceed the moduli
+  set's half dynamic range (each segment is exact; segments sum in int32),
+* reverse (MRC) conversion.
+
+On CPU (tests / this container) pass ``interpret=True`` to execute the kernel
+body in the Pallas interpreter; on TPU the same code JITs to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moduli import P21, ModuliSet
+from repro.kernels.rns_matmul import rns_matmul_pallas
+from repro.kernels.sd_add import sd_add_pallas
+
+__all__ = ["rns_matmul", "sd_add", "segment_count"]
+
+
+def _round_up(v: int, k: int) -> int:
+    return (v + k - 1) // k * k
+
+
+def segment_count(K: int, max_abs_a: int, max_abs_b: int,
+                  mset: ModuliSet) -> int:
+    """Segments needed so each exact partial result fits (-M/2, M/2)."""
+    if max_abs_a == 0 or max_abs_b == 0:
+        return 1
+    per_term = max_abs_a * max_abs_b
+    cap = mset.half_range // per_term
+    if cap < 1:
+        raise ValueError(
+            f"operand bound {per_term} exceeds dynamic range of {mset.moduli}"
+        )
+    segs = (K + cap - 1) // cap
+    return max(segs, 1)
+
+
+def _choose_blocks(M: int, N: int, K: int) -> tuple[int, int, int]:
+    """MXU-aligned tiles that do not over-pad small problems."""
+    bm = 128 if M >= 128 else _round_up(M, 8)
+    bn = 128 if N >= 128 else _round_up(N, 128)  # lane dim: keep 128
+    bk = 512 if K >= 512 else _round_up(K, 128)
+    return bm, max(bn, 128), max(bk, 128)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mset", "max_abs_a", "max_abs_b", "interpret", "use_ref"),
+)
+def rns_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mset: ModuliSet = P21,
+    max_abs_a: int,
+    max_abs_b: int,
+    interpret: bool = False,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Exact integer matmul via RNS channels.
+
+    Args:
+      a: (M, K) integer tensor (int8/int32 values, |a| <= max_abs_a).
+      b: (K, N) integer tensor (|b| <= max_abs_b).
+      mset: moduli set; all |m|//2 must fit int8 for the MXU path.
+      max_abs_a/b: static magnitude bounds (from the quantizer) — drive
+        K-segmentation.
+    Returns:
+      (M, N) int32, exact A @ B.
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+
+    res_dtype = jnp.int8 if max(mset.moduli) <= 257 else jnp.int32
+    a_res = mset.to_residues(a.astype(jnp.int32)).astype(res_dtype)
+    b_res = mset.to_residues(b.astype(jnp.int32)).astype(res_dtype)
+
+    segs = segment_count(K, max_abs_a, max_abs_b, mset)
+    seg_len = _round_up((K + segs - 1) // segs, 128)
+    segs = (K + seg_len - 1) // seg_len
+
+    bm, bn, bk = _choose_blocks(M, N, seg_len)
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    Kp = _round_up(seg_len, bk)
+
+    C = mset.num_channels
+    total = jnp.zeros((M, N), jnp.int32)
+    for s in range(segs):
+        lo = s * seg_len
+        hi = min(lo + seg_len, K)
+        a_s = a_res[:, :, lo:hi]
+        b_s = b_res[:, lo:hi, :]
+        a_p = jnp.zeros((C, Mp, Kp), res_dtype).at[:, :M, : hi - lo].set(a_s)
+        b_p = jnp.zeros((C, Kp, Np), res_dtype).at[:, : hi - lo, :N].set(b_s)
+        if use_ref:
+            from repro.kernels.ref import rns_matmul_ref
+
+            out_res = rns_matmul_ref(a_p, b_p, mset)
+        else:
+            out_res = rns_matmul_pallas(
+                a_p, b_p, jnp.asarray(mset.moduli, jnp.int32),
+                bm=bm, bn=bn, bk=bk, interpret=interpret,
+            )
+        total = total + mset.from_residues(out_res[:, :M, :N])
+    return total
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def sd_add(x: jax.Array, y: jax.Array, *, kind: str,
+           interpret: bool = False) -> jax.Array:
+    """Batched carry-free SD addition via the Pallas kernel.
+
+    x, y: (..., n) int8 digit tensors (LSB first).  Returns same shape
+    ((..., n+1) for kind="plain").
+    """
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    B = int(np.prod(lead)) if lead else 1
+    out_n = n + 1 if kind == "plain" else n
+    nd = _round_up(max(out_n, 128), 128)
+    bb = 256 if B >= 256 else _round_up(B, 8)
+    Bp = _round_up(B, bb)
+
+    xp = jnp.zeros((Bp, nd), jnp.int8).at[:B, :n].set(x.reshape(B, n))
+    yp = jnp.zeros((Bp, nd), jnp.int8).at[:B, :n].set(y.reshape(B, n))
+    out = sd_add_pallas(xp, yp, kind=kind, n=n, bb=bb, interpret=interpret)
+    return out[:B, :out_n].reshape(*lead, out_n)

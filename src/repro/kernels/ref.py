@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for tests/benches)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sdrns
+from repro.core.moduli import ModuliSet
+
+__all__ = ["rns_matmul_ref", "int_matmul_ref", "sd_add_ref",
+           "flash_attention_ref"]
+
+
+def rns_matmul_ref(a_res: jax.Array, b_res: jax.Array,
+                   mset: ModuliSet) -> jax.Array:
+    """(C, M, K) x (C, K, N) -> (C, M, N) centered residues of A@B mod m_c.
+
+    Same lazy-reduction semantics as the kernel: one int32 accumulation, one
+    centered reduction at the end.
+    """
+    acc = jnp.einsum(
+        "cmk,ckn->cmn",
+        a_res.astype(jnp.int32),
+        b_res.astype(jnp.int32),
+    )
+    return mset.center(acc)
+
+
+def int_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """The end-to-end oracle: exact integer matmul in int32."""
+    return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def sd_add_ref(x: jax.Array, y: jax.Array, kind: str) -> jax.Array:
+    """Oracle for the carry-free modular adder (core.sdrns implementation).
+
+    x, y: (..., n) live digits (no pad lanes).
+    """
+    if kind == "plain":
+        from repro.core import sd
+
+        return sd.carry_free_add(x, y)
+    return sdrns.modular_add(x, y, kind)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        kv_len: int | None = None) -> jax.Array:
+    """Oracle for the flash-attention kernel: materialized-score softmax.
+
+    q: (BH, Sq, hd); k, v: (BH, Skv, hd).
+    """
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    kv_len = Skv if kv_len is None else kv_len
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    kpos = jnp.arange(Skv)
+    mask = (kpos < kv_len)[None, None, :]
+    if causal:
+        qpos = jnp.arange(Sq)
+        mask = mask & (kpos[None, None, :] <= qpos[None, :, None])
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(
+        q.dtype)

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import, and everything else (tests, benches) sees the single real device.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis carries
+cross-pod data parallelism (or pipeline stages — parallel/pipeline.py).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.parallel.sharding import ShardCtx
+
+__all__ = ["make_production_mesh", "make_ctx", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(jax.devices())} — "
+            "run under launch/dryrun.py (forces 512 host devices) or on a "
+            "real pod slice")
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def make_ctx(mesh: Mesh, *, seq_shard: bool = False) -> ShardCtx:
+    """ShardCtx with dp = every non-"model" axis (pod folds into dp)."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return ShardCtx(mesh, dp=dp, tp=("model",), seq_shard=seq_shard)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for CPU tests (requires forced host devices)."""
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)

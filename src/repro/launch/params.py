@@ -1,0 +1,96 @@
+"""Analytic parameter / FLOP accounting per architecture (for roofline's
+MODEL_FLOPS and the useful-compute ratio).
+
+Conventions (stated in EXPERIMENTS.md): MODEL_FLOPS counts matmul work only —
+2·N_active per processed token forward, 6·N_active training (fwd + bwd) —
+with N_active = parameters that participate in matmuls for one token
+(MoE: top_k of E experts; hybrid: the weight-tied shared block counts once
+per *application*; embedding gather: zero flops; tied unembed: counted once).
+Attention score/value flops are excluded (the classic 6ND convention), so
+``useful_ratio`` < 1 even for a perfect schedule; its *changes* across
+iterations are what matter (remat and redundant compute push it down).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+__all__ = ["param_counts", "active_param_count", "model_flops_total"]
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    d, hd = cfg.d_model, cfg.hd
+    return (d * cfg.n_heads * hd        # wq
+            + 2 * d * cfg.n_kv * hd     # wk, wv
+            + cfg.n_heads * hd * d)     # wo
+
+
+def _mlp_params(cfg: ArchConfig, d_ff: int | None = None) -> int:
+    ff = cfg.d_ff if d_ff is None else d_ff
+    mult = 2 if cfg.mlp_type == "gelu" else 3
+    return mult * cfg.d_model * ff
+
+
+def _ssm_layer_params(cfg: ArchConfig) -> int:
+    from repro.models.transformer import ssm_dims
+    dims = ssm_dims(cfg)
+    return (cfg.d_model * dims.d_in_proj
+            + dims.d_inner * cfg.d_model
+            + dims.d_conv * dims.conv_dim)
+
+
+def param_counts(cfg: ArchConfig) -> dict[str, int]:
+    """{"total": all stored params, "active": matmul params per token}."""
+    d = cfg.d_model
+    embed = cfg.vocab * d
+    if cfg.family in ("dense", "vlm"):
+        layer = _attn_params(cfg) + _mlp_params(cfg)
+        total = cfg.n_layers * layer + embed
+        active = cfg.n_layers * layer + embed  # tied unembed matmul
+    elif cfg.family == "moe":
+        attn = _attn_params(cfg)
+        expert = 3 * d * cfg.d_ff          # gated experts
+        router = d * cfg.n_experts
+        layer_total = attn + router + cfg.n_experts * expert
+        layer_active = attn + router + cfg.top_k * expert
+        total = cfg.n_layers * layer_total + embed
+        active = cfg.n_layers * layer_active + embed
+    elif cfg.family == "ssm":
+        layer = _ssm_layer_params(cfg)
+        total = cfg.n_layers * layer + embed
+        active = total
+    elif cfg.family == "hybrid":
+        mamba = cfg.n_layers * _ssm_layer_params(cfg)
+        shared = (2 * d * d                 # concat in_proj
+                  + _attn_params(cfg) + 3 * d * cfg.d_ff)
+        n_apps = cfg.n_layers // cfg.attn_every
+        total = mamba + shared + embed
+        active = mamba + n_apps * shared + embed
+    elif cfg.family == "audio":
+        enc = cfg.n_enc_layers * (_attn_params(cfg) + _mlp_params(cfg))
+        dec = cfg.n_layers * (2 * _attn_params(cfg) + _mlp_params(cfg))
+        total = enc + dec + embed
+        active = total
+    else:
+        raise ValueError(cfg.family)
+    return {"total": int(total), "active": int(active)}
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    return param_counts(cfg)["active"]
+
+
+def model_flops_total(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Matmul MODEL_FLOPS for one step of this cell (whole mesh)."""
+    counts = param_counts(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[shape.kind]
+    if cfg.family == "audio":
+        # encoder tokens and decoder tokens see different stacks
+        enc = cfg.n_enc_layers * (_attn_params(cfg) + _mlp_params(cfg))
+        dec = cfg.n_layers * (2 * _attn_params(cfg) + _mlp_params(cfg))
+        embed = cfg.vocab * cfg.d_model
+        if shape.kind == "decode":
+            return mult * B * (dec + embed)
+        return mult * B * (S * enc + cfg.dec_len * (dec + embed))
+    tokens = B * (1 if shape.kind == "decode" else S)
+    return mult * counts["active"] * tokens

@@ -1,0 +1,193 @@
+"""Unified model API: build any assigned architecture as pure functions.
+
+``build_model(cfg, backend=...)`` returns a :class:`Model` whose members are
+pure jax functions suitable for ``jax.jit`` / ``.lower()``:
+
+* ``init(key) -> params``
+* ``loss(params, batch) -> (scalar, aux)``  — family-dispatched CE
+* ``prefill(params, batch, s_max=None) -> (logits, cache)`` — the cache is
+  *produced* (sized ``s_max``), not passed in
+* ``decode(params, token, cache, pos) -> (logits, cache)``
+* ``init_cache(batch, s_max) -> cache pytree``
+* ``input_specs(shape) -> batch pytree of ShapeDtypeStructs`` (dry-run)
+* ``cache_roles(cache) -> pytree of sharding-role tuples`` (dry-run)
+
+Arithmetic backend: ``backend="bns"`` (bf16 MXU matmuls — the baseline number
+system) or ``backend="rns"`` (the paper's technique: int4 quant -> 3-channel
+redundant-residue matmul; see models/linear.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as encdec_mod
+from repro.models import frontends
+from repro.models import transformer as tf_mod
+from repro.models.attention import KVCache
+from repro.models.ssm import SsmCache
+
+__all__ = ["Model", "build_model", "cross_entropy"]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over positions with label >= 0 (-1 = ignore)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    safe = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    return -jnp.sum(ll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    loss: Callable[..., tuple[jax.Array, jax.Array]]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode: Callable[..., tuple[jax.Array, Any]]
+    init_cache: Callable[..., Any]
+    input_specs: Callable[[ShapeConfig], dict[str, Any]]
+    cache_roles: Callable[[Any], Any]
+
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def build_model(cfg: ArchConfig, *, backend: str = "bns",
+                rns_bits: int = 4, rns_impl: str = "ref") -> Model:
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    dense_kw: dict[str, Any] = {"backend": backend,
+                                "compute_dtype": compute_dtype}
+    if cfg.matmul_out_dtype == "float32":
+        dense_kw["out_dtype"] = jnp.float32
+    if backend == "rns":
+        dense_kw.update(bits=rns_bits, impl=rns_impl)
+
+    is_encdec = cfg.is_encdec
+
+    # -- init ----------------------------------------------------------------
+    def init(key):
+        params = (encdec_mod.init_encdec(key, cfg) if is_encdec
+                  else tf_mod.init_lm(key, cfg))
+        pd = jnp.dtype(cfg.param_dtype)
+        if pd != jnp.float32:
+            params = jax.tree_util.tree_map(
+                lambda a: a.astype(pd) if a.dtype == jnp.float32 else a,
+                params)
+        return params
+
+    # -- loss ----------------------------------------------------------------
+    def loss(params, batch):
+        if is_encdec:
+            logits, aux = encdec_mod.encdec_forward(
+                params, cfg, batch["frames"], batch["tokens"],
+                dense_kw=dense_kw)
+        elif cfg.family == "vlm":
+            logits, aux = tf_mod.lm_forward(
+                params, cfg, batch["tokens"], patches=batch["patches"],
+                dense_kw=dense_kw)
+        else:
+            logits, aux = tf_mod.lm_forward(params, cfg, batch["tokens"],
+                                            dense_kw=dense_kw)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + MOE_AUX_WEIGHT * aux, ce
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(batch: int, s_max: int, dtype=jnp.bfloat16):
+        if is_encdec:
+            return encdec_mod.init_encdec_cache(cfg, batch, s_max, dtype)
+        return tf_mod.init_lm_cache(cfg, batch, s_max, dtype)
+
+    def prefill(params, batch, s_max=None):
+        """Prompt -> (last logits, cache).  ``s_max`` (static) sizes the
+        produced KV cache; defaults to the prompt length."""
+        if is_encdec:
+            return encdec_mod.encdec_prefill(
+                params, cfg, batch["frames"], batch["tokens"], s_max=s_max,
+                dense_kw=dense_kw)
+        if cfg.family == "vlm":
+            return tf_mod.lm_prefill(params, cfg, batch["tokens"],
+                                     s_max=s_max, patches=batch["patches"],
+                                     dense_kw=dense_kw)
+        return tf_mod.lm_prefill(params, cfg, batch["tokens"], s_max=s_max,
+                                 dense_kw=dense_kw)
+
+    def decode(params, token, cache, pos):
+        if is_encdec:
+            return encdec_mod.encdec_decode(params, cfg, token, cache, pos,
+                                            dense_kw=dense_kw)
+        return tf_mod.lm_decode(params, cfg, token, cache, pos,
+                                dense_kw=dense_kw)
+
+    # -- dry-run input specs ---------------------------------------------------
+    def input_specs(shape: ShapeConfig) -> dict[str, Any]:
+        B, S = shape.global_batch, shape.seq_len
+        tok = jnp.int32
+        if shape.kind == "train":
+            if is_encdec:
+                return {"frames": frontends.frames_struct(B, S, cfg),
+                        "tokens": jax.ShapeDtypeStruct((B, cfg.dec_len), tok),
+                        "labels": jax.ShapeDtypeStruct((B, cfg.dec_len), tok)}
+            if cfg.family == "vlm":
+                st = S - cfg.n_img_tokens
+                return {"tokens": jax.ShapeDtypeStruct((B, st), tok),
+                        "patches": frontends.patches_struct(B, cfg),
+                        "labels": jax.ShapeDtypeStruct((B, S), tok)}
+            return {"tokens": jax.ShapeDtypeStruct((B, S), tok),
+                    "labels": jax.ShapeDtypeStruct((B, S), tok)}
+        if shape.kind == "prefill":
+            if is_encdec:
+                return {"frames": frontends.frames_struct(B, S, cfg),
+                        "tokens": jax.ShapeDtypeStruct((B, cfg.dec_len), tok)}
+            if cfg.family == "vlm":
+                st = S - cfg.n_img_tokens
+                return {"tokens": jax.ShapeDtypeStruct((B, st), tok),
+                        "patches": frontends.patches_struct(B, cfg)}
+            return {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        # decode: one new token against an S-long cache
+        return {"token": jax.ShapeDtypeStruct((B, 1), tok),
+                "pos": jax.ShapeDtypeStruct((), tok)}
+
+    # -- cache sharding roles ---------------------------------------------------
+    def cache_roles(cache) -> Any:
+        """Roles pytree per cache leaf (see parallel.sharding.Roles).
+
+        KV leaves (L, B, T, kv, hd): batch over dp, *sequence* over tp — the
+        role set that works for every kv_heads value and lets batch=1 cells
+        fall back to sequence-only sharding (divisibility fallback drops dp
+        on B=1 and re-uses it on T via the ("tp","dp") compound role).
+        """
+        from repro.parallel.sharding import Roles
+
+        def roles_for(leaf, kind: str) -> Roles:
+            if kind == "kv":          # (L, B, T, kv, hd)
+                seq = ("tp",) if leaf.shape[1] > 1 else ("tp", "dp")
+                return Roles.of(None, "dp", seq, None, None)
+            if kind == "conv":        # (L, B, K-1, conv_dim)
+                return Roles.of(None, "dp", None, "tp")
+            return Roles.of(None, "dp", "tp", None, None)  # (L, B, H, P, N)
+
+        def map_kv(c: KVCache):
+            return KVCache(roles_for(c.k, "kv"), roles_for(c.v, "kv"))
+
+        def map_ssm(c: SsmCache):
+            return SsmCache(roles_for(c.conv, "conv"),
+                            roles_for(c.state, "state"))
+
+        if isinstance(cache, KVCache):
+            return map_kv(cache)
+        if isinstance(cache, SsmCache):
+            return map_ssm(cache)
+        out = {}
+        for k, v in cache.items():
+            out[k] = map_kv(v) if isinstance(v, KVCache) else map_ssm(v)
+        return out
+
+    return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                 decode=decode, init_cache=init_cache,
+                 input_specs=input_specs, cache_roles=cache_roles)

@@ -1,0 +1,249 @@
+"""Grouped-query attention with qk-norm, chunked long-context path, KV-cache
+prefill/decode — parameterized over the arithmetic backend via
+``models.linear.dense`` and over the mesh via ``parallel.sharding.constrain``.
+
+Layout decisions (see DESIGN.md §5):
+* KV is stored *ungrouped* in the cache ((B, T, n_kv, hd)) and repeated to the
+  full head count at compute time — scores then carry a single merged head dim
+  that shards cleanly over the tensor axis for every assigned kv_heads value
+  (the per-(kv, group) factored layout would need kv % 16 == 0).
+* Long sequences use an exact scan over query chunks so peak score memory is
+  (B, H, Q_CHUNK, T).
+* Decode supports sequence-sharded caches: the softmax reductions over the T
+  axis become all-reduces under SPMD, which is the TPU analogue of
+  flash-decoding's split-KV scheme.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import linear
+from repro.models.layers import rmsnorm, rope
+from repro.parallel.sharding import constrain, constrain_any
+
+__all__ = ["init_attention", "attention", "prefill_attention",
+           "decode_attention", "KVCache", "init_kv_cache"]
+
+CHUNK_THRESHOLD = 8192   # switch to scan-over-query-chunks above this S
+Q_CHUNK = 1024
+
+
+def init_attention(key: jax.Array, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: int, *, qk_norm: bool = False,
+                   dtype=jnp.float32) -> dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear.init_dense(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": linear.init_dense(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": linear.init_dense(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": linear.init_dense(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((head_dim,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((head_dim,), jnp.float32)}
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, n_kv, hd)
+    v: jax.Array  # (B, S_max, n_kv, hd)
+
+
+def init_kv_cache(batch: int, s_max: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, s_max, n_kv, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _project_qkv(params, x, *, n_heads, n_kv, head_dim, qk_norm, positions,
+                 rope_theta, dense_kw, apply_rope=True):
+    B, S, _ = x.shape
+    q = linear.dense(params["wq"], x, **dense_kw).reshape(B, S, n_heads,
+                                                          head_dim)
+    k = linear.dense(params["wk"], x, **dense_kw).reshape(B, S, n_kv, head_dim)
+    v = linear.dense(params["wv"], x, **dense_kw).reshape(B, S, n_kv, head_dim)
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if apply_rope:
+        q = rope(q, positions, theta=rope_theta)
+        k = rope(k, positions, theta=rope_theta)
+    q = constrain(q, "dp", None, "tp", None)
+    return q, k, v
+
+
+def _core(q, k, v, *, causal: bool, q_pos, kv_pos, kv_mask=None,
+          cache_mode: bool = False):
+    """q: (B, Sq, H, hd); k, v: (B, T, n_kv, hd).  Exact softmax attention;
+    KV repeated to H heads (merged head dim -> clean TP sharding).
+
+    ``cache_mode``: k/v come from a *sequence-sharded* KV cache (decode) —
+    keep T sharded over tp and let the softmax reductions all-reduce (the
+    SPMD form of flash-decoding's split-KV).  Otherwise prefer heads over
+    tp, falling back to the query-chunk dim when heads do not divide.
+    """
+    B, Sq, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    if Kv != H:
+        k = jnp.repeat(k, H // Kv, axis=2)
+        v = jnp.repeat(v, H // Kv, axis=2)
+    if cache_mode:
+        k = constrain(k, "dp", "tp", None, None)
+        v = constrain(v, "dp", "tp", None, None)
+    else:
+        k = constrain_any(k, ("dp", None, "tp", None),
+                          ("dp", "tp", None, None))
+        v = constrain_any(v, ("dp", None, "tp", None),
+                          ("dp", "tp", None, None))
+    scores = jnp.einsum("bqhd,bthd->bhqt", q, k.astype(q.dtype),
+                        preferred_element_type=jnp.float32)
+    if cache_mode:
+        scores = constrain(scores, "dp", None, None, "tp")
+    else:
+        scores = constrain_any(scores,
+                               ("dp", "tp", None, None),
+                               ("dp", None, "tp", None),
+                               ("dp", None, None, "tp"))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    mask = None
+    if causal:
+        mask = kv_pos[None, :] <= q_pos[:, None]          # (Sq, T)
+        mask = mask[None, None]
+    if kv_mask is not None:                               # (B, T) valid keys
+        km = kv_mask[:, None, None, :]
+        mask = km if mask is None else (mask & km)
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqt,bthd->bqhd", probs.astype(v.dtype), v)
+    if not cache_mode:
+        out = constrain_any(out, ("dp", None, "tp", None),
+                            ("dp", "tp", None, None))
+    return out.reshape(B, Sq, H * hd)
+
+
+def _chunked(q, k, v, *, causal, pos1d, n_heads, head_dim):
+    """Exact attention via scan over Q_CHUNK query blocks (long prefill)."""
+    B, S = q.shape[0], q.shape[1]
+    n_chunks = S // Q_CHUNK
+    qc = q.reshape(B, n_chunks, Q_CHUNK, n_heads, head_dim).swapaxes(0, 1)
+    pc = pos1d.reshape(n_chunks, Q_CHUNK)
+
+    def body(_, inp):
+        qb, pb = inp
+        ob = _core(qb, k, v, causal=causal, q_pos=pb, kv_pos=pos1d)
+        return None, ob
+
+    _, outs = jax.lax.scan(body, None, (qc, pc))
+    return outs.swapaxes(0, 1).reshape(B, S, n_heads * head_dim)
+
+
+def attention(
+    params: dict[str, Any],
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    causal: bool = True,
+    qk_norm: bool = False,
+    rope_theta: float = 1e4,
+    positions: jax.Array | None = None,
+    dense_kw: dict[str, Any] | None = None,
+    apply_rope: bool = True,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """Self-attention over a full sequence (training / encoder / prefill).
+
+    ``kv_override`` supplies external (k, v) for cross-attention — projections
+    for them are the caller's job (see models/encdec.py).
+    """
+    dense_kw = dense_kw or {}
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, n_heads=n_heads, n_kv=n_kv,
+                           head_dim=head_dim, qk_norm=qk_norm,
+                           positions=positions, rope_theta=rope_theta,
+                           dense_kw=dense_kw, apply_rope=apply_rope)
+    if kv_override is not None:
+        k, v = kv_override
+    pos1d = positions if positions.ndim == 1 else positions[0]
+    kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    if S <= CHUNK_THRESHOLD or S % Q_CHUNK != 0:
+        out = _core(q, k, v, causal=causal, q_pos=pos1d, kv_pos=kv_pos)
+    else:
+        out = _chunked(q, k, v, causal=causal, pos1d=pos1d,
+                       n_heads=n_heads, head_dim=head_dim)
+    return linear.dense(params["wo"], out, **dense_kw)
+
+
+def prefill_attention(params, x, s_max: int, *, cache_dtype=jnp.bfloat16,
+                      **kw):
+    """Like ``attention`` but also *produces* this layer's KV cache slice,
+    zero-padded to ``s_max`` positions.  Building the cache from the scan
+    outputs (rather than updating a zero-initialized argument) keeps exactly
+    one cache buffer live — the xs/ys double-buffer was the dominant memory
+    term of the 32k prefill cells."""
+    dense_kw = kw.get("dense_kw") or {}
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    n_heads, n_kv, head_dim = kw["n_heads"], kw["n_kv"], kw["head_dim"]
+    q, k, v = _project_qkv(
+        params, x, n_heads=n_heads, n_kv=n_kv, head_dim=head_dim,
+        qk_norm=kw.get("qk_norm", False), positions=positions,
+        rope_theta=kw.get("rope_theta", 1e4), dense_kw=dense_kw,
+        apply_rope=kw.get("apply_rope", True),
+    )
+    pad = [(0, 0), (0, s_max - S), (0, 0), (0, 0)]
+    cache = KVCache(jnp.pad(k.astype(cache_dtype), pad),
+                    jnp.pad(v.astype(cache_dtype), pad))
+    causal = kw.get("causal", True)
+    if S <= CHUNK_THRESHOLD or S % Q_CHUNK != 0:
+        out = _core(q, k, v, causal=causal, q_pos=positions,
+                    kv_pos=positions)
+    else:
+        out = _chunked(q, k, v, causal=causal, pos1d=positions,
+                       n_heads=n_heads, head_dim=head_dim)
+    return linear.dense(params["wo"], out, **dense_kw), cache
+
+
+def decode_attention(
+    params: dict[str, Any],
+    x: jax.Array,
+    cache: KVCache,
+    pos: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    qk_norm: bool = False,
+    rope_theta: float = 1e4,
+    dense_kw: dict[str, Any] | None = None,
+    apply_rope: bool = True,
+) -> tuple[jax.Array, KVCache]:
+    """One decode step.  x: (B, 1, D); pos: scalar int32 (uniform batch)."""
+    dense_kw = dense_kw or {}
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, n_heads=n_heads, n_kv=n_kv,
+                           head_dim=head_dim, qk_norm=qk_norm,
+                           positions=positions, rope_theta=rope_theta,
+                           dense_kw=dense_kw, apply_rope=apply_rope)
+    cache = KVCache(
+        jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                     (0, pos, 0, 0)),
+        jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                     (0, pos, 0, 0)),
+    )
+    T = cache.k.shape[1]
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    kv_mask = (kv_pos <= pos)[None, :].astype(bool)
+    kv_mask = jnp.broadcast_to(kv_mask, (B, T))
+    out = _core(q, cache.k, cache.v, causal=False,
+                q_pos=jnp.full((1,), pos, jnp.int32), kv_pos=kv_pos,
+                kv_mask=kv_mask, cache_mode=True)
+    return linear.dense(params["wo"], out, **dense_kw), cache

@@ -1,0 +1,244 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: the encoder consumes
+*precomputed frame embeddings* (B, S_enc, d_model) from ``frontends.py``.
+Positions are sinusoidal (stateless), no RoPE.  Decoder layers = causal
+self-attention + cross-attention over the encoder memory + GELU MLP.
+
+Decode caches:
+* ``self``: KVCache over decoder positions (L, B, dec_len, n_kv, hd);
+* ``cross``: the per-layer projected encoder K/V (L, B, S_enc, n_kv, hd) —
+  computed once at prefill; decode_32k's "32k cache" is this cross memory.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import linear, mlp as mlp_mod
+from repro.models.attention import KVCache
+from repro.models.layers import init_embedding, init_rmsnorm, rmsnorm, \
+    sinusoidal_positions
+from repro.parallel.sharding import constrain
+
+__all__ = ["init_encdec", "encdec_forward", "encdec_prefill", "encdec_decode",
+           "init_encdec_cache"]
+
+
+def _init_enc_layer(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": attn_mod.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv, cfg.hd),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": mlp_mod.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": init_rmsnorm(cfg.d_model),
+        "self_attn": attn_mod.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                             cfg.n_kv, cfg.hd),
+        "cross_norm": init_rmsnorm(cfg.d_model),
+        "cross_attn": attn_mod.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                              cfg.n_kv, cfg.hd),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": mlp_mod.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encdec(key: jax.Array, cfg: ArchConfig) -> dict[str, Any]:
+    ke, k1, k2 = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_rmsnorm(cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg: ArchConfig, frames: jax.Array, dense_kw):
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    S = frames.shape[1]
+    x = frames.astype(compute_dtype) + sinusoidal_positions(
+        S, cfg.d_model).astype(compute_dtype)[None]
+    x = constrain(x, "dp", None, None)
+
+    def body(x, lp):
+        h = attn_mod.attention(
+            lp["attn"], rmsnorm(lp["attn_norm"], x),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            causal=False, dense_kw=dense_kw, apply_rope=False)
+        x = x + h
+        h = mlp_mod.gelu_mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x), dense_kw)
+        return x + h, None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(params["enc_norm"], x)
+
+
+def _cross_kv(lp, memory, cfg: ArchConfig, dense_kw):
+    B, T, _ = memory.shape
+    k = linear.dense(lp["cross_attn"]["wk"], memory,
+                     **dense_kw).reshape(B, T, cfg.n_kv, cfg.hd)
+    v = linear.dense(lp["cross_attn"]["wv"], memory,
+                     **dense_kw).reshape(B, T, cfg.n_kv, cfg.hd)
+    return k, v
+
+
+def _cross_attend(lp, x, k, v, cfg: ArchConfig, dense_kw):
+    B, S, _ = x.shape
+    q = linear.dense(lp["cross_attn"]["wq"], x,
+                     **dense_kw).reshape(B, S, cfg.n_heads, cfg.hd)
+    q = constrain(q, "dp", None, "tp", None)
+    kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    out = attn_mod._core(q, k.astype(q.dtype), v.astype(q.dtype),
+                         causal=False,
+                         q_pos=jnp.arange(S, dtype=jnp.int32), kv_pos=kv_pos)
+    return linear.dense(lp["cross_attn"]["wo"], out, **dense_kw)
+
+
+def _dec_layer(lp, x, memory_kv, cfg: ArchConfig, dense_kw, positions,
+               self_cache=None, pos=None, prefill=False):
+    """One decoder layer.  memory_kv: (k, v) cross tensors."""
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+               dense_kw=dense_kw, apply_rope=False)
+    h_in = rmsnorm(lp["self_norm"], x)
+    if prefill:
+        h, new_cache = attn_mod.prefill_attention(lp["self_attn"], h_in,
+                                                  cfg.dec_len, **akw)
+    elif self_cache is None:
+        h = attn_mod.attention(lp["self_attn"], h_in, causal=True,
+                               positions=positions, **akw)
+        new_cache = None
+    else:
+        h, new_cache = attn_mod.decode_attention(lp["self_attn"], h_in,
+                                                 self_cache, pos, **akw)
+    x = x + h
+    x = x + _cross_attend(lp, rmsnorm(lp["cross_norm"], x),
+                          *memory_kv, cfg=cfg, dense_kw=dense_kw)
+    x = x + mlp_mod.gelu_mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], x), dense_kw)
+    return x, new_cache
+
+
+def encdec_forward(
+    params: dict[str, Any],
+    cfg: ArchConfig,
+    frames: jax.Array,
+    tokens: jax.Array,
+    *,
+    dense_kw: dict[str, Any] | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forced training forward -> (logits (B, S_dec, V) f32, aux=0)."""
+    dense_kw = dense_kw or {}
+    memory = _encode(params, cfg, frames, dense_kw)
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    S = tokens.shape[1]
+    y = params["embed"]["table"].astype(compute_dtype)[tokens]
+    y = y + sinusoidal_positions(S, cfg.d_model).astype(compute_dtype)[None]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(y, lp):
+        kv = _cross_kv(lp, memory, cfg, dense_kw)
+        y, _ = _dec_layer(lp, y, kv, cfg, dense_kw, positions)
+        return y, None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    y, _ = jax.lax.scan(body, y, params["dec_layers"])
+    y = rmsnorm(params["final_norm"], y)
+    logits = jnp.matmul(y, params["embed"]["table"].astype(y.dtype).T,
+                        preferred_element_type=y.dtype)
+    return constrain(logits, "dp", None, "tp"), jnp.float32(0)
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, s_enc: int,
+                      dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    self_shape = (L, batch, cfg.dec_len, cfg.n_kv, cfg.hd)
+    cross_shape = (L, batch, s_enc, cfg.n_kv, cfg.hd)
+    return {
+        "self": KVCache(jnp.zeros(self_shape, dtype),
+                        jnp.zeros(self_shape, dtype)),
+        "cross": KVCache(jnp.zeros(cross_shape, dtype),
+                         jnp.zeros(cross_shape, dtype)),
+    }
+
+
+def encdec_prefill(
+    params: dict[str, Any],
+    cfg: ArchConfig,
+    frames: jax.Array,
+    tokens: jax.Array,
+    *,
+    s_max: int | None = None,
+    dense_kw: dict[str, Any] | None = None,
+):
+    """Encode frames, project cross K/V, prefill the decoder self-cache.
+
+    Caches are *produced* (scan ys), not filled into an argument; the
+    decoder self-cache is always ``cfg.dec_len`` long (``s_max`` accepted
+    for interface parity)."""
+    del s_max
+    dense_kw = dense_kw or {}
+    memory = _encode(params, cfg, frames, dense_kw)
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    S = tokens.shape[1]
+    y = params["embed"]["table"].astype(compute_dtype)[tokens]
+    y = y + sinusoidal_positions(S, cfg.d_model).astype(compute_dtype)[None]
+
+    def body(y, lp):
+        k, v = _cross_kv(lp, memory, cfg, dense_kw)
+        y, sc2 = _dec_layer(lp, y, (k, v), cfg, dense_kw, None,
+                            prefill=True)
+        return y, (sc2, KVCache(k.astype(sc2.k.dtype),
+                                v.astype(sc2.v.dtype)))
+
+    y, (self2, cross2) = jax.lax.scan(body, y, params["dec_layers"])
+    y = rmsnorm(params["final_norm"], y[:, -1:])
+    logits = jnp.matmul(y, params["embed"]["table"].astype(y.dtype).T,
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], {"self": self2, "cross": cross2}
+
+
+def encdec_decode(
+    params: dict[str, Any],
+    cfg: ArchConfig,
+    token: jax.Array,
+    cache,
+    pos: jax.Array,
+    *,
+    dense_kw: dict[str, Any] | None = None,
+):
+    """One decoder step against the prefilled cross memory."""
+    dense_kw = dense_kw or {}
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    y = params["embed"]["table"].astype(compute_dtype)[token]  # (B, 1, d)
+    pe = sinusoidal_positions(cfg.dec_len, cfg.d_model).astype(compute_dtype)
+    y = y + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None]
+
+    def body(y, inp):
+        lp, sc, cc = inp
+        y, sc2 = _dec_layer(lp, y, (cc.k, cc.v), cfg, dense_kw, None,
+                            self_cache=sc, pos=pos)
+        return y, sc2
+
+    y, self2 = jax.lax.scan(body, y, (params["dec_layers"], cache["self"],
+                                      cache["cross"]))
+    y = rmsnorm(params["final_norm"], y)
+    logits = jnp.matmul(y, params["embed"]["table"].astype(y.dtype).T,
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], {"self": self2, "cross": cache["cross"]}

@@ -1,0 +1,40 @@
+"""Modality-frontend STUBS (per assignment: backbone only).
+
+``[audio]`` / ``[vlm]`` architectures receive *precomputed* frame / patch
+embeddings; the conv mel-spectrogram stack (whisper) and the pixtral ViT are
+explicitly out of scope.  These helpers produce deterministic synthetic
+embeddings for smoke tests / examples and the matching ShapeDtypeStructs for
+the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["synthetic_frames", "synthetic_patches", "frames_struct",
+           "patches_struct"]
+
+
+def synthetic_frames(key: jax.Array, batch: int, n_frames: int,
+                     cfg: ArchConfig, dtype=jnp.float32) -> jax.Array:
+    """Stand-in for log-mel conv stack output: (B, n_frames, d_model)."""
+    return jax.random.normal(key, (batch, n_frames, cfg.d_model), dtype) * 0.1
+
+
+def synthetic_patches(key: jax.Array, batch: int, cfg: ArchConfig,
+                      dtype=jnp.float32) -> jax.Array:
+    """Stand-in for ViT patch embeddings: (B, n_img_tokens, d_model)."""
+    return jax.random.normal(
+        key, (batch, cfg.n_img_tokens, cfg.d_model), dtype) * 0.1
+
+
+def frames_struct(batch: int, n_frames: int, cfg: ArchConfig,
+                  dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, n_frames, cfg.d_model), dtype)
+
+
+def patches_struct(batch: int, cfg: ArchConfig,
+                   dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.n_img_tokens, cfg.d_model), dtype)

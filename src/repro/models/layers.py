@@ -1,0 +1,74 @@
+"""Shared neural building blocks: norms, RoPE, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm", "init_rmsnorm", "rope", "init_embedding", "embed",
+           "unembed", "sinusoidal_positions"]
+
+
+def sinusoidal_positions(length: int, d: int,
+                         max_timescale: float = 1e4) -> jax.Array:
+    """Whisper-style sinusoidal position embeddings, (length, d) f32."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(max_timescale)
+                    * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_rmsnorm(d: int) -> dict[str, jax.Array]:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict[str, jax.Array], x: jax.Array,
+            eps: float = 1e-5) -> jax.Array:
+    """RMSNorm: f32 variance, normalize-multiply in the input dtype.
+
+    Two variants were measured and REVERTED (EXPERIMENTS.md §Perf iteration
+    5): a dot-based sum-of-squares (f32 accumulation, no f32 inputs) makes
+    the *backward* materialize f32 cotangent outer products (+43% HBM), and
+    a bf16 logits head upcast even more.  The residual f32 activation chains
+    in the profile trace to XLA-CPU float normalization upcasting bf16
+    all-reduces — a host-backend artifact TPU lowering does not share."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, *,
+         theta: float = 1e4) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int,
+                   dtype=jnp.float32) -> dict[str, jax.Array]:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params: dict[str, jax.Array], tokens: jax.Array,
+          compute_dtype=jnp.bfloat16) -> jax.Array:
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(params: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """Logits head (tied or untied table of shape (vocab, d)) -> f32 logits."""
+    return jnp.matmul(
+        x, params["table"].astype(x.dtype).T, preferred_element_type=jnp.float32
+    )

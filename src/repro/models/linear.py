@@ -1,0 +1,117 @@
+"""Dense layer with a switchable arithmetic backend: BNS (bf16) or RNS.
+
+``backend="rns"`` routes every matmul through the paper's technique: symmetric
+int4 quantization -> 3-channel RNS modular matmul (Pallas kernel on TPU, jnp
+reference on CPU/dry-run) -> MRC reverse conversion -> dequantize.  Training
+works through a straight-through estimator (exact integer forward, float
+backward), the standard QAT treatment.
+
+The kernel implementation is selected by ``impl``:
+  * "pallas"    — pl.pallas_call, Mosaic lowering (real TPU).
+  * "interpret" — Pallas interpreter (CPU correctness tests).
+  * "ref"       — pure-jnp channel einsums (CPU dry-run compilation; same
+                  flop/byte structure as the kernel for roofline purposes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moduli import P21, ModuliSet
+from repro.kernels import ops
+from repro.quant.quant import qmax_for_bits, quantize_symmetric
+
+__all__ = ["dense", "init_dense", "rns_qmatmul"]
+
+
+def init_dense(key: jax.Array, d_in: int, d_out: int,
+               dtype=jnp.float32) -> dict[str, jax.Array]:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+
+
+# ---------------------------------------------------------------------------
+# RNS integer matmul with straight-through gradients.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def rns_qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
+                impl: str) -> jax.Array:
+    """x: (M, K) float, w: (K, N) float -> (M, N) float.
+
+    Forward: exact integer RNS matmul of the quantized operands, dequantized
+    with per-token (rows of x) and per-output-channel (cols of w) scales.
+    Backward: straight-through (floats) — standard QAT.
+    """
+    return _rns_qmatmul_fwd(x, w, bits, mset, impl)[0]
+
+
+def _rns_qmatmul_fwd(x, w, bits, mset, impl):
+    qmax = qmax_for_bits(bits)
+    qx, sx = quantize_symmetric(x, bits, axis=-1)      # per-token scales
+    qw, sw = quantize_symmetric(w, bits, axis=0)       # per-out-channel
+    kwargs: dict[str, Any] = dict(mset=mset, max_abs_a=qmax, max_abs_b=qmax)
+    if impl == "interpret":
+        kwargs["interpret"] = True
+    elif impl == "ref":
+        kwargs["use_ref"] = True
+    acc = ops.rns_matmul(qx, qw, **kwargs)             # exact int32
+    out = acc.astype(jnp.float32) * sx * sw            # (M,1)*(1,N) broadcast
+    return out, (x, w)
+
+
+def _rns_qmatmul_bwd(bits, mset, impl, resids, g):
+    x, w = resids
+    gx = jnp.matmul(g, w.T, preferred_element_type=jnp.float32)
+    gw = jnp.matmul(x.T, g, preferred_element_type=jnp.float32)
+    return gx.astype(x.dtype), gw.astype(w.dtype)
+
+
+rns_qmatmul.defvjp(_rns_qmatmul_fwd, _rns_qmatmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public dense entry point.
+# ---------------------------------------------------------------------------
+
+
+def dense(
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    *,
+    backend: str = "bns",
+    bits: int = 4,
+    mset: ModuliSet = P21,
+    impl: str = "ref",
+    compute_dtype=jnp.bfloat16,
+    out_dtype=None,
+) -> jax.Array:
+    """y = x @ w under the selected arithmetic backend.
+
+    x: (..., d_in) -> (..., d_out).  Leading dims are flattened for the RNS
+    path (the kernel is 2-D) and restored after.
+    """
+    w = params["w"]
+    if backend == "bns":
+        # Dot-output dtype is a measured, per-arch policy (EXPERIMENTS.md
+        # §Perf iteration 3/6): bf16 results cut granite-20b HBM traffic 5%
+        # (the MXU accumulates f32 internally either way) but blew up the
+        # MoE archs' dispatch fusions +77% — so MoE configs keep f32.
+        pref = compute_dtype if out_dtype is None else out_dtype
+        y = jnp.matmul(
+            x.astype(compute_dtype),
+            w.astype(compute_dtype),
+            preferred_element_type=pref,
+        )
+        return y.astype(compute_dtype)
+    if backend != "rns":
+        raise ValueError(f"unknown backend {backend!r}")
+    lead = x.shape[:-1]
+    d_in = x.shape[-1]
+    x2 = x.reshape(-1, d_in).astype(jnp.float32)
+    y2 = rns_qmatmul(x2, w.astype(jnp.float32), bits, mset, impl)
+    return y2.reshape(*lead, w.shape[-1]).astype(compute_dtype)

@@ -1,0 +1,143 @@
+"""Top-k mixture-of-experts with capacity-based scatter dispatch.
+
+Design (jit-friendly, SPMD-shardable — MaxText-style "dropping" MoE):
+
+1. router logits -> softmax -> ``lax.top_k`` (per-token expert ids + gates);
+2. each (token, slot) gets a *position inside its expert* via a cumsum over
+   the (T·k, E) one-hot assignment matrix; positions beyond the static
+   capacity ``C = ceil(T·k/E) · capacity_factor`` are dropped;
+3. tokens are scattered into ``(E, C, d)`` buffers (``.add`` so collisions
+   from dropped-token placeholders are zero-safe), run through the stacked
+   expert SwiGLU as three einsums, and gathered back weighted by gates.
+
+Sharding: expert buffers shard tokens (C) over "data" and the stacked expert
+weights over ("model" on experts when E % axis == 0 — moonshot's 64 — else
+"model" on d_ff inside each expert — grok's 8); see parallel/sharding.py.
+The scatter/gather pair lowers to all-to-alls under SPMD — the EP dispatch.
+
+Load-balance aux loss is the standard switch-transformer form
+``E * sum_e f_e * p_e``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import linear
+from repro.parallel.sharding import constrain, get_shard_ctx
+
+__all__ = ["init_moe", "moe", "moe_capacity"]
+
+
+def init_moe(key: jax.Array, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.float32) -> dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    scale_in = (2.0 / (d_model + d_ff)) ** 0.5
+
+    def stack(k, shape):
+        return jax.random.normal(k, shape, dtype) * scale_in
+
+    return {
+        "router": {"w": jax.random.normal(ks[0], (d_model, n_experts),
+                                          jnp.float32) * 0.02},
+        "w_gate": stack(ks[1], (n_experts, d_model, d_ff)),
+        "w_up": stack(ks[2], (n_experts, d_model, d_ff)),
+        "w_down": stack(ks[3], (n_experts, d_ff, d_model)),
+    }
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float = 1.25, *, multiple: int = 8) -> int:
+    """Static per-expert capacity, rounded up to a lane-friendly multiple."""
+    c = math.ceil(n_tokens * top_k / n_experts * capacity_factor)
+    return max(multiple, (c + multiple - 1) // multiple * multiple)
+
+
+def moe(
+    params: dict[str, Any],
+    x: jax.Array,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dense_kw: dict[str, Any] | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar f32).
+
+    ``dense_kw`` is accepted for interface parity; expert matmuls run as
+    stacked einsums (the RNS backend applies to the dense archs' layers —
+    expert-stacked RNS einsums are a documented future extension).
+    """
+    del dense_kw
+    B, S, d = x.shape
+    T = B * S
+    E, K = n_experts, top_k
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"]["w"])            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, K)           # (T, K)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (switch form)
+    frac_prob = jnp.mean(probs, axis=0)                   # (E,)
+    assign = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (T, K, E)
+    frac_tok = jnp.mean(jnp.sum(assign, axis=1), axis=0)  # (E,)
+    aux = E * jnp.sum(frac_prob * frac_tok)
+
+    # position of each (token, slot) inside its expert
+    C = moe_capacity(T, E, K, capacity_factor)
+    flat_e = expert_idx.reshape(T * K)                    # (TK,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (TK, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot             # exclusive cumsum
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < C                                   # (TK,)
+    safe_e = jnp.where(keep, flat_e, 0)
+    safe_p = jnp.where(keep, pos_in_e, 0)
+
+    # scatter tokens into (E, C, d) buffers.  Sharding: EP (experts over tp)
+    # when E divides the axis — moonshot's 64 — else TP inside each expert
+    # (d_ff over tp) — grok's 8.  The scatter/gather pair becomes the EP
+    # all-to-all under SPMD.
+    # Layout (measured, EXPERIMENTS.md §Perf iteration 1): in the
+    # TP-in-expert case (E < tp axis — grok's 8) explicit constraints cut
+    # the f32 expert activations from 80 GiB to 17 GiB/dev; in the EP case
+    # (E % tp == 0 — moonshot's 64) the same constraints forced expert-dim
+    # all-to-alls on every scatter (+9x collective bytes) and XLA's own
+    # propagation of the expert-sharded weights is strictly better — so EP
+    # leaves activations unconstrained.
+    ctx = get_shard_ctx()
+    ep = ctx is not None and E % ctx.axis_size("tp") == 0
+    tp_in_expert = ctx is not None and not ep
+    src = jnp.repeat(xt, K, axis=0)                       # (TK, d) slot copies
+    src = jnp.where(keep[:, None], src, jnp.zeros_like(src))
+    src = constrain(src, "dp", None)
+    buf = jnp.zeros((E, C, d), x.dtype).at[safe_e, safe_p].add(src)
+
+    # stacked expert SwiGLU (operands stay in compute dtype; f32 accumulate)
+    if tp_in_expert:
+        buf = constrain(buf, None, "dp", None)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(buf.dtype),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(buf.dtype),
+                   preferred_element_type=jnp.float32)
+    if tp_in_expert:
+        g = constrain(g, None, "dp", "tp")
+        u = constrain(u, None, "dp", "tp")
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    out_buf = jnp.einsum("ecf,efd->ecd", h,
+                         params["w_down"].astype(h.dtype),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    if tp_in_expert:
+        out_buf = constrain(out_buf, None, "dp", None)
+
+    # gather back, weight by gates, sum slots
+    out_tok = out_buf[safe_e, safe_p]                     # (TK, d)
+    out_tok = jnp.where(keep[:, None], out_tok, jnp.zeros_like(out_tok))
+    y = jnp.sum(out_tok.reshape(T, K, d)
+                * gates.reshape(T, K, 1).astype(x.dtype), axis=1)
+    return y.reshape(B, S, d), aux

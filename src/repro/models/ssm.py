@@ -1,0 +1,304 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked train/prefill scan and
+single-step recurrent decode.
+
+Implements the SSD dual form of arXiv:2405.21060: within a chunk of length Q
+the output is a (masked, decay-weighted) quadratic attention-like product; the
+inter-chunk contribution flows through a small recurrent state
+``h: (B, H, P, N)`` updated once per chunk.  We scan sequentially over chunks
+(S/Q steps) so no (S, S) or (B, nc, H, Q, Q)-for-all-chunks tensor is ever
+materialized — peak per-step score memory is (B, H, Q, Q).
+
+Decode is the classic linear recurrence: ``h <- h * exp(dt*A) + dt * (B ⊗ x)``,
+``y = (C · h) + D * x`` — O(1) per token, the reason mamba archs run the
+long_500k cell.
+
+Arithmetic-backend note (DESIGN.md §4): the in/out projections go through
+``models.linear.dense`` and therefore support the RNS backend; the recurrence
+itself multiplies by real-valued decays ``exp(dt*A) ∈ (0, 1)`` and stays in
+float — an inherent range mismatch with an exact integer ring.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import linear
+from repro.models.layers import rmsnorm
+
+__all__ = [
+    "Mamba2Dims",
+    "init_mamba2",
+    "mamba2_forward",
+    "mamba2_decode",
+    "SsmCache",
+    "init_ssm_cache",
+    "DEFAULT_CHUNK",
+]
+
+DEFAULT_CHUNK = 256
+
+
+class Mamba2Dims(NamedTuple):
+    d_model: int
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    n_groups: int = 1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def d_in_proj(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+class SsmCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv - 1, conv_dim) rolling conv buffer
+    state: jax.Array  # (B, H, P, N) recurrent SSM state
+
+
+def init_ssm_cache(batch: int, dims: Mamba2Dims,
+                   dtype=jnp.float32) -> SsmCache:
+    return SsmCache(
+        jnp.zeros((batch, dims.d_conv - 1, dims.conv_dim), dtype),
+        jnp.zeros((batch, dims.n_heads, dims.headdim, dims.d_state), dtype),
+    )
+
+
+def init_mamba2(key: jax.Array, dims: Mamba2Dims,
+                dtype=jnp.float32) -> dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    H = dims.n_heads
+    return {
+        "in_proj": linear.init_dense(ks[0], dims.d_model, dims.d_in_proj, dtype),
+        "conv_w": jax.random.normal(ks[1], (dims.d_conv, dims.conv_dim),
+                                    dtype) * 0.2,
+        "conv_b": jnp.zeros((dims.conv_dim,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        # A in (-1, 0): A_log such that A = -exp(A_log); init A ~ -[1, 2]
+        "A_log": jnp.log(1.0 + jnp.arange(H, dtype=jnp.float32) / H),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": {"scale": jnp.ones((dims.d_inner,), jnp.float32)},
+        "out_proj": linear.init_dense(ks[3], dims.d_inner, dims.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(zxbcdt: jax.Array, dims: Mamba2Dims):
+    """Split the fused in_proj output into (z, xBC, dt)."""
+    di, gs = dims.d_inner, dims.n_groups * dims.d_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: 2 * di + 2 * gs]
+    dt = zxbcdt[..., 2 * di + 2 * gs:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 init_buf: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with taps ``w: (K, C)``.
+
+    ``init_buf``: (B, K-1, C) history (zeros for training-from-scratch).
+    Implemented as K shifted adds — K is 4, so this is cheaper and simpler
+    than a grouped conv lowering, and trivially correct.
+    """
+    Kt = w.shape[0]
+    if init_buf is None:
+        init_buf = jnp.zeros(xBC.shape[:1] + (Kt - 1,) + xBC.shape[2:],
+                             xBC.dtype)
+    ext = jnp.concatenate([init_buf.astype(xBC.dtype), xBC], axis=1)
+    S = xBC.shape[1]
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for k in range(Kt):
+        out = out + ext[:, k: k + S].astype(jnp.float32) * w[k].astype(
+            jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., Q) -> (..., Q, Q) lower-triangular segment sums:
+    out[i, j] = sum_{k=j+1..i} x[k] for i >= j, -inf above the diagonal."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_forward(
+    params: dict[str, Any],
+    x: jax.Array,
+    dims: Mamba2Dims,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    dense_kw: dict[str, Any] | None = None,
+    init_cache: SsmCache | None = None,
+    return_cache: bool = False,
+):
+    """Full-sequence Mamba2 block.  x: (B, S, d_model) -> (B, S, d_model).
+
+    S must be a multiple of ``chunk`` (configs guarantee it).  With
+    ``return_cache`` also returns the final SsmCache for serving prefill.
+    """
+    dense_kw = dense_kw or {}
+    B, S, _ = x.shape
+    Q = min(chunk, S)
+    if S % Q:
+        # causal pad-and-slice is exact for the outputs; the final state
+        # would absorb the pad steps, so the cache path keeps the strict
+        # divisibility contract (configs guarantee it for serving shapes)
+        if return_cache:
+            raise ValueError(f"S={S} must be a multiple of chunk={Q} when "
+                             "return_cache=True")
+        pad = Q - S % Q
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        out = mamba2_forward(params, xp, dims, chunk=Q, dense_kw=dense_kw)
+        return out[:, :S]
+    nc = S // Q
+    H, P, N = dims.n_heads, dims.headdim, dims.d_state
+    G = dims.n_groups
+
+    zxbcdt = linear.dense(params["in_proj"], x, **dense_kw)
+    z, xBC, dt = _split_proj(zxbcdt, dims)
+    conv_hist = None if init_cache is None else init_cache.conv
+    xBC_pre = xBC                                       # pre-conv, for cache
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"], conv_hist)
+    xs = xBC[..., : dims.d_inner]
+    Bm = xBC[..., dims.d_inner: dims.d_inner + G * N]
+    Cm = xBC[..., dims.d_inner + G * N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])          # (B, S, H)
+    A = -jnp.exp(params["A_log"])                       # (H,)
+    dA = dt * A                                         # (B, S, H)
+
+    xh = xs.reshape(B, S, H, P).astype(jnp.float32)
+    Bh = Bm.reshape(B, S, G, N).astype(jnp.float32)
+    Ch = Cm.reshape(B, S, G, N).astype(jnp.float32)
+    # broadcast groups over heads (G == 1 for all assigned archs)
+    rep = H // G
+    Bh = jnp.repeat(Bh, rep, axis=2)                    # (B, S, H, N)
+    Ch = jnp.repeat(Ch, rep, axis=2)
+
+    # chunked layout: (nc, B, Q, ...)
+    def to_chunks(t):
+        return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, Bc, Cc, dtc, dAc = map(to_chunks, (xh, Bh, Ch, dt, dA))
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_cache is None
+          else init_cache.state.astype(jnp.float32))
+
+    def chunk_body(h, inp):
+        xq, Bq, Cq, dtq, dAq = inp          # (B, Q, H, *)
+        # within-chunk decay matrix L[i, j] = exp(sum_{j<k<=i} dA_k)
+        Lm = jnp.exp(_segsum(dAq.swapaxes(1, 2)))       # (B, H, Q, Q)
+        # diagonal (intra-chunk) term: scores = C_i . B_j * L_ij * dt_j
+        scores = jnp.einsum("bihn,bjhn->bhij", Cq, Bq) * Lm
+        scores = scores * dtq.swapaxes(1, 2)[:, :, None, :]  # weight by dt_j
+        y_diag = jnp.einsum("bhij,bjhp->bihp", scores, xq)
+        # inter-chunk: contribution of the incoming state
+        decay_in = jnp.exp(jnp.cumsum(dAq, axis=1))     # (B, Q, H)
+        y_off = jnp.einsum("bihn,bhpn->bihp", Cq, h) * decay_in[..., None]
+        # state update: h' = h * exp(sum dA) + sum_j decay_to_end_j dt_j B_j x_j
+        total = jnp.exp(jnp.sum(dAq, axis=1))           # (B, H)
+        decay_to_end = jnp.exp(jnp.sum(dAq, axis=1, keepdims=True)
+                               - jnp.cumsum(dAq, axis=1))  # (B, Q, H)
+        w = (dtq * decay_to_end)[..., None]             # (B, Q, H, 1)
+        dh = jnp.einsum("bjhn,bjhp->bhpn", Bq * w, xq)
+        h_new = h * total[..., None, None] + dh
+        return h_new, y_diag + y_off
+
+    h_final, yc = jax.lax.scan(chunk_body, h0, (xc, Bc, Cc, dtc, dAc))
+    y = yc.swapaxes(0, 1).reshape(B, S, H * P)          # (B, S, d_inner)
+    y = y + (params["D"][None, None, :, None]
+             * xh).reshape(B, S, H * P)                 # skip connection
+    # gated RMSNorm (mamba2's norm-then-gate) and out projection
+    y = rmsnorm(params["norm"], y.astype(x.dtype))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = linear.dense(params["out_proj"], y, **dense_kw)
+    if return_cache:
+        Kt = dims.d_conv
+        # conv history = last K-1 *pre-conv* xBC inputs (prepend the incoming
+        # history so prefills shorter than K-1 stay exact)
+        hist0 = (jnp.zeros((B, Kt - 1, dims.conv_dim), jnp.float32)
+                 if init_cache is None else init_cache.conv)
+        full = jnp.concatenate(
+            [hist0.astype(jnp.float32), xBC_pre.astype(jnp.float32)], axis=1)
+        cache = SsmCache(full[:, -(Kt - 1):], h_final)
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recurrent decode (one token)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_decode(
+    params: dict[str, Any],
+    x: jax.Array,
+    cache: SsmCache,
+    dims: Mamba2Dims,
+    *,
+    dense_kw: dict[str, Any] | None = None,
+) -> tuple[jax.Array, SsmCache]:
+    """One decode step.  x: (B, 1, d_model) -> (B, 1, d_model)."""
+    dense_kw = dense_kw or {}
+    B = x.shape[0]
+    H, P, N, G = dims.n_heads, dims.headdim, dims.d_state, dims.n_groups
+
+    zxbcdt = linear.dense(params["in_proj"], x, **dense_kw)  # (B, 1, ·)
+    z, xBC, dt = _split_proj(zxbcdt, dims)
+    # conv over the rolling buffer
+    hist = cache.conv                                    # (B, K-1, conv_dim)
+    ext = jnp.concatenate([hist.astype(xBC.dtype), xBC], axis=1)  # (B, K, C)
+    w = params["conv_w"].astype(jnp.float32)             # (K, C)
+    conv_out = jnp.sum(ext.astype(jnp.float32) * w[None], axis=1, keepdims=True)
+    xBC = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    new_conv = ext[:, 1:].astype(jnp.float32)            # roll buffer
+
+    xs = xBC[..., : dims.d_inner]
+    Bm = xBC[..., dims.d_inner: dims.d_inner + G * N]
+    Cm = xBC[..., dims.d_inner + G * N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,1,H)
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt[:, 0] * A)                           # (B, H)
+
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1)  # (B, H, N)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1)
+
+    h = cache.state.astype(jnp.float32)
+    h = (h * da[..., None, None]
+         + (dt[:, 0, :, None] * xh)[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch) + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, H * P)
+    y = rmsnorm(params["norm"], y.astype(x.dtype))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = linear.dense(params["out_proj"], y, **dense_kw)
+    return out, SsmCache(new_conv, h)

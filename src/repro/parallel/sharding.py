@@ -1,0 +1,297 @@
+"""Sharding rules: param PartitionSpecs, activation constraints, shard context.
+
+Three pieces:
+
+* :class:`ShardCtx` — a lightweight context (mesh + axis-name roles) installed
+  by the launchers/dry-run while *tracing* step functions.  Model code calls
+  :func:`constrain` with symbolic roles (``"dp"`` = batch/FSDP axes, ``"tp"`` =
+  tensor axis); with no context installed it is a no-op, so tests and CPU runs
+  never notice.  Every constraint degrades gracefully: an axis that does not
+  divide the dimension is dropped (replicated) rather than erroring — this is
+  what makes one rule set serve kv_heads ∈ {1..32}, experts ∈ {8, 64}, odd
+  vocabularies, and batch=1 cells.
+
+* :func:`param_specs` — name-based PartitionSpec rules for parameter pytrees
+  (FSDP over ``dp`` on the non-TP dim, TP over ``tp`` on heads/ffn/vocab/
+  experts), applied to shape pytrees (works on ShapeDtypeStructs — no
+  allocation, dry-run safe).
+
+* :func:`batch_specs` — shardings for step inputs.
+
+Roles, not axis names, appear in model code so the same model runs on the
+single-pod ``("data", "model")`` mesh and the multi-pod
+``("pod", "data", "model")`` mesh (dp = ("pod", "data")) unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import re
+from contextvars import ContextVar
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardCtx",
+    "shard_ctx",
+    "get_shard_ctx",
+    "constrain",
+    "constrain_any",
+    "param_specs",
+    "named_shardings",
+    "batch_spec_train",
+    "logical_to_spec",
+    "Roles",
+    "specs_from_roles",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Roles:
+    """A per-tensor tuple of sharding roles, wrapped so pytree traversal
+    treats it as a LEAF (plain tuples would be flattened)."""
+
+    roles: tuple
+
+    @staticmethod
+    def of(*roles) -> "Roles":
+        return Roles(tuple(roles))
+
+_CTX: ContextVar["ShardCtx | None"] = ContextVar("repro_shard_ctx",
+                                                 default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    dp: tuple[str, ...] = ("data",)   # batch / FSDP axes (pod folds in here)
+    tp: tuple[str, ...] = ("model",)  # tensor axes
+    seq_shard: bool = False           # SP: shard residual-stream seq over tp
+
+    def axis_size(self, roles: Sequence[str] | str) -> int:
+        names = self.resolve(roles)
+        out = 1
+        for n in names:
+            out *= self.mesh.shape[n]
+        return out
+
+    def resolve(self, role) -> tuple[str, ...]:
+        """Map "dp"/"tp"/"seq"/mesh-axis-name/tuple to mesh axis names.
+
+        "seq" = the sequence-parallel role: resolves to the tensor axes only
+        when ``seq_shard`` is on (the SP hillclimb lever), else to nothing.
+        """
+        if role is None:
+            return ()
+        if isinstance(role, str):
+            if role == "dp":
+                return self.dp
+            if role == "tp":
+                return self.tp
+            if role == "seq":
+                return self.tp if self.seq_shard else ()
+            return (role,)
+        out: list[str] = []
+        for r in role:
+            out.extend(self.resolve(r))
+        return tuple(out)
+
+
+@contextlib.contextmanager
+def shard_ctx(ctx: ShardCtx | None):
+    token = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(token)
+
+
+def get_shard_ctx() -> ShardCtx | None:
+    return _CTX.get()
+
+
+def _fit_spec(ctx: ShardCtx, shape: Sequence[int], roles: Sequence) -> P:
+    """Build a PartitionSpec, dropping axes that do not divide the dim."""
+    spec: list[Any] = []
+    for dim, role in zip(shape, roles):
+        names = ctx.resolve(role)
+        keep: list[str] = []
+        size = dim
+        for n in names:
+            ax = ctx.mesh.shape[n]
+            if size % ax == 0:
+                keep.append(n)
+                size //= ax
+        if not keep:
+            spec.append(None)
+        elif len(keep) == 1:
+            spec.append(keep[0])
+        else:
+            spec.append(tuple(keep))
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *roles) -> jax.Array:
+    """with_sharding_constraint by role; no-op outside a shard context."""
+    ctx = get_shard_ctx()
+    if ctx is None:
+        return x
+    if len(roles) != x.ndim:
+        raise ValueError(f"{len(roles)} roles for rank-{x.ndim} tensor")
+    spec = _fit_spec(ctx, x.shape, roles)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def _tp_applies(ctx: ShardCtx, shape, roles) -> bool:
+    """True when every requested tp axis actually divides its dim."""
+    for dim, role in zip(shape, roles):
+        names = ctx.resolve(role)
+        if not names:
+            continue
+        size = dim
+        ok = True
+        for n in names:
+            ax = ctx.mesh.shape[n]
+            if size % ax == 0:
+                size //= ax
+            else:
+                ok = False
+        if any(n in ctx.resolve("tp") for n in names) and not ok:
+            return False
+    return True
+
+
+def constrain_any(x: jax.Array, *candidates) -> jax.Array:
+    """Apply the first candidate role tuple whose tensor-axis request fits
+    (divisibility); if none fits, leave the tensor UNCONSTRAINED.
+
+    Leaving it free matters: a constraint whose tp axis was dropped pins the
+    tensor to *replication* — measured 25 GiB/dev score buffers on phi3
+    (40 heads, 16-way axis) before this rule; with no constraint XLA's
+    propagation picks a workable layout (EXPERIMENTS.md §Perf, iteration 1).
+    """
+    ctx = get_shard_ctx()
+    if ctx is None:
+        return x
+    for roles in candidates:
+        if _tp_applies(ctx, x.shape, roles):
+            return constrain(x, *roles)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (name-based).
+#
+# Convention: within a layer, "column-parallel" weights (d_model -> wide) are
+# (dp, tp) — FSDP on d_model, TP on heads/ffn; "row-parallel" weights
+# (wide -> d_model) are (tp, dp).  Stacked-layer leaves carry a leading None;
+# stacked-expert leaves shard the expert dim over tp when divisible (EP),
+# falling back to TP inside each expert.
+# ---------------------------------------------------------------------------
+
+_COL = re.compile(r"^(wq|wk|wv|w_gate|w_up|in_proj|router)$")
+_ROW = re.compile(r"^(wo|w_down|out_proj)$")
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def _leaf_roles(path_names: list[str], shape: tuple[int, ...],
+                *, stacked: bool, n_experts_tp: bool) -> list:
+    """Role list (len == ndim) for one parameter leaf."""
+    names = set(path_names)
+    nd = len(shape)
+    lead: list = [None] if stacked else []
+    body = shape[1:] if stacked else shape
+
+    def wrap(roles: list) -> list:
+        return lead + roles
+
+    # embeddings: (vocab, d)
+    if "table" in names:
+        return wrap(["tp", "dp"])
+    # stacked experts: (E, d_in, d_out)
+    if len(body) == 3 and any(n in names for n in ("w_gate", "w_up", "w_down")):
+        if n_experts_tp:
+            return wrap(["tp", "dp", None])
+        if any(n in names for n in ("w_gate", "w_up")):
+            return wrap([None, "dp", "tp"])
+        return wrap([None, "tp", "dp"])
+    # 2-D dense weights
+    if len(body) == 2:
+        parent = path_names[-2] if len(path_names) >= 2 else ""
+        key = parent if path_names[-1] == "w" else path_names[-1]
+        if _COL.match(key):
+            return wrap(["dp", "tp"])
+        if _ROW.match(key):
+            return wrap(["tp", "dp"])
+        if key == "conv_w":
+            return wrap([None, "tp"])
+        return wrap(["dp", "tp"])  # default: FSDP in, TP out
+    # vectors / scalars: replicate
+    return wrap([None] * len(body))
+
+
+def param_specs(
+    shapes: Any,
+    ctx: ShardCtx,
+    *,
+    stacked_prefixes: tuple[str, ...] = ("layers", "enc_layers",
+                                         "dec_layers", "groups", "tail"),
+    expert_axis_ok: bool | None = None,
+) -> Any:
+    """PartitionSpec pytree matching a param(-shape) pytree.
+
+    ``shapes``: pytree of arrays or ShapeDtypeStructs.
+    ``expert_axis_ok``: force EP on/off; default = auto per-leaf
+    (E % tp_size == 0).
+    """
+    tp_size = ctx.axis_size("tp")
+
+    def rule(path, leaf):
+        pn = _path_names(path)
+        shape = tuple(leaf.shape)
+        stacked = bool(pn) and pn[0] in stacked_prefixes and len(shape) >= 1
+        ep = expert_axis_ok
+        if ep is None:
+            body = shape[1:] if stacked else shape
+            ep = len(body) == 3 and body[0] % tp_size == 0
+        roles = _leaf_roles(pn, shape, stacked=stacked, n_experts_tp=ep)
+        return _fit_spec(ctx, shape, roles)
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def named_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_spec_train(ctx: ShardCtx) -> P:
+    """(B, S) token batches: batch over all dp axes."""
+    return P(tuple(ctx.dp))
+
+
+def logical_to_spec(ctx: ShardCtx, shape: Sequence[int], roles: Sequence) -> P:
+    return _fit_spec(ctx, shape, roles)
+
+
+def specs_from_roles(shapes: Any, roles: Any, ctx: ShardCtx) -> Any:
+    """PartitionSpec pytree from a shape pytree + a matching Roles pytree."""
+    return jax.tree_util.tree_map(
+        lambda s, r: _fit_spec(ctx, tuple(s.shape), r.roles), shapes, roles)

@@ -1,0 +1,3 @@
+from repro.quant.quant import dequantize, quantize_symmetric
+
+__all__ = ["quantize_symmetric", "dequantize"]

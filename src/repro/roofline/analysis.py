@@ -1,0 +1,189 @@
+"""Roofline analysis: HLO collective parsing + the three-term model.
+
+Terms (seconds, per step, per chip — the compiled module is already the
+SPMD-partitioned *per-device* program, so its cost_analysis numbers are
+per-chip):
+
+  compute    = HLO_FLOPs_dev / peak_FLOP/s
+  memory     = HLO_bytes_dev / HBM_bw
+  collective = ring_bytes_dev / link_bw
+
+``collective_bytes`` is not in ``cost_analysis()``: we parse the
+post-optimization HLO text and apply ring-algorithm byte counts per op:
+
+  all-gather      out_bytes * (g-1)/g
+  reduce-scatter  out_bytes * (g-1)          (out is the scattered shard)
+  all-reduce      2 * out_bytes * (g-1)/g
+  all-to-all      out_bytes * (g-1)/g
+  collective-permute  out_bytes
+
+where g = replica-group size parsed from the op.  MODEL_FLOPS = 6·N·D
+(dense) or 6·N_active·D (MoE) gives the "useful compute" ratio that flags
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+from repro.roofline import hw
+
+__all__ = ["collective_bytes", "roofline_terms", "model_flops",
+           "CellRoofline", "summarize_cell"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}|replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[dims] literal in ``text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [num_groups, group_size]<=[N]
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{(.*?)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default when groups are implicit
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Per-device ring-model bytes + op counts, by collective kind."""
+    out: dict[str, Any] = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        op = None
+        for k in _COLLECTIVES:
+            # match "all-reduce(", "all-reduce-start(" but not "-done("
+            if f" {k}(" in stripped or f" {k}-start(" in stripped:
+                op = k
+                break
+        if op is None:
+            continue
+        eq = stripped.find("= ")
+        if eq < 0:
+            continue
+        opi = stripped.find(f" {op}")
+        result_type = stripped[eq + 2: opi]
+        size = _shape_bytes(result_type)
+        g = _group_size(stripped)
+        if g <= 1:
+            continue
+        if op == "all-gather":
+            b = size * (g - 1) // g
+        elif op == "reduce-scatter":
+            b = size * (g - 1)
+        elif op == "all-reduce":
+            b = 2 * size * (g - 1) // g
+        elif op == "all-to-all":
+            b = size * (g - 1) // g
+        else:  # collective-permute
+            b = size
+        out[op]["bytes"] += b
+        out[op]["count"] += 1
+    out["total_bytes"] = sum(out[k]["bytes"] for k in _COLLECTIVES)
+    out["total_count"] = sum(out[k]["count"] for k in _COLLECTIVES)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS for one step of the cell (see launch/params.py)."""
+    from repro.launch.params import model_flops_total  # lazy import
+
+    return model_flops_total(cfg, shape)
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    hlo_flops_dev: float
+    hlo_bytes_dev: float
+    coll_bytes_dev: float
+    model_flops_total: float
+    useful_ratio: float
+    peak_fraction: float
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} "
+                f"| {self.compute_s*1e3:.2f} | {self.memory_s*1e3:.2f} "
+                f"| {self.collective_s*1e3:.2f} | {self.bottleneck} "
+                f"| {self.useful_ratio:.2f} | {self.peak_fraction:.2f} |")
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float,
+                   coll_bytes_dev: float) -> tuple[float, float, float]:
+    return (flops_dev / hw.PEAK_FLOPS_BF16,
+            bytes_dev / hw.HBM_BW,
+            coll_bytes_dev / hw.ICI_BW)
+
+
+def summarize_cell(record: dict[str, Any]) -> CellRoofline:
+    """Build the roofline summary from one dry-run JSON record.
+
+    Prefers the trip-count-aware ``hlo_cost`` profile (roofline/hlo_cost.py)
+    — XLA's own cost_analysis counts while bodies once and is kept only as a
+    cross-reference."""
+    hc = record.get("hlo_cost")
+    if hc:
+        flops_dev = hc["flops"]
+        bytes_dev = hc["bytes"]
+        coll = hc["coll_bytes"]
+    else:
+        flops_dev = record["cost_analysis"].get("flops", 0.0)
+        bytes_dev = record["cost_analysis"].get("bytes accessed", 0.0)
+        coll = record["collectives"]["total_bytes"]
+    c, m, n = roofline_terms(flops_dev, bytes_dev, coll)
+    dominant = max((("compute", c), ("memory", m), ("collective", n)),
+                   key=lambda kv: kv[1])[0]
+    n_chips = record["n_devices"]
+    mf = record.get("model_flops_total", 0.0)
+    useful = mf / max(flops_dev * n_chips, 1.0)
+    # fraction of the compute roofline: useful model flops per chip-second
+    step_time = max(c, m, n)
+    peak_frac = (mf / n_chips / max(step_time, 1e-12)) / hw.PEAK_FLOPS_BF16
+    return CellRoofline(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        compute_s=c, memory_s=m, collective_s=n, bottleneck=dominant,
+        hlo_flops_dev=flops_dev, hlo_bytes_dev=bytes_dev,
+        coll_bytes_dev=coll, model_flops_total=mf,
+        useful_ratio=useful, peak_fraction=peak_frac)
+
+
+def load_records(paths: list[str]) -> list[dict[str, Any]]:
+    out = []
+    for p in paths:
+        with open(p) as f:
+            out.append(json.load(f))
+    return out

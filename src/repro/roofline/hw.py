@@ -1,0 +1,11 @@
+"""TPU v5e hardware constants for the roofline model (per chip)."""
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip, bf16 MXU
+PEAK_FLOPS_INT8 = 394e12      # int8 ops/s (2x bf16 on v5e)
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per ICI link (~, assignment constant)
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB VMEM per chip (v5e)
+HBM_BYTES = 16 * 1024**3      # 16 GiB HBM per chip
+
+CHIPS_PER_POD = 256

@@ -1,0 +1,93 @@
+"""Roofline report generator: dry-run JSONs -> markdown tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+      [--mesh single] [--tag ""] [--out experiments/roofline_single.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.roofline import hw
+from repro.roofline.analysis import summarize_cell
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| bottleneck | useful | peak-frac |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def load(dir_: str, mesh: str, tag: str, backend: str = "bns"):
+    recs = []
+    suffix = f"_{tag}.json" if tag else ".json"
+    for p in sorted(glob.glob(os.path.join(dir_, f"*_{mesh}_{backend}"
+                                           + suffix))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def fits(record) -> str:
+    mem = record.get("memory_analysis", {})
+    if "temp_size_in_bytes" not in mem:
+        return "?"
+    total = (mem.get("temp_size_in_bytes", 0)
+             + mem.get("argument_size_in_bytes", 0))
+    return "Y" if total <= hw.HBM_BYTES else f"N({total/2**30:.0f}G)"
+
+
+def render(recs, *, show_fits: bool = True) -> str:
+    lines = [HEADER if not show_fits else HEADER[:-1]
+             + " fits 16G | mem args+temp GiB |\n"
+             + "|---|---|---|---|---|---|---|---|---|---|---|"]
+    rows = []
+    for r in recs:
+        s = summarize_cell(r)
+        row = s.row()
+        if show_fits:
+            mem = r.get("memory_analysis", {})
+            total = (mem.get("temp_size_in_bytes", 0)
+                     + mem.get("argument_size_in_bytes", 0))
+            row = row + f" {fits(r)} | {total/2**30:.1f} |"
+        rows.append((s.arch, s.shape, row, s))
+    rows.sort()
+    lines += [r[2] for r in rows]
+    return "\n".join(lines), [r[3] for r in rows]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--backend", default="bns")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    recs = load(args.dir, args.mesh, args.tag, args.backend)
+    text, cells = render(recs)
+    print(text)
+    worst = sorted(cells, key=lambda c: c.peak_fraction)[:5]
+    print("\nworst peak-fraction cells:")
+    for c in worst:
+        print(f"  {c.arch} x {c.shape}: {c.peak_fraction:.3f} "
+              f"({c.bottleneck}-bound)")
+    coll = sorted(cells, key=lambda c: (c.collective_s
+                                        / max(max(c.compute_s, c.memory_s),
+                                              1e-12)), reverse=True)[:5]
+    print("most collective-bound cells:")
+    for c in coll:
+        print(f"  {c.arch} x {c.shape}: coll {c.collective_s*1e3:.1f} ms vs "
+              f"max(comp,mem) {max(c.compute_s, c.memory_s)*1e3:.1f} ms")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

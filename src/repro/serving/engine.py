@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+``ServingEngine`` owns the jitted prefill/decode steps for one model and
+drives request batches: right-padded prompts prefill in one pass, then tokens
+decode one step at a time with the stacked-layer KV/SSM caches updated in
+place (functionally).  Static batching with slot reuse — the engine refills
+finished slots between generate() calls; positions are uniform per batch
+(the decode-step contract), which matches throughput-oriented TPU serving.
+
+On the production mesh the same step functions lower with sharded caches —
+launch/dryrun.py compiles exactly these for the decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+__all__ = ["ServingEngine", "GenerateResult"]
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray          # (B, max_new) generated ids
+    prefill_logits: np.ndarray  # (B, vocab)
+    steps: int
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: Any, *, batch: int,
+                 s_max: int, cache_dtype=jnp.bfloat16):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.s_max = s_max
+        self.cache_dtype = cache_dtype
+        self._prefill = jax.jit(model.prefill, static_argnames=("s_max",))
+        self._decode = jax.jit(model.decode, donate_argnums=(2,))
+
+    def generate(self, batch_inputs: dict[str, Any], *, max_new: int,
+                 prompt_len: int | None = None,
+                 temperature: float = 0.0,
+                 key: jax.Array | None = None) -> GenerateResult:
+        """Prefill ``batch_inputs`` then decode ``max_new`` tokens.
+
+        ``prompt_len``: position of the first generated token (defaults to
+        the prompt length inferred from the inputs).
+        """
+        logits, cache = self._prefill(self.params, batch_inputs,
+                                      s_max=self.s_max)
+        if prompt_len is None:
+            if "tokens" in batch_inputs:
+                prompt_len = batch_inputs["tokens"].shape[1]
+                if "patches" in batch_inputs:
+                    prompt_len += batch_inputs["patches"].shape[1]
+            else:
+                prompt_len = 0
+        outs = []
+        tok = self._sample(logits, temperature, key, 0)
+        for i in range(max_new):
+            outs.append(np.asarray(tok[:, 0]))
+            pos = jnp.int32(prompt_len + i)
+            logits, cache = self._decode(self.params, tok, cache, pos)
+            tok = self._sample(logits, temperature, key, i + 1)
+        return GenerateResult(tokens=np.stack(outs, axis=1),
+                              prefill_logits=np.asarray(logits),
+                              steps=max_new)
+
+    @staticmethod
+    def _sample(logits: jax.Array, temperature: float,
+                key: jax.Array | None, step: int) -> jax.Array:
+        if temperature <= 0.0 or key is None:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            k = jax.random.fold_in(key, step)
+            tok = jax.random.categorical(k, logits / temperature, axis=-1)
+        return tok[:, None].astype(jnp.int32)

@@ -1,0 +1,67 @@
+"""Request scheduler: packs a request queue into fixed-size engine batches.
+
+Slot-reuse ("continuous batching lite"): the engine's decode step is
+uniform-position static batching (the TPU-throughput layout the dry-run
+compiles), so admission happens at batch boundaries — the scheduler packs
+up to ``batch`` requests per round, pads short prompts to the round's
+maximum with a pad token, decodes until every member hits EOS or
+``max_new``, then refills freed slots from the queue.  Per-request results
+keep their own lengths; padded positions are masked out of the returned
+token streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.serving.engine import ServingEngine
+
+__all__ = ["Request", "RequestScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (prompt_len,) int32
+    max_new: int
+    eos: int | None = None
+
+    result: np.ndarray | None = None   # filled by the scheduler
+
+
+class RequestScheduler:
+    def __init__(self, engine: ServingEngine, *, pad_token: int = 0):
+        self.engine = engine
+        self.pad = pad_token
+
+    def serve(self, requests: Sequence[Request]) -> list[Request]:
+        """Serve all requests; returns them with ``result`` filled."""
+        queue = list(requests)
+        done: list[Request] = []
+        B = self.engine.batch
+        while queue:
+            round_reqs = queue[:B]
+            queue = queue[B:]
+            done += self._run_round(round_reqs)
+        return sorted(done, key=lambda r: r.rid)
+
+    def _run_round(self, reqs: list[Request]) -> list[Request]:
+        B = self.engine.batch
+        plen = max(len(r.tokens) for r in reqs)
+        max_new = max(r.max_new for r in reqs)
+        prompts = np.full((B, plen), self.pad, np.int32)
+        for i, r in enumerate(reqs):
+            # right-align so the final prompt token sits at position plen-1
+            prompts[i, plen - len(r.tokens):] = r.tokens
+        out = self.engine.generate({"tokens": prompts}, max_new=max_new,
+                                   prompt_len=plen)
+        for i, r in enumerate(reqs):
+            toks = out.tokens[i, : r.max_new]
+            if r.eos is not None:
+                hits = np.nonzero(toks == r.eos)[0]
+                if hits.size:
+                    toks = toks[: hits[0] + 1]
+            r.result = toks
+        return reqs

@@ -1,0 +1,118 @@
+"""Fault-tolerant training runner: checkpoint-restart, heartbeats, elastic
+resume, simulated failure injection.
+
+On a real multi-pod fleet the failure domain is a host process; here the same
+control flow is exercised in-process so it is *testable on CPU*:
+
+* every ``ckpt_every`` steps the full (params, opt_state, data-step) state is
+  checkpointed atomically (train/checkpoint.py);
+* a heartbeat file is touched each step — an external supervisor (or the
+  included ``run_with_restarts`` harness) detects stalls and relaunches;
+* on (re)start the runner restores the latest checkpoint and *recomputes the
+  data stream position from the restored step* — the deterministic pipeline
+  (data/tokens.py) makes every batch reproducible, so a replacement host
+  continues byte-identically (straggler mitigation: any slow host can be
+  replaced without coordination);
+* ``failure_at`` injects a crash at a chosen step to test the path;
+* elastic resume: checkpoints are host-numpy and mesh-agnostic — restoring
+  onto a different device count just means new shardings at ``device_put``
+  (tests/test_ft.py resumes a 2-host-sliced run as 1 host).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint
+
+__all__ = ["FtConfig", "SimulatedFailure", "run_training", "run_with_restarts"]
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FtConfig:
+    ckpt_dir: str
+    total_steps: int
+    ckpt_every: int = 50
+    keep: int = 3
+    heartbeat_path: str | None = None
+    failure_at: int | None = None     # inject a crash *before* this step runs
+    log_every: int = 10
+    log_fn: Callable[[str], None] = print
+
+
+def _heartbeat(cfg: FtConfig, step: int):
+    if cfg.heartbeat_path:
+        with open(cfg.heartbeat_path, "w") as f:
+            f.write(f"{step} {time.time()}\n")
+
+
+def run_training(
+    *,
+    init_state: Callable[[], dict[str, Any]],
+    train_step: Callable[..., tuple[Any, Any, dict]],
+    batch_at: Callable[[int], dict[str, np.ndarray]],
+    cfg: FtConfig,
+) -> dict[str, Any]:
+    """Run (or resume) training to ``total_steps``.
+
+    ``init_state() -> {"params", "opt_state"}`` builds fresh state;
+    ``batch_at(step)`` is the deterministic data pipeline.
+    Returns the final ``{"params", "opt_state", "step", "history"}``.
+    """
+    start = checkpoint.latest_step(cfg.ckpt_dir)
+    if start is not None:
+        template = init_state()
+        state = checkpoint.restore(cfg.ckpt_dir, template, start)
+        cfg.log_fn(f"[ft] restored checkpoint at step {start}")
+        step0 = start
+    else:
+        state = init_state()
+        step0 = 0
+
+    params, opt_state = state["params"], state["opt_state"]
+    history: list[float] = []
+    for step in range(step0, cfg.total_steps):
+        if cfg.failure_at is not None and step == cfg.failure_at:
+            raise SimulatedFailure(f"injected failure before step {step}")
+        batch = batch_at(step)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        _heartbeat(cfg, step)
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if step % cfg.log_every == 0:
+            cfg.log_fn(f"[train] step={step} loss={loss:.4f} "
+                       f"lr={float(metrics['lr']):.2e}")
+        if (step + 1) % cfg.ckpt_every == 0 or step + 1 == cfg.total_steps:
+            checkpoint.save(cfg.ckpt_dir, step + 1,
+                            {"params": params, "opt_state": opt_state},
+                            keep=cfg.keep)
+    return {"params": params, "opt_state": opt_state,
+            "step": cfg.total_steps, "history": history}
+
+
+def run_with_restarts(run: Callable[[], dict[str, Any]],
+                      *, max_restarts: int = 3,
+                      log_fn: Callable[[str], None] = print) -> dict[str, Any]:
+    """Supervisor loop: relaunch ``run`` on failure, up to ``max_restarts``.
+
+    ``run`` must be resumable (i.e. built on :func:`run_training`, whose
+    checkpoint-restore makes each relaunch continue, not start over).
+    """
+    attempts = 0
+    while True:
+        try:
+            return run()
+        except SimulatedFailure as e:   # real deployments catch broader errors
+            attempts += 1
+            log_fn(f"[ft] failure: {e}; restart {attempts}/{max_restarts}")
+            if attempts > max_restarts:
+                raise

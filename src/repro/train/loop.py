@@ -1,0 +1,70 @@
+"""Train-step factory: CE loss, microbatched gradient accumulation, metrics.
+
+``make_train_step(model, opt_cfg, n_micro)`` returns a pure
+``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``
+suitable for ``jax.jit`` with sharded ``in_shardings``.  Gradient
+accumulation runs as a ``lax.scan`` over microbatches so only one
+microbatch's activations are ever live — together with per-layer remat this
+is what bounds activation memory on the big cells (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.train.optimizer import OptConfig, adamw_update
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def _split_micro(batch: dict[str, jax.Array], n: int) -> dict[str, jax.Array]:
+    """(B, ...) -> (n, B/n, ...) per leaf."""
+    def f(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree_util.tree_map(f, batch)
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig,
+                    n_micro: int = 1) -> Callable:
+    grad_fn = jax.value_and_grad(model.loss, has_aux=True)
+    accum_dtype = jnp.dtype(model.cfg.grad_accum_dtype)
+
+    def train_step(params: Any, opt_state: Any,
+                   batch: dict[str, jax.Array]):
+        if n_micro <= 1:
+            (loss, ce), grads = grad_fn(params, batch)
+        else:
+            micro = _split_micro(batch, n_micro)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def body(acc, mb):
+                g_acc, l_acc, c_acc = acc
+                (l, c), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: (a + b.astype(accum_dtype)
+                                  ).astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + l, c_acc + c), None
+
+            (gsum, lsum, csum), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0), jnp.float32(0)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+            loss, ce = lsum / n_micro, csum / n_micro
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "ce": ce, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params: Any, batch: dict[str, jax.Array]):
+        loss, ce = model.loss(params, batch)
+        return {"loss": loss, "ce": ce}
+    return eval_step

@@ -1,0 +1,93 @@
+"""AdamW + cosine schedule + global-norm clipping, as pure pytree functions.
+
+No optax dependency: state is a plain pytree ``{"m", "v", "step"}`` whose
+leaves mirror the parameters, so parameter PartitionSpecs apply verbatim to
+the optimizer state (parallel/sharding.py) and checkpointing is uniform.
+Moment dtype is configurable (``bfloat16`` for the 314B-param grok config —
+f32 moments alone would blow the 16 GiB/chip budget; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "lr_at",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to ``min_lr_ratio * peak``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> dict[str, Any]:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(params: Any, grads: Any, state: dict[str, Any],
+                 cfg: OptConfig) -> tuple[Any, dict[str, Any], dict[str, Any]]:
+    """One AdamW step.  Returns (params', state', metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p32 = p.astype(jnp.float32) - lr * (delta + decay)
+        return p32.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    params2 = jax.tree_util.tree_map(lambda t: t[0], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+    m2 = jax.tree_util.tree_map(lambda t: t[1], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    v2 = jax.tree_util.tree_map(lambda t: t[2], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return params2, {"m": m2, "v": v2, "step": step}, metrics

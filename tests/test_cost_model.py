@@ -1,0 +1,95 @@
+"""Tests for the paper's delay/energy model (Table I, Eq. 3, Table II)."""
+import pytest
+
+from repro.core import cost_model as cm
+
+
+def test_table1_values_as_published():
+    assert cm.TABLE_I["sd_adder"][64] == 0.21
+    assert cm.TABLE_I["bns_multiplier"][32] == 1.50
+    assert cm.TABLE_I["rns_module_adder"][24] == 0.37
+    assert cm.TABLE_I["sd_module_multiplier"][16] == 0.43
+
+
+def test_sd_adder_constant_across_width():
+    """The paper's headline structural fact."""
+    vals = {p: cm.delays_for("SD", p).t_add for p in cm.PRECISIONS}
+    assert len(set(vals.values())) == 1
+    vals = {p: cm.delays_for("SD-RNS", p).t_add for p in cm.PRECISIONS}
+    assert len(set(vals.values())) == 1
+
+
+@pytest.mark.parametrize("precision", sorted(cm.PRECISIONS))
+def test_sdrns_always_beats_rns(precision):
+    """Paper: 'the delay of SD-RNS is consistently lower than RNS'."""
+    for x, y in [(0, 1), (1, 0), (10, 10), (100, 5), (5, 100), (1e4, 1e4)]:
+        assert (cm.eq3_total("SD-RNS", precision, x, y)
+                < cm.eq3_total("RNS", precision, x, y) + 1e-9)
+
+
+def test_eq3_structure():
+    d = cm.delays_for("BNS", 32)
+    assert cm.eq3_total("BNS", 32, 7, 3) == pytest.approx(
+        d.t_fc + 7 * d.t_add + 3 * d.t_mul + d.t_rc
+    )
+    assert d.t_fc == 0.0 and d.t_rc == 0.0  # BNS needs no conversions
+
+
+def test_dnn_speedup_band():
+    """Paper claims 1.27x over RNS / 2.25x over BNS on AlexNet/VGG16.
+
+    With Table I + Eq. 3 on a balanced MAC mix (1 add per mul, conversions
+    amortized) the model lands at 1.30-1.33x / 1.98-2.14x across P=24..64:
+    RNS claim within 5%, BNS claim within ~12% (the 2-page paper omits its
+    exact conversion accounting — see EXPERIMENTS.md §Paper-validation).
+    """
+    x = y = 1e6
+    rns_ratios = [cm.speedup("RNS", "SD-RNS", p, x, y) for p in (24, 32, 64)]
+    bns_ratios = [cm.speedup("BNS", "SD-RNS", p, x, y) for p in (24, 32, 64)]
+    assert all(1.25 <= r <= 1.60 for r in rns_ratios)
+    assert all(1.95 <= r <= 2.25 for r in bns_ratios)
+    # closest points to the published numbers
+    assert min(abs(r - 1.27) for r in rns_ratios) < 0.07
+    assert min(abs(r - 2.25) for r in bns_ratios) < 0.15
+
+
+def test_energy_headline():
+    """-60% energy vs BNS for sequential add+mul (calibrated at P=32)."""
+    red = cm.energy_reduction_vs("BNS", "SD-RNS", 32, 1e6, 1e6)
+    assert red == pytest.approx(0.60, abs=0.01)
+
+
+def test_selection_small_workloads_prefer_sd():
+    """Few ops: RNS conversion overhead dominates -> SD wins (Table II col Zero)."""
+    for x in (8, 128, 16384):
+        best = cm.select_number_system(x, 0, 32)
+        assert best[0] == "SD"
+
+
+def test_selection_mul_heavy_prefers_sdrns():
+    for y in (128, 16384):
+        best = cm.select_number_system(0, y, 32)
+        assert best[0] == "SD-RNS"
+
+
+def test_table2_agreement():
+    """Reproduce Table II's matrix; require high cell agreement."""
+    ours = cm.selection_matrix(32)
+    agree, total = 0, 0
+    mism = []
+    for key, published in cm.PAPER_TABLE_II.items():
+        total += 1
+        got = ours[key]
+        pub_set = set(published.split("/")) if published != "-" else set()
+        got_set = set(got.split("/")) if got != "-" else set()
+        # agreement = the paper's primary pick is in our ranked list and
+        # our primary pick is in the paper's cell
+        if published == "-" or got == "-":
+            ok = published == got
+        else:
+            ok = (got.split("/")[0] in pub_set) or (published.split("/")[0]
+                                                    in got_set)
+        agree += ok
+        if not ok:
+            mism.append((key, published, got))
+    assert agree / total >= 0.8, mism

@@ -1,0 +1,103 @@
+"""The trip-count-aware HLO cost model vs known-workload ground truth.
+
+This parser feeds the roofline (EXPERIMENTS.md §Roofline); these tests pin
+its core behaviours on modules compiled in-process: exact dot flops through
+scan loops, while-trip extraction, and byte accounting sanity."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_plain_matmul_flops_exact():
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    txt = _compile_text(lambda a, b: a @ b, x, w)
+    c = analyze_hlo(txt)
+    assert c.flops == 2 * 64 * 128 * 32
+    assert not c.warnings
+
+
+def test_scan_multiplies_by_trip_count():
+    L, M, K = 7, 16, 24
+
+    def fn(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, ws)
+        return c
+
+    ws = jax.ShapeDtypeStruct((L, K, K), jnp.float32)
+    x = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    txt = _compile_text(fn, ws, x)
+    c = analyze_hlo(txt)
+    assert c.flops == L * 2 * M * K * K
+    assert (sorted(t for _, t in c.whiles) == [L]
+            or L in [t for _, t in c.whiles])
+
+
+def test_nested_scan_trip_products():
+    Lo, Li, K = 3, 5, 8
+
+    def fn(ws, x):
+        def outer(c, wrow):
+            def inner(ci, w):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, wrow)
+            return c2, None
+        c, _ = jax.lax.scan(outer, x, ws)
+        return c
+
+    ws = jax.ShapeDtypeStruct((Lo, Li, K, K), jnp.float32)
+    x = jax.ShapeDtypeStruct((K, K), jnp.float32)
+    txt = _compile_text(fn, ws, x)
+    c = analyze_hlo(txt)
+    assert c.flops == Lo * Li * 2 * K * K * K
+
+
+def test_bytes_scale_with_loop():
+    K = 32
+
+    def mk(L):
+        def fn(ws, x):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            c, _ = jax.lax.scan(body, x, ws)
+            return c
+        ws = jax.ShapeDtypeStruct((L, K, K), jnp.float32)
+        x = jax.ShapeDtypeStruct((K, K), jnp.float32)
+        return analyze_hlo(_compile_text(fn, ws, x))
+
+    c2, c8 = mk(2), mk(8)
+    # 4x the iterations -> roughly 4x the loop-body traffic
+    assert c8.bytes > 2.5 * c2.bytes
+
+
+def test_remat_increases_flops():
+    L, K = 4, 16
+
+    def loss(ws, x, remat):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        b = jax.checkpoint(body) if remat else body
+
+        def f(ws, x):
+            c, _ = jax.lax.scan(b, x, ws)
+            return jnp.sum(c)
+        return jax.grad(f)(ws, x)
+
+    ws = jax.ShapeDtypeStruct((L, K, K), jnp.float32)
+    x = jax.ShapeDtypeStruct((K, K), jnp.float32)
+    t_plain = analyze_hlo(_compile_text(
+        lambda w, x: loss(w, x, False), ws, x))
+    t_remat = analyze_hlo(_compile_text(
+        lambda w, x: loss(w, x, True), ws, x))
+    # remat recomputes the forward inside the backward: strictly more flops
+    assert t_remat.flops > t_plain.flops

@@ -1,0 +1,101 @@
+"""Property tests for moduli sets and residue conversions."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.moduli import (
+    CRT40, P16, P21, P24, P33, P64, ModuliSet,
+    mod_pow2, mod_pow2_minus1, mod_pow2_plus1, modinv, special_set,
+)
+
+SETS = [P16, P21, P24, P33, CRT40]
+
+
+def test_special_set_structure():
+    s = special_set(7)
+    assert s.moduli == (127, 128, 129)
+    assert [k for k, _ in s.kinds] == ["pow2m1", "pow2", "pow2p1"]
+    assert [n for _, n in s.kinds] == [7, 7, 7]
+    assert s.M == 127 * 128 * 129
+
+
+def test_coprimality_enforced():
+    with pytest.raises(ValueError):
+        ModuliSet.make((6, 9))
+
+
+def test_modinv():
+    for a, m in [(3, 7), (127, 128), (128, 129), (255, 257)]:
+        assert (modinv(a, m) * a) % m == 1
+
+
+@given(st.integers(min_value=-(2**30), max_value=2**30),
+       st.integers(min_value=5, max_value=15))
+@settings(max_examples=300, deadline=None)
+def test_special_mod_reductions(x, n):
+    xv = jnp.int32(x)
+    assert int(mod_pow2(xv, n)) == x % (1 << n)
+    assert int(mod_pow2_minus1(xv, n)) == x % ((1 << n) - 1)
+    assert int(mod_pow2_plus1(xv, n)) == x % ((1 << n) + 1)
+
+
+@pytest.mark.parametrize("mset", SETS, ids=lambda s: str(s.moduli))
+@given(x=st.integers(min_value=-(2**29), max_value=2**29))
+@settings(max_examples=150, deadline=None)
+def test_roundtrip_jit(mset, x):
+    # bound |x| by both the int32 rule and the set's own half-range
+    x = x % (min(mset.half_range, 2**29) + 1)
+    res = mset.to_residues(jnp.int32(x))
+    assert res.shape == (mset.num_channels,)
+    back = mset.from_residues(res)
+    assert int(back) == x, (x, np.asarray(res))
+
+
+@pytest.mark.parametrize("mset", SETS, ids=lambda s: str(s.moduli))
+@given(x=st.integers(min_value=-(2**28), max_value=2**28))
+@settings(max_examples=100, deadline=None)
+def test_roundtrip_negative(mset, x):
+    x = -(abs(x) % (min(mset.half_range, 2**28) + 1))
+    back = mset.from_residues(mset.to_residues(jnp.int32(x)))
+    assert int(back) == x
+
+
+def test_roundtrip_host_p64():
+    """The paper's P=64 row: exact host conversions beyond int64."""
+    rng = np.random.default_rng(0)
+    xs = [int(v) for v in rng.integers(-(2**60), 2**60, size=64)]
+    res = P64.to_residues_host(xs)
+    back = P64.from_residues_host(res)
+    assert [int(v) for v in back] == xs
+
+
+def test_centered_residue_bounds():
+    rng = np.random.default_rng(1)
+    xs = jnp.asarray(rng.integers(-(2**20), 2**20, size=4096), jnp.int32)
+    res = P21.to_residues(xs)
+    for c, m in enumerate(P21.moduli):
+        assert int(jnp.max(jnp.abs(res[c]))) <= m // 2
+
+
+@pytest.mark.parametrize("mset", SETS, ids=lambda s: str(s.moduli))
+def test_ring_homomorphism(mset):
+    """add/mul in residue space == integer ops mod M (vectorized)."""
+    rng = np.random.default_rng(2)
+    bound = min(mset.half_range // 2, 2**14)  # so |a+b| stays in range
+    a = rng.integers(-bound, bound, size=512)
+    b = rng.integers(-bound, bound, size=512)
+    ra = mset.to_residues(jnp.asarray(a, jnp.int32))
+    rb = mset.to_residues(jnp.asarray(b, jnp.int32))
+    s = mset.from_residues(mset.add(ra, rb))
+    p = mset.from_residues(mset.mul(ra, rb))
+    np.testing.assert_array_equal(np.asarray(s), a + b)
+    # products bounded by 2**28 < half_range only for big sets; reduce scale
+    small = min(mset.half_range, 2**29)
+    mask = np.abs(a * b) <= small
+    np.testing.assert_array_equal(np.asarray(p)[mask], (a * b)[mask])
+
+
+def test_lazy_capacity():
+    assert P21.lazy_add_capacity() >= 2**18
+    assert P16.lazy_add_capacity() >= 2**22

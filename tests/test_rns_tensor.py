@@ -1,0 +1,62 @@
+"""RnsTensor: pytree behaviour, ring ops, lazy matmul semantics."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import P16, P21, RnsTensor
+
+
+def test_pytree_roundtrip_and_jit():
+    x = RnsTensor.from_int(jnp.arange(-8, 8, dtype=jnp.int32), P21)
+    leaves, treedef = jax.tree_util.tree_flatten(x)
+    assert len(leaves) == 1
+    y = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert y.mset.moduli == P21.moduli
+
+    @jax.jit
+    def f(t: RnsTensor) -> jax.Array:
+        return (t + t).to_int()
+
+    np.testing.assert_array_equal(np.asarray(f(x)), 2 * np.arange(-8, 8))
+
+
+def test_ring_ops():
+    rng = np.random.default_rng(0)
+    a = rng.integers(-900, 900, size=(4, 8))
+    b = rng.integers(-900, 900, size=(4, 8))
+    ta = RnsTensor.from_int(jnp.asarray(a, jnp.int32), P21)
+    tb = RnsTensor.from_int(jnp.asarray(b, jnp.int32), P21)
+    np.testing.assert_array_equal(np.asarray((ta + tb).to_int()), a + b)
+    np.testing.assert_array_equal(np.asarray((ta - tb).to_int()), a - b)
+    np.testing.assert_array_equal(np.asarray((ta * tb).to_int()), a * b)
+    np.testing.assert_array_equal(np.asarray((-ta).to_int()), -a)
+    np.testing.assert_array_equal(np.asarray(ta.scale(3).to_int()), 3 * a)
+
+
+def test_matmul_exact_vs_int_oracle():
+    rng = np.random.default_rng(1)
+    a = rng.integers(-7, 8, size=(16, 64))
+    b = rng.integers(-7, 8, size=(64, 24))
+    ta = RnsTensor.from_int(jnp.asarray(a, jnp.int32), P21)
+    tb = RnsTensor.from_int(jnp.asarray(b, jnp.int32), P21)
+    out = ta.matmul(tb)
+    np.testing.assert_array_equal(np.asarray(out.to_int()), a @ b)
+
+
+def test_lazy_headroom_and_flush():
+    """lazy_add defers re-centering; flush recovers canonical form."""
+    a = RnsTensor.from_int(jnp.int32(500), P21)
+    acc = a
+    for _ in range(50):
+        acc = acc.lazy_add(a)
+    assert int(jnp.max(jnp.abs(acc.residues))) > max(P21.moduli) // 2
+    assert int(acc.flush().to_int()) == 500 * 51
+
+
+def test_matmul_capacity_guard():
+    big_k = P21.lazy_add_capacity() + 1
+    ta = RnsTensor(jnp.zeros((3, 2, big_k), jnp.int32), P21)
+    tb = RnsTensor(jnp.zeros((3, big_k, 2), jnp.int32), P21)
+    with pytest.raises(ValueError):
+        ta.matmul(tb)

@@ -1,0 +1,151 @@
+"""Request-scheduler behaviour + extra property tests (quant, rope, GQA)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.models.layers import rope
+from repro.quant.quant import dequantize, qmax_for_bits, quantize_symmetric
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Request, RequestScheduler
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+
+def _engine():
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(),
+                              n_layers=1, vocab=128,
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServingEngine(model, params, batch=3, s_max=40), cfg
+
+
+def test_scheduler_serves_more_requests_than_batch():
+    eng, cfg = _engine()
+    sched = RequestScheduler(eng)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(1, cfg.vocab, 8).astype(np.int32),
+                    max_new=6)
+            for i in range(7)]                       # 7 requests, batch 3
+    out = sched.serve(reqs)
+    assert [r.rid for r in out] == list(range(7))
+    for r in out:
+        assert r.result is not None and len(r.result) == 6
+        assert r.result.min() >= 0 and r.result.max() < cfg.vocab
+
+
+def test_scheduler_eos_truncates():
+    eng, cfg = _engine()
+    sched = RequestScheduler(eng)
+    toks = np.arange(1, 9, dtype=np.int32)
+    # run once to learn what the model emits, then use its first token as EOS
+    probe = sched.serve([Request(rid=0, tokens=toks, max_new=4)])[0]
+    eos = int(probe.result[0])
+    out = sched.serve([Request(rid=1, tokens=toks, max_new=4, eos=eos)])[0]
+    assert len(out.result) == 1 and int(out.result[0]) == eos
+
+
+def test_scheduler_matches_direct_engine():
+    """A scheduled request equals a direct engine call with the same row."""
+    eng, cfg = _engine()
+    sched = RequestScheduler(eng)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(1, cfg.vocab, 8).astype(np.int32)
+    out = sched.serve([Request(rid=0, tokens=toks, max_new=5)
+                       for _ in range(3)])
+    direct = eng.generate(
+        {"tokens": np.repeat(toks[None], 3, axis=0)}, max_new=5)
+    for r in out:
+        np.testing.assert_array_equal(r.result, direct.tokens[0, :5])
+
+
+# ---------------------------------------------------------------------------
+# Quantization properties
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=40)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_quant_roundtrip_error_bound(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 3, (16, 8)).astype(np.float32))
+    q, scale = quantize_symmetric(x, bits, axis=-1)
+    assert int(jnp.max(jnp.abs(q))) <= qmax_for_bits(bits)
+    err = jnp.abs(dequantize(q, scale) - x)
+    # error bounded by half a step per row
+    assert bool(jnp.all(err <= scale * 0.5 + 1e-6))
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 1000))
+def test_quant_scale_invariance(seed):
+    """Quantized codes are invariant to positive per-tensor rescaling."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (8, 8)).astype(np.float32))
+    q1, _ = quantize_symmetric(x, 4, axis=None)
+    q2, _ = quantize_symmetric(x * 7.5, 4, axis=None)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+# ---------------------------------------------------------------------------
+# RoPE / attention properties
+# ---------------------------------------------------------------------------
+
+
+def test_rope_preserves_norm():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 16, 4, 32))
+    pos = jnp.arange(16)
+    y = rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<rope(q,p), rope(k,p)> depends only on the p-offset (shift both)."""
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 32))
+
+    def score(pq, pk):
+        rq = rope(q, jnp.array([pq]))
+        rk = rope(k, jnp.array([pk]))
+        return float(jnp.sum(rq * rk))
+
+    assert abs(score(3, 7) - score(10, 14)) < 1e-4
+    assert abs(score(0, 5) - score(20, 25)) < 1e-4
+
+
+def test_gqa_repeat_equals_grouped_einsum():
+    """The merged-head (repeat) GQA layout computes the same attention as
+    the factored (kv, group) einsum formulation."""
+    from repro.models.attention import _core
+
+    key = jax.random.PRNGKey(2)
+    B, S, H, Kv, hd = 2, 8, 8, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Kv, hd))
+    pos = jnp.arange(S)
+    out = _core(q, k, v, causal=True, q_pos=pos, kv_pos=pos)
+
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / (hd ** 0.5)
+    mask = (pos[None, :] <= pos[:, None])[None, None, None]
+    probs = jax.nn.softmax(jnp.where(mask, scores, -1e30), axis=-1)
+    ref = jnp.einsum("bkgst,btkh->bskgh", probs, v).reshape(B, S, H * hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,70 @@
+"""Property tests for the signed-digit redundant layer (paper Eq. 1)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sd
+
+
+@given(st.integers(min_value=-(2**15) + 1, max_value=2**15 - 1))
+@settings(max_examples=200, deadline=None)
+def test_encode_decode(x):
+    d = sd.from_int(jnp.int32(x), 16)
+    assert d.shape == (16,)
+    assert int(jnp.max(jnp.abs(d))) <= 1
+    assert int(sd.to_int(d)) == x
+
+
+@given(st.integers(min_value=-(2**14), max_value=2**14),
+       st.integers(min_value=-(2**14), max_value=2**14))
+@settings(max_examples=300, deadline=None)
+def test_carry_free_add_exact(a, b):
+    da = sd.from_int(jnp.int32(a), 16)
+    db = sd.from_int(jnp.int32(b), 16)
+    s = sd.carry_free_add(da, db)
+    assert s.shape == (17,)
+    # closure: output digits stay in {-1, 0, 1} — THE carry-free property
+    assert int(jnp.max(jnp.abs(s))) <= 1
+    assert int(sd.to_int(s)) == a + b
+
+
+@given(st.lists(st.integers(min_value=-(2**10), max_value=2**10),
+                min_size=2, max_size=9))
+@settings(max_examples=100, deadline=None)
+def test_add_tree(xs):
+    digs = jnp.stack([sd.from_int(jnp.int32(v), 14) for v in xs])
+    total = sd.add_tree(digs)
+    assert int(jnp.max(jnp.abs(total))) <= 1
+    assert int(sd.to_int(total)) == sum(xs)
+
+
+def test_add_closure_on_redundant_inputs():
+    """Adding *already redundant* digit vectors (not fresh encodings) must
+    also stay closed — chained additions is the whole point."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-1, 2, size=(512, 16)), jnp.int8)
+    y = jnp.asarray(rng.integers(-1, 2, size=(512, 16)), jnp.int8)
+    s = sd.carry_free_add(x, y)
+    assert int(jnp.max(jnp.abs(s))) <= 1
+    np.testing.assert_array_equal(
+        np.asarray(sd.to_int(s)), np.asarray(sd.to_int(x) + sd.to_int(y))
+    )
+
+
+def test_negate_and_shift():
+    d = sd.from_int(jnp.int32(1234), 16)
+    assert int(sd.to_int(sd.negate(d))) == -1234
+    assert int(sd.to_int(sd.shift_left(d, 3))) == 1234 * 8
+
+
+def test_constant_depth_structure():
+    """The adder is one fused elementwise pass: verify vectorized shape
+    handling (batch of tensors adds in the same single pass)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-1, 2, size=(4, 8, 32)), jnp.int8)
+    y = jnp.asarray(rng.integers(-1, 2, size=(4, 8, 32)), jnp.int8)
+    s = sd.carry_free_add(x, y)
+    assert s.shape == (4, 8, 33)
+    np.testing.assert_array_equal(
+        np.asarray(sd.to_int(s)), np.asarray(sd.to_int(x) + sd.to_int(y))
+    )

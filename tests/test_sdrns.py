@@ -1,0 +1,101 @@
+"""Property tests for SD-RNS: carry-free modular ops (paper §II, Eq. 2)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sd, sdrns
+from repro.core.moduli import P16, P21, P24, special_set
+
+KINDS = [("pow2m1", 6), ("pow2", 6), ("pow2p1", 6),
+         ("pow2m1", 8), ("pow2", 8), ("pow2p1", 8)]
+
+
+def _modulus(kind, n):
+    return {"pow2m1": (1 << n) - 1, "pow2": 1 << n, "pow2p1": (1 << n) + 1}[kind]
+
+
+@pytest.mark.parametrize("kind,n", KINDS)
+@given(a=st.integers(min_value=-(2**7), max_value=2**7),
+       b=st.integers(min_value=-(2**7), max_value=2**7))
+@settings(max_examples=150, deadline=None)
+def test_modular_add(kind, n, a, b):
+    m = _modulus(kind, n)
+    a, b = a % m, b % m
+    da = sd.from_int(jnp.int32(a if a <= m // 2 else a - m), n)
+    db = sd.from_int(jnp.int32(b if b <= m // 2 else b - m), n)
+    s = sdrns.modular_add(da, db, kind)
+    assert s.shape == (n,)
+    assert int(jnp.max(jnp.abs(s))) <= 1  # carry-free closure end-around
+    got = int(sdrns.decode_residue(s, kind, n))
+    want = (a + b) % m
+    want = want - m if want > m // 2 else want
+    assert got == want
+
+
+@pytest.mark.parametrize("kind,n", KINDS)
+@given(x=st.integers(min_value=0, max_value=2**8), a=st.integers(0, 20))
+@settings(max_examples=150, deadline=None)
+def test_rotation_rule_eq2(kind, n, x, a):
+    """Eq. 2: <2^a * y>_m is a digit rotation."""
+    m = _modulus(kind, n)
+    x = x % m
+    d = sd.from_int(jnp.int32(x if x <= m // 2 else x - m), n)
+    rot = sdrns.rotate_pp(d, a, kind)
+    got = int(sdrns.decode_residue(rot, kind, n)) % m
+    assert got == (x * pow(2, a, m)) % m
+
+
+@pytest.mark.parametrize("kind,n", KINDS)
+@given(a=st.integers(min_value=-(2**7), max_value=2**7),
+       b=st.integers(min_value=-(2**7), max_value=2**7))
+@settings(max_examples=60, deadline=None)
+def test_modular_mul(kind, n, a, b):
+    m = _modulus(kind, n)
+    a, b = a % m, b % m
+    da = sd.from_int(jnp.int32(a if a <= m // 2 else a - m), n)
+    db = sd.from_int(jnp.int32(b if b <= m // 2 else b - m), n)
+    p = sdrns.modular_mul(da, db, kind)
+    assert int(jnp.max(jnp.abs(p))) <= 1
+    got = int(sdrns.decode_residue(p, kind, n)) % m
+    assert got == (a * b) % m
+
+
+@pytest.mark.parametrize("mset", [P16, P21, P24], ids=lambda s: str(s.moduli))
+@given(a=st.integers(min_value=-4000, max_value=4000),
+       b=st.integers(min_value=-4000, max_value=4000))
+@settings(max_examples=40, deadline=None)
+def test_sdrns_number_end_to_end(mset, a, b):
+    """Whole pipeline: encode -> carry-free ops -> decode == integer ops."""
+    bound = min(mset.half_range // 2, 4000)
+    a, b = a % (bound + 1), b % (bound + 1)
+    xa = sdrns.SdRnsNumber.from_int(jnp.int32(a), mset)
+    xb = sdrns.SdRnsNumber.from_int(jnp.int32(b), mset)
+    assert int((xa + xb).to_int()) == a + b
+    if abs(a * b) <= mset.half_range:
+        assert int((xa * xb).to_int()) == a * b
+    assert int((-xa).to_int()) == -a
+
+
+def test_vectorized_batch():
+    """SD-RNS ops are tensor ops: a (64,)-batch folds through in one pass."""
+    mset = P21
+    rng = np.random.default_rng(3)
+    a = rng.integers(-500, 500, size=64)
+    b = rng.integers(-500, 500, size=64)
+    xa = sdrns.SdRnsNumber.from_int(jnp.asarray(a, jnp.int32), mset)
+    xb = sdrns.SdRnsNumber.from_int(jnp.asarray(b, jnp.int32), mset)
+    np.testing.assert_array_equal(np.asarray((xa + xb).to_int()), a + b)
+    np.testing.assert_array_equal(np.asarray((xa * xb).to_int()), a * b)
+
+
+def test_chained_additions_stay_closed():
+    """The redundancy claim: arbitrarily long add chains never normalize."""
+    mset = P16
+    rng = np.random.default_rng(4)
+    vals = rng.integers(-100, 100, size=32)
+    acc = sdrns.SdRnsNumber.from_int(jnp.int32(0), mset)
+    for v in vals:
+        acc = acc + sdrns.SdRnsNumber.from_int(jnp.int32(int(v)), mset)
+        assert int(jnp.max(jnp.abs(acc.digits))) <= 1
+    assert int(acc.to_int()) == int(vals.sum())

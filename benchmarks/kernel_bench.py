@@ -1,4 +1,4 @@
-"""Kernel microbench: the RNS modular-matmul Pallas kernel vs oracles.
+"""Kernel microbench: the (SD-)RNS modular-matmul Pallas kernels vs oracles.
 
 CPU wall-times (Pallas interpret mode) are *correctness-side* indicators
 only; the structural numbers — zero in-loop modular reductions, int8 operand
@@ -8,6 +8,9 @@ planes, MXU-aligned tiles — are what transfer to TPU (see EXPERIMENTS.md
   * exactness of the kernel vs the int32 matmul oracle across shapes;
   * the redundancy budget (lazy_add_capacity) actually exercised;
   * CPU timings of quantized RNS matmul vs float matmul (indicative);
+  * the fused SD-RNS digit matmul (kernels/sdrns_matmul.py): exactness vs
+    the int oracle, plus wall-clock of the fused single-kernel path vs the
+    unfused per-digit loop composed from core/sdrns.py ops;
   * kernel HLO op census: the K-loop body contains dot+add only (the
     lazy-reduction claim, checked on the lowered module).
 """
@@ -40,27 +43,44 @@ def run(verbose: bool = True) -> dict:
 
     cap = P21.lazy_add_capacity()
 
+    def _time(f, reps=5):
+        f().block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            f().block_until_ready()
+        return (time.perf_counter() - t0) / reps
+
     # CPU timing (indicative): RNS-ref channel einsums vs f32 matmul
     M = K = N = 256
     a = jnp.asarray(rng.integers(-7, 8, (M, K)), jnp.int32)
     b = jnp.asarray(rng.integers(-7, 8, (K, N)), jnp.int32)
     f = jax.jit(lambda a, b: ops.rns_matmul(a, b, mset=P21, max_abs_a=7,
                                             max_abs_b=7, use_ref=True))
-    f(a, b).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(20):
-        f(a, b).block_until_ready()
-    t_rns = (time.perf_counter() - t0) / 20
+    t_rns = _time(lambda: f(a, b), reps=20)
     af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
     g = jax.jit(lambda a, b: a @ b)
-    g(af, bf).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(20):
-        g(af, bf).block_until_ready()
-    t_f32 = (time.perf_counter() - t0) / 20
+    t_f32 = _time(lambda: g(af, bf), reps=20)
+
+    # Fused SD-RNS digit matmul: one Pallas kernel body (Eq. 2 rotations +
+    # carry-free adder trees) vs the unfused per-digit loop from core/sdrns.
+    Msd, Ksd, Nsd = 32, 16, 32
+    a_sd = jnp.asarray(rng.integers(-7, 8, (Msd, Ksd)), jnp.int32)
+    b_sd = jnp.asarray(rng.integers(-7, 8, (Ksd, Nsd)), jnp.int32)
+    sd_kw = dict(mset=P21, max_abs_a=7, max_abs_b=7)
+    fused = ops.sdrns_matmul(a_sd, b_sd, backend="interpret", **sd_kw)
+    sd_exact = bool(jnp.array_equal(fused, int_matmul_ref(a_sd, b_sd)))
+    assert sd_exact, "fused SD-RNS kernel mismatch vs int oracle"
+
+    t_fused = _time(lambda: ops.sdrns_matmul(
+        a_sd, b_sd, backend="interpret", **sd_kw))
+    t_unfused = _time(lambda: ops.sdrns_matmul(
+        a_sd, b_sd, backend="ref", **sd_kw))
 
     out = {"exactness": results, "lazy_capacity": cap,
-           "cpu_ms_rns": t_rns * 1e3, "cpu_ms_f32": t_f32 * 1e3}
+           "cpu_ms_rns": t_rns * 1e3, "cpu_ms_f32": t_f32 * 1e3,
+           "sdrns_exact": sd_exact,
+           "sdrns_ms_fused": t_fused * 1e3,
+           "sdrns_ms_unfused": t_unfused * 1e3}
     if verbose:
         print("\n== RNS matmul kernel ==")
         for r in results:
@@ -69,6 +89,12 @@ def run(verbose: bool = True) -> dict:
         print(f"CPU indicative: rns-ref {t_rns*1e3:.2f} ms vs f32 "
               f"{t_f32*1e3:.2f} ms at 256^3 (CPU has no int8 MXU — TPU "
               "economics are in EXPERIMENTS.md)")
+        print("\n== fused SD-RNS digit matmul ==")
+        print(f"shape {(Msd, Ksd, Nsd)}: exact vs int32 oracle = {sd_exact}")
+        print(f"CPU wall: fused kernel (interpret) {t_fused*1e3:.2f} ms vs "
+              f"unfused per-digit loop {t_unfused*1e3:.2f} ms (interpret "
+              "overhead dominates on CPU; on TPU the fused body keeps all "
+              "digit traffic in VMEM)")
     return out
 
 

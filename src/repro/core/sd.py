@@ -30,6 +30,7 @@ __all__ = [
     "combine",
     "shift_left",
     "add_tree",
+    "pairwise_reduce",
 ]
 
 
@@ -127,17 +128,29 @@ def carry_free_add(x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.concatenate([s, msb_t], axis=-1)
 
 
+def pairwise_reduce(pps: jax.Array, axis: int, add) -> jax.Array:
+    """Balanced pairwise reduction over ``axis``: zero-pad odd counts, then
+    ``add`` the 0::2 and 1::2 slices per level (depth ceil(log2 count)).
+
+    The fixed pairing is load-bearing: the fused Pallas kernel and the
+    digit-level references assert *bit-identical* digit vectors, which holds
+    only because every adder tree in the repo reduces in exactly this order.
+    """
+    while pps.shape[axis] > 1:
+        if pps.shape[axis] % 2 == 1:
+            pad = [(0, 0)] * pps.ndim
+            pad[axis] = (0, 1)
+            pps = jnp.pad(pps, pad)
+        lo = [slice(None)] * pps.ndim
+        hi = [slice(None)] * pps.ndim
+        lo[axis] = slice(0, None, 2)
+        hi[axis] = slice(1, None, 2)
+        pps = add(pps[tuple(lo)], pps[tuple(hi)])
+    return jnp.squeeze(pps, axis=axis)
+
+
 def add_tree(pps: jax.Array) -> jax.Array:
     """Reduce ``(..., num_pp, n)`` partial products with a balanced carry-free
     adder tree (depth ceil(log2 num_pp), each level constant-time).  Non-modular:
     digit count grows by one per level."""
-    while pps.shape[-2] > 1:
-        k = pps.shape[-2]
-        if k % 2 == 1:
-            pad = [(0, 0)] * (pps.ndim - 2) + [(0, 1), (0, 0)]
-            pps = jnp.pad(pps, pad)
-            k += 1
-        a = pps[..., 0::2, :]
-        b = pps[..., 1::2, :]
-        pps = carry_free_add(a, b)
-    return pps[..., 0, :]
+    return pairwise_reduce(pps, -2, carry_free_add)

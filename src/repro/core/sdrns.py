@@ -33,6 +33,7 @@ from repro.core.moduli import ModuliSet
 Kind = Literal["pow2m1", "pow2", "pow2p1"]
 
 __all__ = [
+    "WRAP_SIGNS",
     "encode_residue",
     "decode_residue",
     "modular_add",
@@ -44,6 +45,11 @@ __all__ = [
     "sdrns_encode",
     "sdrns_decode",
 ]
+
+# End-around transfer sign per channel kind: 2^n == +1 (mod 2^n - 1),
+# == 0 (mod 2^n), == -1 (mod 2^n + 1).  The single source of truth — the
+# Pallas kernel and ops.py import this table.
+WRAP_SIGNS = {"pow2m1": 1, "pow2": 0, "pow2p1": -1}
 
 
 # ---------------------------------------------------------------------------
@@ -78,7 +84,7 @@ def decode_residue(digits: jax.Array, kind: Kind, n: int) -> jax.Array:
 
 
 def _wrap_sign(kind: Kind) -> int:
-    return {"pow2m1": 1, "pow2": 0, "pow2p1": -1}[kind]
+    return WRAP_SIGNS[kind]
 
 
 def modular_add(x: jax.Array, y: jax.Array, kind: Kind) -> jax.Array:
@@ -149,14 +155,8 @@ def modular_mul(x: jax.Array, y: jax.Array, kind: Kind) -> jax.Array:
         pps.append(rot * yi)                      # +-rot or 0 (mux, not mult)
     pp = jnp.stack(pps, axis=-2)                  # (..., n, n)
     # modular adder tree (end-around at every level -> width never grows)
-    while pp.shape[-2] > 1:
-        k = pp.shape[-2]
-        if k % 2 == 1:
-            pad = [(0, 0)] * (pp.ndim - 2) + [(0, 1), (0, 0)]
-            pp = jnp.pad(pp, pad)
-            k += 1
-        pp = modular_add(pp[..., 0::2, :], pp[..., 1::2, :], kind)
-    return pp[..., 0, :]
+    return sd.pairwise_reduce(
+        pp, -2, lambda x, y: modular_add(x, y, kind))
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,19 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-rns_matmul — C-channel modular matmul, lazy (redundant) reduction, MXU tiling.
-sd_add     — digit-parallel carry-free SD-RNS addition (VPU).
+rns_matmul   — C-channel modular matmul, lazy (redundant) reduction, MXU tiling.
+sdrns_matmul — fused signed-digit residue matmul (Eq. 2 rotations + carry-free
+               adder trees in one kernel body).
+sd_add       — digit-parallel carry-free SD-RNS addition (VPU).
 
-``ops`` holds the public jit'd wrappers, ``ref`` the pure-jnp oracles.
+``ops`` holds the public jit'd wrappers and the backend registry
+(pallas / interpret / ref, auto-selected by platform), ``ref`` the pure-jnp
+oracles, ``compat`` the JAX version-compat layer.
 """
-from repro.kernels.ops import rns_matmul, sd_add
+from repro.kernels.ops import (
+    resolve_backend,
+    rns_matmul,
+    sd_add,
+    sdrns_matmul,
+)
 
-__all__ = ["rns_matmul", "sd_add"]
+__all__ = ["rns_matmul", "sdrns_matmul", "sd_add", "resolve_backend"]

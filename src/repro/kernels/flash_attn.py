@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 __all__ = ["flash_attention_pallas", "DEFAULT_BLOCKS"]
 
 DEFAULT_BLOCKS = (256, 512)   # (bq, bk)
@@ -90,7 +92,7 @@ def flash_attention_pallas(
     kv_len: int | None = None,
     bq: int = DEFAULT_BLOCKS[0],
     bk: int = DEFAULT_BLOCKS[1],
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Exact attention without materialized scores.
 
@@ -101,6 +103,7 @@ def flash_attention_pallas(
     Returns:
       (BH, Sq, hd) in q's dtype.
     """
+    interpret = compat.resolve_interpret(interpret)
     BH, Sq, hd = q.shape
     _, Skv, _ = k.shape
     assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
@@ -125,7 +128,7 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -1,30 +1,86 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels, plus the backend registry.
 
-``rns_matmul`` is the production entry point used by ``models/linear.py``:
-integer operands in, exact int32 matmul out, with
+``rns_matmul`` and ``sdrns_matmul`` are the production entry points used by
+``models/linear.py``: integer operands in, exact int32 matmul out, with
 
-* forward conversion to centered residues (int8 when all moduli allow),
-* shape padding to MXU-aligned blocks,
+* forward conversion to centered residues (int8 when all moduli allow) — and,
+  for the SD-RNS path, signed-digit encoding of each residue channel,
+* shape padding to kernel-aligned blocks,
 * automatic K-segmentation when the exact result could exceed the moduli
   set's half dynamic range (each segment is exact; segments sum in int32),
 * reverse (MRC) conversion.
 
-On CPU (tests / this container) pass ``interpret=True`` to execute the kernel
-body in the Pallas interpreter; on TPU the same code JITs to Mosaic.
+Backend registry
+----------------
+Every op dispatches through a small registry keyed by ``backend``:
+
+* ``"pallas"``    — ``pl.pallas_call`` compiled by Mosaic (real TPU);
+* ``"interpret"`` — the same kernel body in the Pallas interpreter (CPU
+  correctness tests and this container);
+* ``"ref"``       — pure-jnp oracle with the same flop/byte structure
+  (CPU dry-run compilation / roofline).
+
+``backend=None`` auto-selects by platform (``pallas`` on TPU, ``interpret``
+elsewhere), so callers — ``models/linear.py``, the serving engine — pick the
+fused path without changing.  See DESIGN.md §6.
 """
 from __future__ import annotations
 
 import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sd, sdrns
 from repro.core.moduli import P21, ModuliSet
+from repro.kernels import compat
 from repro.kernels.rns_matmul import rns_matmul_pallas
 from repro.kernels.sd_add import sd_add_pallas
+from repro.kernels.sdrns_matmul import WRAP_SIGNS, sdrns_matmul_pallas
 
-__all__ = ["rns_matmul", "sd_add", "segment_count"]
+__all__ = [
+    "rns_matmul",
+    "sdrns_matmul",
+    "sd_add",
+    "segment_count",
+    "BACKENDS",
+    "resolve_backend",
+    "register_impl",
+    "get_impl",
+]
+
+
+# ---------------------------------------------------------------------------
+# Backend registry.
+# ---------------------------------------------------------------------------
+
+BACKENDS = ("pallas", "interpret", "ref")
+
+_REGISTRY: dict[str, dict[str, Callable]] = {}
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve a backend name; ``None``/``"auto"`` selects by platform."""
+    if backend in (None, "auto"):
+        return "pallas" if compat.platform() == "tpu" else "interpret"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    return backend
+
+
+def register_impl(op: str, backend: str, fn: Callable) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    _REGISTRY.setdefault(op, {})[backend] = fn
+
+
+def get_impl(op: str, backend: str | None = None) -> Callable:
+    impls = _REGISTRY.get(op)
+    if impls is None:
+        raise KeyError(f"no backends registered for op {op!r}")
+    return impls[resolve_backend(backend)]
 
 
 def _round_up(v: int, k: int) -> int:
@@ -46,6 +102,11 @@ def segment_count(K: int, max_abs_a: int, max_abs_b: int,
     return max(segs, 1)
 
 
+# ---------------------------------------------------------------------------
+# rns_matmul — int8 residue planes, lazy reduction, MXU tiling.
+# ---------------------------------------------------------------------------
+
+
 def _choose_blocks(M: int, N: int, K: int) -> tuple[int, int, int]:
     """MXU-aligned tiles that do not over-pad small problems."""
     bm = 128 if M >= 128 else _round_up(M, 8)
@@ -54,9 +115,31 @@ def _choose_blocks(M: int, N: int, K: int) -> tuple[int, int, int]:
     return bm, max(bn, 128), max(bk, 128)
 
 
+register_impl(
+    "rns_matmul", "pallas",
+    lambda a, b, mset, bm, bn, bk: rns_matmul_pallas(
+        a, b, jnp.asarray(mset.moduli, jnp.int32),
+        bm=bm, bn=bn, bk=bk, interpret=False))
+register_impl(
+    "rns_matmul", "interpret",
+    lambda a, b, mset, bm, bn, bk: rns_matmul_pallas(
+        a, b, jnp.asarray(mset.moduli, jnp.int32),
+        bm=bm, bn=bn, bk=bk, interpret=True))
+
+
+def _rns_matmul_ref_impl(a, b, mset, bm, bn, bk):
+    from repro.kernels.ref import rns_matmul_ref
+
+    return rns_matmul_ref(a, b, mset)
+
+
+register_impl("rns_matmul", "ref", _rns_matmul_ref_impl)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("mset", "max_abs_a", "max_abs_b", "interpret", "use_ref"),
+    static_argnames=("mset", "max_abs_a", "max_abs_b", "interpret", "use_ref",
+                     "backend"),
 )
 def rns_matmul(
     a: jax.Array,
@@ -67,6 +150,7 @@ def rns_matmul(
     max_abs_b: int,
     interpret: bool = False,
     use_ref: bool = False,
+    backend: str | None = None,
 ) -> jax.Array:
     """Exact integer matmul via RNS channels.
 
@@ -76,9 +160,17 @@ def rns_matmul(
       mset: moduli set; all |m|//2 must fit int8 for the MXU path.
       max_abs_a/b: static magnitude bounds (from the quantizer) — drive
         K-segmentation.
+      interpret/use_ref: legacy backend switches (kept for callers);
+        ``backend`` is the registry spelling, auto-selected when unset.
     Returns:
       (M, N) int32, exact A @ B.
     """
+    if use_ref:
+        backend = "ref"
+    elif interpret:
+        backend = "interpret"
+    impl = get_impl("rns_matmul", backend)
+
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
@@ -104,22 +196,138 @@ def rns_matmul(
         b_s = b_res[:, lo:hi, :]
         a_p = jnp.zeros((C, Mp, Kp), res_dtype).at[:, :M, : hi - lo].set(a_s)
         b_p = jnp.zeros((C, Kp, Np), res_dtype).at[:, : hi - lo, :N].set(b_s)
-        if use_ref:
-            from repro.kernels.ref import rns_matmul_ref
-
-            out_res = rns_matmul_ref(a_p, b_p, mset)
-        else:
-            out_res = rns_matmul_pallas(
-                a_p, b_p, jnp.asarray(mset.moduli, jnp.int32),
-                bm=bm, bn=bn, bk=bk, interpret=interpret,
-            )
+        out_res = impl(a_p, b_p, mset, bm, bn, bk)
         total = total + mset.from_residues(out_res[:, :M, :N])
     return total
 
 
+# ---------------------------------------------------------------------------
+# sdrns_matmul — fused signed-digit residue matmul (Eq. 2 in one kernel).
+# ---------------------------------------------------------------------------
+
+
+def _sdrns_digit_width(mset: ModuliSet) -> int:
+    kinds = {k for k, _ in mset.kinds}
+    widths = {n for _, n in mset.kinds}
+    if "generic" in kinds or len(widths) != 1:
+        raise ValueError(
+            "sdrns_matmul needs a special moduli set (2^n-1 / 2^n / 2^n+1 "
+            f"at one width), got kinds {mset.kinds}"
+        )
+    return next(iter(widths))
+
+
+def _choose_digit_blocks(M: int, N: int) -> tuple[int, int]:
+    """Small tiles: the digit axis multiplies VMEM footprint by n^2."""
+    bm = 32 if M >= 32 else _round_up(M, 8)
+    bn = 32 if N >= 32 else _round_up(N, 8)
+    return bm, bn
+
+
+# Per-grid-step budget for the kernel's partial-product stack (int8 bytes);
+# a few MiB leaves VMEM room for operands and double buffering.
+_PP_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+register_impl(
+    "sdrns_matmul", "pallas",
+    lambda ad, bd, mset, bm, bn: sdrns_matmul_pallas(
+        ad, bd, _wrap_signs(mset), bm=bm, bn=bn, interpret=False))
+register_impl(
+    "sdrns_matmul", "interpret",
+    lambda ad, bd, mset, bm, bn: sdrns_matmul_pallas(
+        ad, bd, _wrap_signs(mset), bm=bm, bn=bn, interpret=True))
+
+
+def _sdrns_matmul_ref_impl(ad, bd, mset, bm, bn):
+    from repro.kernels.ref import sdrns_matmul_ref
+
+    return sdrns_matmul_ref(ad, bd, mset)
+
+
+register_impl("sdrns_matmul", "ref", _sdrns_matmul_ref_impl)
+
+
+def _wrap_signs(mset: ModuliSet) -> jax.Array:
+    return jnp.asarray([WRAP_SIGNS[k] for k, _ in mset.kinds], jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mset", "max_abs_a", "max_abs_b", "backend"),
+)
+def sdrns_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mset: ModuliSet = P21,
+    max_abs_a: int,
+    max_abs_b: int,
+    backend: str | None = None,
+) -> jax.Array:
+    """Exact integer matmul via fused signed-digit residue channels.
+
+    The digit-domain sibling of :func:`rns_matmul`: residues are encoded as
+    SD digit vectors and the whole modular matmul — Eq. 2 partial-product
+    rotations plus the end-around carry-free adder trees — runs inside one
+    Pallas kernel body per (channel, tile).
+
+    Args:
+      a: (M, K) integer tensor (|a| <= max_abs_a).
+      b: (K, N) integer tensor (|b| <= max_abs_b).
+      mset: special moduli set {2^n-1, 2^n, 2^n+1} (any subset, one width).
+      max_abs_a/b: static magnitude bounds — drive K-segmentation.
+      backend: "pallas" | "interpret" | "ref" | None (auto by platform).
+    Returns:
+      (M, N) int32, exact A @ B.
+    """
+    n = _sdrns_digit_width(mset)
+    impl = get_impl("sdrns_matmul", backend)
+
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+
+    bm, bn = _choose_digit_blocks(M, N)
+    segs = segment_count(K, max_abs_a, max_abs_b, mset)
+    seg_len = (K + segs - 1) // segs
+    # VMEM bound: the kernel materializes an (n, bm, k, bn, n) int8 PP
+    # stack per grid step, so the dynamic-range segmentation alone is not a
+    # memory bound — cap the K slice to keep that stack within budget.
+    k_cap = max(_PP_BUDGET_BYTES // (n * n * bm * bn), 1)
+    seg_len = min(seg_len, k_cap)
+    segs = (K + seg_len - 1) // seg_len
+
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    C = mset.num_channels
+
+    total = jnp.zeros((M, N), jnp.int32)
+    for s in range(segs):
+        lo = s * seg_len
+        hi = min(lo + seg_len, K)
+        a_s = a[:, lo:hi].astype(jnp.int32)
+        b_s = b[lo:hi, :].astype(jnp.int32)
+        # centered residues -> SD digit planes (zero rows/cols pad to tiles;
+        # the zero digit vector is the zero residue, so padding is inert)
+        a_res = mset.to_residues(a_s, centered=True)        # (C, M, ks)
+        b_res = mset.to_residues(b_s, centered=True)        # (C, ks, N)
+        ad = jnp.zeros((C, Mp, hi - lo, n), jnp.int8)
+        ad = ad.at[:, :M].set(sd.from_int(a_res, n))
+        bd = jnp.zeros((C, hi - lo, Np, n), jnp.int8)
+        bd = bd.at[:, :, :N].set(sd.from_int(b_res, n))
+        out_dig = impl(ad, bd, mset, bm, bn)                # (C, Mp, Np, n)
+        total = total + sdrns.sdrns_decode(out_dig[:, :M, :N], mset)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# sd_add — batched carry-free SD addition.
+# ---------------------------------------------------------------------------
+
+
 @functools.partial(jax.jit, static_argnames=("kind", "interpret"))
 def sd_add(x: jax.Array, y: jax.Array, *, kind: str,
-           interpret: bool = False) -> jax.Array:
+           interpret: bool | None = None) -> jax.Array:
     """Batched carry-free SD addition via the Pallas kernel.
 
     x, y: (..., n) int8 digit tensors (LSB first).  Returns same shape

@@ -8,7 +8,7 @@ from repro.core import sdrns
 from repro.core.moduli import ModuliSet
 
 __all__ = ["rns_matmul_ref", "int_matmul_ref", "sd_add_ref",
-           "flash_attention_ref"]
+           "sdrns_matmul_ref", "flash_attention_ref"]
 
 
 def rns_matmul_ref(a_res: jax.Array, b_res: jax.Array,
@@ -41,6 +41,31 @@ def sd_add_ref(x: jax.Array, y: jax.Array, kind: str) -> jax.Array:
 
         return sd.carry_free_add(x, y)
     return sdrns.modular_add(x, y, kind)
+
+
+def sdrns_matmul_ref(a_dig: jax.Array, b_dig: jax.Array,
+                     mset: ModuliSet) -> jax.Array:
+    """Digit-level oracle for the fused SD-RNS matmul kernel.
+
+    The *unfused* path: per-scalar products via :func:`sdrns.modular_mul`
+    (the per-digit Python loop of Eq. 2 rotations), then a carry-free
+    modular adder tree over K — the same pairwise 0::2/1::2 structure as the
+    kernel, so digit vectors agree bit-for-bit, not just decoded values.
+
+    a_dig: (C, M, K, n) int8 SD digits; b_dig: (C, K, N, n).
+    Returns (C, M, N, n) int8 SD digits of (A @ B) mod m_c.
+    """
+    from repro.core import sd
+
+    outs = []
+    for c, (kind, _) in enumerate(mset.kinds):
+        # broadcast to per-(m, k, j) scalar products: (M, K, N, n) digits
+        prod = sdrns.modular_mul(
+            a_dig[c][:, :, None, :], b_dig[c][None, :, :, :], kind)
+        # end-around adder tree over K (same pairing as the fused kernel)
+        outs.append(sd.pairwise_reduce(
+            prod, 1, lambda x, y, k=kind: sdrns.modular_add(x, y, k)))
+    return jnp.stack(outs)
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -23,7 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 __all__ = ["rns_matmul_pallas", "DEFAULT_BLOCKS"]
 
@@ -77,7 +78,7 @@ def rns_matmul_pallas(
     bm: int = DEFAULT_BLOCKS[0],
     bn: int = DEFAULT_BLOCKS[1],
     bk: int = DEFAULT_BLOCKS[2],
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Channel-wise modular matmul.
 
@@ -89,7 +90,9 @@ def rns_matmul_pallas(
       (C, M, N) int32 centered residues of A @ B mod m_c.
 
     M, N, K must be multiples of the block sizes (ops.py pads).
+    ``interpret=None`` auto-selects the Pallas interpreter off-TPU.
     """
+    interpret = compat.resolve_interpret(interpret)
     C, M, K = a_res.shape
     _, _, N = b_res.shape
     assert b_res.shape == (C, K, N)
@@ -107,7 +110,7 @@ def rns_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda c, i, j, k: (c, i, j)),
         out_shape=jax.ShapeDtypeStruct((C, M, N), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")
         ),

@@ -15,7 +15,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 __all__ = ["sd_add_pallas"]
 
@@ -72,7 +73,7 @@ def sd_add_pallas(
     kind: str,
     n: int,
     bb: int = 256,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Carry-free modular SD addition.
 
@@ -84,6 +85,7 @@ def sd_add_pallas(
     Returns:
       (B, nd) int8 digits of the modular sum, digits in {-1, 0, 1}.
     """
+    interpret = compat.resolve_interpret(interpret)
     B, nd = x.shape
     assert y.shape == (B, nd)
     assert B % bb == 0, (B, bb)
@@ -98,6 +100,7 @@ def sd_add_pallas(
         ],
         out_specs=pl.BlockSpec((bb, nd), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, nd), jnp.int8),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, y)

@@ -59,7 +59,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "multi" if multi_pod else "single"
     ctx = make_ctx(mesh, seq_shard=seq_shard)
-    model = build_model(cfg, backend=backend)
+    # dry-run lowers on CPU for cost analysis: pin the pure-jnp ref
+    # oracle (same flop/byte structure as the kernel) rather than letting
+    # the registry auto-select the Pallas interpreter off-TPU.  sdrns is
+    # deliberately unsupported here: its digit-level ref materializes an
+    # O(M*K*N*n^2) intermediate, which makes the cost numbers meaningless.
+    model = build_model(cfg, backend=backend,
+                        rns_impl="ref" if backend == "rns" else None)
 
     def shardings(spec_tree):
         return jax.tree_util.tree_map(

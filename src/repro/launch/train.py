@@ -33,7 +33,7 @@ __all__ = ["main"]
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--backend", default="bns", choices=("bns", "rns"))
+    ap.add_argument("--backend", default="bns", choices=("bns", "rns", "sdrns"))
     ap.add_argument("--reduced", action="store_true",
                     help="train the reduced config (CPU-scale)")
     ap.add_argument("--steps", type=int, default=100)
@@ -55,9 +55,9 @@ def main(argv=None):
         raise SystemExit("use examples/train_lm.py families; whisper trains "
                          "via tests/test_arch_smoke.py paths")
 
-    model = build_model(cfg, backend=args.backend,
-                        rns_impl="interpret" if args.backend == "rns"
-                        else "ref")
+    # rns_impl=None: the kernels/ops.py backend registry auto-selects the
+    # implementation by platform (pallas on TPU, interpret elsewhere)
+    model = build_model(cfg, backend=args.backend)
     opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=10,
                         total_steps=args.steps,
                         moment_dtype=cfg.opt_state_dtype)

@@ -13,8 +13,10 @@ pure jax functions suitable for ``jax.jit`` / ``.lower()``:
 * ``cache_roles(cache) -> pytree of sharding-role tuples`` (dry-run)
 
 Arithmetic backend: ``backend="bns"`` (bf16 MXU matmuls — the baseline number
-system) or ``backend="rns"`` (the paper's technique: int4 quant -> 3-channel
-redundant-residue matmul; see models/linear.py).
+system), ``backend="rns"`` (the paper's technique: int4 quant -> 3-channel
+redundant-residue matmul) or ``backend="sdrns"`` (the fused signed-digit
+variant; see models/linear.py).  The kernel impl is auto-selected by the
+backend registry in kernels/ops.py unless ``rns_impl`` pins it.
 """
 from __future__ import annotations
 
@@ -59,13 +61,13 @@ MOE_AUX_WEIGHT = 0.01
 
 
 def build_model(cfg: ArchConfig, *, backend: str = "bns",
-                rns_bits: int = 4, rns_impl: str = "ref") -> Model:
+                rns_bits: int = 4, rns_impl: str | None = None) -> Model:
     compute_dtype = jnp.dtype(cfg.compute_dtype)
     dense_kw: dict[str, Any] = {"backend": backend,
                                 "compute_dtype": compute_dtype}
     if cfg.matmul_out_dtype == "float32":
         dense_kw["out_dtype"] = jnp.float32
-    if backend == "rns":
+    if backend in ("rns", "sdrns"):
         dense_kw.update(bits=rns_bits, impl=rns_impl)
 
     is_encdec = cfg.is_encdec

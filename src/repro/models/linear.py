@@ -1,16 +1,21 @@
-"""Dense layer with a switchable arithmetic backend: BNS (bf16) or RNS.
+"""Dense layer with a switchable arithmetic backend: BNS (bf16) or (SD-)RNS.
 
 ``backend="rns"`` routes every matmul through the paper's technique: symmetric
 int4 quantization -> 3-channel RNS modular matmul (Pallas kernel on TPU, jnp
-reference on CPU/dry-run) -> MRC reverse conversion -> dequantize.  Training
-works through a straight-through estimator (exact integer forward, float
-backward), the standard QAT treatment.
+reference on CPU/dry-run) -> MRC reverse conversion -> dequantize.
+``backend="sdrns"`` uses the fused signed-digit variant instead — Eq. 2
+partial-product rotations plus carry-free adder trees in one Pallas kernel
+(kernels/sdrns_matmul.py).  Training works through a straight-through
+estimator (exact integer forward, float backward), the standard QAT
+treatment.
 
-The kernel implementation is selected by ``impl``:
+The kernel implementation is selected by ``impl`` via the backend registry
+in :mod:`repro.kernels.ops`:
+  * None        — auto by platform ("pallas" on TPU, "interpret" elsewhere).
   * "pallas"    — pl.pallas_call, Mosaic lowering (real TPU).
   * "interpret" — Pallas interpreter (CPU correctness tests).
-  * "ref"       — pure-jnp channel einsums (CPU dry-run compilation; same
-                  flop/byte structure as the kernel for roofline purposes).
+  * "ref"       — pure-jnp oracles (CPU dry-run compilation; same flop/byte
+                  structure as the kernel for roofline purposes).
 """
 from __future__ import annotations
 
@@ -24,7 +29,7 @@ from repro.core.moduli import P21, ModuliSet
 from repro.kernels import ops
 from repro.quant.quant import qmax_for_bits, quantize_symmetric
 
-__all__ = ["dense", "init_dense", "rns_qmatmul"]
+__all__ = ["dense", "init_dense", "rns_qmatmul", "sdrns_qmatmul"]
 
 
 def init_dense(key: jax.Array, d_in: int, d_out: int,
@@ -38,40 +43,51 @@ def init_dense(key: jax.Array, d_in: int, d_out: int,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def rns_qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
-                impl: str) -> jax.Array:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
+             impl: str | None, op: str) -> jax.Array:
     """x: (M, K) float, w: (K, N) float -> (M, N) float.
 
-    Forward: exact integer RNS matmul of the quantized operands, dequantized
-    with per-token (rows of x) and per-output-channel (cols of w) scales.
-    Backward: straight-through (floats) — standard QAT.
+    Forward: exact integer (SD-)RNS matmul of the quantized operands,
+    dequantized with per-token (rows of x) and per-output-channel (cols of w)
+    scales.  Backward: straight-through (floats) — standard QAT.
+    ``op`` selects the integer matmul ("rns" | "sdrns"); ``impl`` is the
+    registry backend (None = auto by platform).
     """
-    return _rns_qmatmul_fwd(x, w, bits, mset, impl)[0]
+    return _qmatmul_fwd(x, w, bits, mset, impl, op)[0]
 
 
-def _rns_qmatmul_fwd(x, w, bits, mset, impl):
+def _qmatmul_fwd(x, w, bits, mset, impl, op):
     qmax = qmax_for_bits(bits)
     qx, sx = quantize_symmetric(x, bits, axis=-1)      # per-token scales
     qw, sw = quantize_symmetric(w, bits, axis=0)       # per-out-channel
-    kwargs: dict[str, Any] = dict(mset=mset, max_abs_a=qmax, max_abs_b=qmax)
-    if impl == "interpret":
-        kwargs["interpret"] = True
-    elif impl == "ref":
-        kwargs["use_ref"] = True
-    acc = ops.rns_matmul(qx, qw, **kwargs)             # exact int32
+    matmul = ops.sdrns_matmul if op == "sdrns" else ops.rns_matmul
+    acc = matmul(qx, qw, mset=mset, max_abs_a=qmax, max_abs_b=qmax,
+                 backend=impl)                         # exact int32
     out = acc.astype(jnp.float32) * sx * sw            # (M,1)*(1,N) broadcast
     return out, (x, w)
 
 
-def _rns_qmatmul_bwd(bits, mset, impl, resids, g):
+def _qmatmul_bwd(bits, mset, impl, op, resids, g):
     x, w = resids
     gx = jnp.matmul(g, w.T, preferred_element_type=jnp.float32)
     gw = jnp.matmul(x.T, g, preferred_element_type=jnp.float32)
     return gx.astype(x.dtype), gw.astype(w.dtype)
 
 
-rns_qmatmul.defvjp(_rns_qmatmul_fwd, _rns_qmatmul_bwd)
+_qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+def rns_qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
+                impl: str | None = None) -> jax.Array:
+    """Quantized exact matmul via int8 RNS residue planes (lazy reduction)."""
+    return _qmatmul(x, w, bits, mset, impl, "rns")
+
+
+def sdrns_qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
+                  impl: str | None = None) -> jax.Array:
+    """Quantized exact matmul via the fused signed-digit residue kernel."""
+    return _qmatmul(x, w, bits, mset, impl, "sdrns")
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +102,7 @@ def dense(
     backend: str = "bns",
     bits: int = 4,
     mset: ModuliSet = P21,
-    impl: str = "ref",
+    impl: str | None = None,
     compute_dtype=jnp.bfloat16,
     out_dtype=None,
 ) -> jax.Array:
@@ -108,10 +124,10 @@ def dense(
             preferred_element_type=pref,
         )
         return y.astype(compute_dtype)
-    if backend != "rns":
+    if backend not in ("rns", "sdrns"):
         raise ValueError(f"unknown backend {backend!r}")
     lead = x.shape[:-1]
     d_in = x.shape[-1]
     x2 = x.reshape(-1, d_in).astype(jnp.float32)
-    y2 = rns_qmatmul(x2, w.astype(jnp.float32), bits, mset, impl)
+    y2 = _qmatmul(x2, w.astype(jnp.float32), bits, mset, impl, backend)
     return y2.reshape(*lead, w.shape[-1]).astype(compute_dtype)

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels import compat
+
 __all__ = ["pipeline_apply"]
 
 
@@ -53,7 +55,7 @@ def pipeline_apply(
     x_spec = P(*[None] * x.ndim)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        compat.shard_map, mesh=mesh,
         in_specs=(p_specs, x_spec), out_specs=x_spec, check_vma=False)
     def run(local_params, xs):
         # local_params leaves: (1, ...) -> squeeze the stage dim

@@ -1,0 +1,285 @@
+"""Minimal offline stand-in for the ``hypothesis`` property-testing API.
+
+The CI container has no network, so ``pip install hypothesis`` is not an
+option — yet 7 of the repo's test modules are property tests.  This shim
+implements exactly the surface they use:
+
+* ``@given(...)`` with positional or keyword strategies, composable with
+  ``@pytest.mark.parametrize`` (the wrapper's signature drops the
+  strategy-bound parameters so pytest only supplies the rest);
+* ``@settings(max_examples=..., deadline=...)`` above or below ``@given``;
+* ``strategies.integers / floats / booleans / sampled_from / lists / just``;
+* ``assume(...)`` (a false assumption skips the example).
+
+Semantics differ from real hypothesis in one deliberate way: examples are
+drawn from a **deterministic seeded RNG** (seed = CRC32 of the test's
+qualified name), so runs are reproducible and there is no shrinking or
+example database.  That trades minimized counterexamples for zero
+dependencies — the right trade for an offline tier-1 suite.  When the real
+``hypothesis`` is importable, ``conftest.py`` leaves it alone and this
+module is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+__all__ = [
+    "given",
+    "settings",
+    "strategies",
+    "assume",
+    "example",
+    "HealthCheck",
+    "install",
+]
+
+DEFAULT_MAX_EXAMPLES = 100
+
+_SETTINGS_ATTR = "_hypothesis_shim_settings"
+
+
+class _Unsatisfied(Exception):
+    """Raised by ``assume(False)``; the current example is skipped."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+class HealthCheck:
+    """Placeholder namespace — health checks are a no-op here."""
+
+    all: tuple = ()
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+
+
+# ---------------------------------------------------------------------------
+# Strategies.
+# ---------------------------------------------------------------------------
+
+
+class SearchStrategy:
+    def example(self, rng: random.Random) -> Any:  # pragma: no cover
+        raise NotImplementedError
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base: SearchStrategy, fn: Callable[[Any], Any]):
+        self.base, self.fn = base, fn
+
+    def example(self, rng):
+        return self.fn(self.base.example(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base: SearchStrategy, pred: Callable[[Any], bool]):
+        self.base, self.pred = base, pred
+
+    def example(self, rng):
+        for _ in range(1000):
+            v = self.base.example(rng)
+            if self.pred(v):
+                return v
+        raise _Unsatisfied
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int | None = None,
+                 max_value: int | None = None):
+        self.lo = -(2 ** 31) if min_value is None else int(min_value)
+        self.hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+
+    def example(self, rng):
+        # bias toward the boundary region a little, like hypothesis does —
+        # boundary values are where modular-arithmetic bugs live
+        r = rng.random()
+        if r < 0.08:
+            return self.lo
+        if r < 0.16:
+            return self.hi
+        if r < 0.24 and self.lo <= 0 <= self.hi:
+            return 0
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float | None = None,
+                 max_value: float | None = None,
+                 allow_nan: bool = False, allow_infinity: bool = False,
+                 width: int = 64):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+
+    def example(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value: Any):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, *, min_size: int = 0,
+                 max_size: int | None = None, unique: bool = False):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = min_size + 10 if max_size is None else max_size
+        self.unique = unique
+
+    def example(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        out: list[Any] = []
+        tries = 0
+        while len(out) < size and tries < 1000:
+            v = self.elements.example(rng)
+            tries += 1
+            if self.unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strats: SearchStrategy):
+        self.strats = strats
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.strats)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = _Integers
+strategies.floats = _Floats
+strategies.booleans = _Booleans
+strategies.sampled_from = _SampledFrom
+strategies.lists = _Lists
+strategies.tuples = _Tuples
+strategies.just = _Just
+
+
+# ---------------------------------------------------------------------------
+# settings / given decorators.
+# ---------------------------------------------------------------------------
+
+
+def settings(*args: Any, **kwargs: Any) -> Callable:
+    """Record example-count settings on the decorated function.
+
+    Works above or below ``@given`` (both orders appear in the tests).
+    """
+    if args and callable(args[0]):  # bare @settings
+        return args[0]
+
+    def deco(f: Callable) -> Callable:
+        setattr(f, _SETTINGS_ATTR, kwargs)
+        return f
+
+    return deco
+
+
+settings.register_profile = lambda *a, **k: None
+settings.load_profile = lambda *a, **k: None
+
+
+def example(*args: Any, **kwargs: Any) -> Callable:
+    """Explicit examples are folded into the random sweep (no-op pass-through)."""
+
+    def deco(f: Callable) -> Callable:
+        return f
+
+    return deco
+
+
+def given(*arg_strats: SearchStrategy,
+          **kw_strats: SearchStrategy) -> Callable:
+    def deco(inner: Callable) -> Callable:
+        sig = inspect.signature(inner)
+        params = list(sig.parameters.values())
+        if arg_strats:
+            # hypothesis maps positional strategies onto the *rightmost*
+            # parameters (so self / parametrized fixtures stay free)
+            names = [p.name for p in params][-len(arg_strats):]
+            mapping = dict(zip(names, arg_strats))
+            mapping.update(kw_strats)
+        else:
+            mapping = dict(kw_strats)
+        remaining = [p for p in params if p.name not in mapping]
+
+        @functools.wraps(inner)
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            cfg = (getattr(wrapper, _SETTINGS_ATTR, None)
+                   or getattr(inner, _SETTINGS_ATTR, None) or {})
+            max_examples = int(cfg.get("max_examples", DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(
+                f"{inner.__module__}.{inner.__qualname__}".encode())
+            rng = random.Random(seed)
+            ran = 0
+            attempts = 0
+            while ran < max_examples and attempts < max_examples * 20:
+                attempts += 1
+                draws = {k: s.example(rng) for k, s in mapping.items()}
+                try:
+                    inner(*args, **draws, **kwargs)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:
+                raise RuntimeError(
+                    f"hypothesis shim: every draw for "
+                    f"{inner.__qualname__} was rejected by assume()/"
+                    "filter() — the property was never exercised")
+
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=inner)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Installation as the importable ``hypothesis`` module.
+# ---------------------------------------------------------------------------
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` in ``sys.modules``.
+
+    Call only when the real package is missing (conftest.py guards this).
+    """
+    mod = sys.modules[__name__]
+    sys.modules.setdefault("hypothesis", mod)
+    sys.modules.setdefault("hypothesis.strategies", strategies)

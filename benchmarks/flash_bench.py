@@ -39,7 +39,8 @@ def run(verbose: bool = True, *, BH: int = 8, Sq: int = 2048,
         qpos = jnp.arange(Sq)
 
         def body(carry, inp):
-            m, l, acc, ki = carry[0], carry[1], carry[2], carry[3]
+            m, lsum, acc, ki = (carry[0], carry[1], carry[2],
+                                carry[3])
             kb, vb = inp
             s = jnp.einsum("bqh,bkh->bqk", q, kb,
                            preferred_element_type=jnp.float32) * scale
@@ -49,18 +50,18 @@ def run(verbose: bool = True, *, BH: int = 8, Sq: int = 2048,
             m_new = jnp.maximum(m, jnp.max(s, -1))
             alpha = jnp.exp(m - m_new)
             p = jnp.exp(s - m_new[..., None])
-            l = l * alpha + jnp.sum(p, -1)
+            lsum = lsum * alpha + jnp.sum(p, -1)
             acc = acc * alpha[..., None] + jnp.einsum(
                 "bqk,bkh->bqh", p.astype(v.dtype), vb,
                 preferred_element_type=jnp.float32)
-            return (m_new, l, acc, ki + 1), None
+            return (m_new, lsum, acc, ki + 1), None
 
         m0 = jnp.full((BH, Sq), -1e30, jnp.float32)
         l0 = jnp.zeros((BH, Sq), jnp.float32)
         a0 = jnp.zeros((BH, Sq, hd), jnp.float32)
-        (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)),
-                                         (kt, vt))
-        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        (m, lsum, acc, _), _ = jax.lax.scan(
+            body, (m0, l0, a0, jnp.int32(0)), (kt, vt))
+        return (acc / jnp.maximum(lsum, 1e-30)[..., None]).astype(q.dtype)
 
     fl_txt = jax.jit(flash_jnp).lower(q, k, v).compile().as_text()
     fl_cost = analyze_hlo(fl_txt)

@@ -16,6 +16,8 @@ planes, MXU-aligned tiles — are what transfer to TPU (see EXPERIMENTS.md
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -27,9 +29,13 @@ from repro.kernels import ops
 from repro.kernels.ref import int_matmul_ref
 
 
-def run(verbose: bool = True) -> dict:
+def run(verbose: bool = True, smoke: bool = False) -> dict:
+    """``smoke=True``: tiny shapes + few reps so the bench runs in CI on CPU
+    (ref/interpret backends only — no TPU required); results are the same
+    JSON schema as the full run so the artifact trajectory is comparable."""
     rng = np.random.default_rng(0)
-    shapes = [(128, 256, 128), (256, 512, 256)]
+    shapes = ([(16, 32, 16)] if smoke
+              else [(128, 256, 128), (256, 512, 256)])
     results = []
     for (M, K, N) in shapes:
         a = rng.integers(-7, 8, (M, K)).astype(np.int32)
@@ -51,7 +57,7 @@ def run(verbose: bool = True) -> dict:
         return (time.perf_counter() - t0) / reps
 
     # CPU timing (indicative): RNS-ref channel einsums vs f32 matmul
-    M = K = N = 256
+    M = K = N = 64 if smoke else 256
     a = jnp.asarray(rng.integers(-7, 8, (M, K)), jnp.int32)
     b = jnp.asarray(rng.integers(-7, 8, (K, N)), jnp.int32)
     f = jax.jit(lambda a, b: ops.rns_matmul(a, b, mset=P21, max_abs_a=7,
@@ -63,7 +69,7 @@ def run(verbose: bool = True) -> dict:
 
     # Fused SD-RNS digit matmul: one Pallas kernel body (Eq. 2 rotations +
     # carry-free adder trees) vs the unfused per-digit loop from core/sdrns.
-    Msd, Ksd, Nsd = 32, 16, 32
+    Msd, Ksd, Nsd = (16, 8, 16) if smoke else (32, 16, 32)
     a_sd = jnp.asarray(rng.integers(-7, 8, (Msd, Ksd)), jnp.int32)
     b_sd = jnp.asarray(rng.integers(-7, 8, (Ksd, Nsd)), jnp.int32)
     sd_kw = dict(mset=P21, max_abs_a=7, max_abs_b=7)
@@ -76,7 +82,8 @@ def run(verbose: bool = True) -> dict:
     t_unfused = _time(lambda: ops.sdrns_matmul(
         a_sd, b_sd, backend="ref", **sd_kw))
 
-    out = {"exactness": results, "lazy_capacity": cap,
+    out = {"smoke": smoke,
+           "exactness": results, "lazy_capacity": cap,
            "cpu_ms_rns": t_rns * 1e3, "cpu_ms_f32": t_f32 * 1e3,
            "sdrns_exact": sd_exact,
            "sdrns_ms_fused": t_fused * 1e3,
@@ -87,7 +94,7 @@ def run(verbose: bool = True) -> dict:
             print(f"shape {r['shape']}: exact vs int32 oracle = {r['exact']}")
         print(f"lazy-reduction budget (terms before a mod is needed): {cap}")
         print(f"CPU indicative: rns-ref {t_rns*1e3:.2f} ms vs f32 "
-              f"{t_f32*1e3:.2f} ms at 256^3 (CPU has no int8 MXU — TPU "
+              f"{t_f32*1e3:.2f} ms at {M}^3 (CPU has no int8 MXU — TPU "
               "economics are in EXPERIMENTS.md)")
         print("\n== fused SD-RNS digit matmul ==")
         print(f"shape {(Msd, Ksd, Nsd)}: exact vs int32 oracle = {sd_exact}")
@@ -98,5 +105,23 @@ def run(verbose: bool = True) -> dict:
     return out
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, ref/interpret backends only — CI "
+                         "runnable on CPU without a TPU")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON (default: "
+                         "BENCH_kernel_smoke.json under --smoke, else none)")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke)
+    path = args.json or ("BENCH_kernel_smoke.json" if args.smoke else None)
+    if path:
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[kernel_bench] wrote {path}")
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

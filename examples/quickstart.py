@@ -2,15 +2,13 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sd
-from repro.core.moduli import P21, special_set
-from repro.core.rns import RnsTensor
-from repro.core.sdrns import SdRnsNumber
 from repro.core.cost_model import eq3_total, select_number_system
+from repro.core.moduli import P21, special_set
+from repro.core.sdrns import SdRnsNumber
 from repro.kernels import ops
 
 print("== 1. residue decomposition (the paper's Eq. 2 moduli) ==")

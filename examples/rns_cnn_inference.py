@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.cost_model import select_number_system, speedup
 from repro.data.cifar import (ALEXNET, cnn_forward, init_cnn, op_counts,
@@ -48,17 +47,19 @@ def main():
 
     @jax.jit
     def sgd(p, xb, yb, lr=0.05):
-        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
-        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), l
+        lval, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b,
+                                      p, g), lval
 
     print(f"[cnn] training float AlexNet on synthetic CIFAR "
           f"({args.train_steps} steps)")
     for i in range(args.train_steps):
         j = (i * args.batch) % (4096 - args.batch)
-        params, l = sgd(params, jnp.asarray(xs[j:j + args.batch]),
-                        jnp.asarray(ys[j:j + args.batch]))
+        params, lval = sgd(params,
+                           jnp.asarray(xs[j:j + args.batch]),
+                           jnp.asarray(ys[j:j + args.batch]))
         if i % 20 == 0:
-            print(f"  step {i}: loss {float(l):.3f}")
+            print(f"  step {i}: loss {float(lval):.3f}")
 
     def accuracy(dense_kw):
         logits = cnn_forward(params, spec, jnp.asarray(xt),

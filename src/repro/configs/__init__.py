@@ -1,9 +1,9 @@
 from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
     ArchConfig,
     ShapeConfig,
-    SHAPES,
-    ARCH_IDS,
-    get_config,
-    cells_for,
     all_cells,
+    cells_for,
+    get_config,
 )

@@ -29,7 +29,7 @@ calibrate the SD-RNS factor to the headline (see ENERGY_POWER_FACTOR note).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Mapping, Sequence
+from typing import Dict, Mapping, Sequence
 
 __all__ = [
     "PRECISIONS",

@@ -17,7 +17,7 @@ cannot download CIFAR-10, so this module provides:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp

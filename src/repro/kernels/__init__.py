@@ -10,10 +10,16 @@ sd_add       — digit-parallel carry-free SD-RNS addition (VPU).
 oracles, ``compat`` the JAX version-compat layer.
 """
 from repro.kernels.ops import (
+    encode_rns_weights,
+    encode_sdrns_weights,
     resolve_backend,
     rns_matmul,
+    rns_matmul_enc,
     sd_add,
     sdrns_matmul,
+    sdrns_matmul_enc,
 )
 
-__all__ = ["rns_matmul", "sdrns_matmul", "sd_add", "resolve_backend"]
+__all__ = ["rns_matmul", "rns_matmul_enc", "sdrns_matmul",
+           "sdrns_matmul_enc", "encode_rns_weights", "encode_sdrns_weights",
+           "sd_add", "resolve_backend"]

@@ -34,20 +34,20 @@ DEFAULT_BLOCKS = (256, 512)   # (bq, bk)
 _NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *,
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, lsum, *,
             n_k: int, causal: bool, scale: float, bq: int, bk: int,
             kv_len: int):
     """One (bh, qi, ki) grid step.
 
     q_ref: (1, bq, hd);  k_ref/v_ref: (1, bk, hd);  o_ref: (1, bq, hd).
-    acc: (bq, hd) f32 scratch;  m, l: (bq, 1) f32 scratch.
+    acc: (bq, hd) f32 scratch;  m, lsum: (bq, 1) f32 scratch.
     """
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
     def _init():
         m[...] = jnp.full_like(m, _NEG_INF)
-        l[...] = jnp.zeros_like(l)
+        lsum[...] = jnp.zeros_like(lsum)
         acc[...] = jnp.zeros_like(acc)
 
     qb = q_ref[0]                                    # (bq, hd)
@@ -68,7 +68,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *,
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
     p = jnp.exp(s - m_new)                           # (bq, bk)
-    l[...] = l[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    lsum[...] = lsum[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
     pv = jax.lax.dot_general(
         p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)          # (bq, hd)
@@ -77,7 +77,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *,
 
     @pl.when(ki == n_k - 1)
     def _final():
-        o_ref[0] = (acc[...] / jnp.maximum(l[...], 1e-30)).astype(
+        o_ref[0] = (acc[...] / jnp.maximum(lsum[...], 1e-30)).astype(
             o_ref.dtype)
 
 

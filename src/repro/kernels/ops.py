@@ -10,6 +10,21 @@
   set's half dynamic range (each segment is exact; segments sum in int32),
 * reverse (MRC) conversion.
 
+Residue-resident weights
+------------------------
+The B operand of a serving matmul is a *weight*: its residue/digit planes
+never change between token steps, so re-deriving them per call is pure
+overhead (the conversion cost the paper amortizes once).  The ``*_enc``
+entry points — :func:`rns_matmul_enc` and :func:`sdrns_matmul_enc` — accept
+planes pre-encoded by :func:`encode_rns_weights` / :func:`encode_sdrns_weights`
+and convert only the activation operand.  Because encoding is elementwise,
+encode-then-slice equals slice-then-encode, so both entry points share one
+runner per op and stay bit-identical to the convert-per-call path.
+
+Decode shapes (M <= 8) route to the ``sdrns_matvec`` op — the matvec-style
+kernel schedule in :mod:`repro.kernels.sdrns_matmul` that keeps the whole M
+block and K segment resident and walks only (C, N/bn).
+
 Backend registry
 ----------------
 Every op dispatches through a small registry keyed by ``backend``:
@@ -22,7 +37,7 @@ Every op dispatches through a small registry keyed by ``backend``:
 
 ``backend=None`` auto-selects by platform (``pallas`` on TPU, ``interpret``
 elsewhere), so callers — ``models/linear.py``, the serving engine — pick the
-fused path without changing.  See DESIGN.md §6.
+fused path without changing.  See DESIGN.md §6 and §7.
 """
 from __future__ import annotations
 
@@ -38,17 +53,26 @@ from repro.core.moduli import P21, ModuliSet
 from repro.kernels import compat
 from repro.kernels.rns_matmul import rns_matmul_pallas
 from repro.kernels.sd_add import sd_add_pallas
-from repro.kernels.sdrns_matmul import WRAP_SIGNS, sdrns_matmul_pallas
+from repro.kernels.sdrns_matmul import (
+    WRAP_SIGNS,
+    sdrns_matmul_pallas,
+    sdrns_matvec_pallas,
+)
 
 __all__ = [
     "rns_matmul",
+    "rns_matmul_enc",
     "sdrns_matmul",
+    "sdrns_matmul_enc",
+    "encode_rns_weights",
+    "encode_sdrns_weights",
     "sd_add",
     "segment_count",
     "BACKENDS",
     "resolve_backend",
     "register_impl",
     "get_impl",
+    "DECODE_M",
 ]
 
 
@@ -136,6 +160,57 @@ def _rns_matmul_ref_impl(a, b, mset, bm, bn, bk):
 register_impl("rns_matmul", "ref", _rns_matmul_ref_impl)
 
 
+def _res_dtype(mset: ModuliSet):
+    return jnp.int8 if max(mset.moduli) <= 257 else jnp.int32
+
+
+def encode_rns_weights(w: jax.Array, mset: ModuliSet) -> jax.Array:
+    """Integer weights (..., K, N) -> centered residue planes (..., C, K, N).
+
+    The channel axis lands *after* any leading (layer-stack) axes so the
+    planes slice cleanly under ``jax.lax.scan`` over stacked layers.  int8
+    when every centered residue fits (the MXU-path rule of ``rns_matmul``).
+    """
+    res = mset.to_residues(w.astype(jnp.int32))          # (C, ..., K, N)
+    return jnp.moveaxis(res, 0, -3).astype(_res_dtype(mset))
+
+
+def _rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend):
+    """Shared runner: activation conversion + segmentation + kernel dispatch.
+
+    ``b_res``: (C, K, N) pre-encoded centered residue planes.  Both the
+    convert-per-call entry point and the residue-resident one land here, so
+    their outputs are bit-identical by construction.
+    """
+    impl = get_impl("rns_matmul", backend)
+    M, K = a.shape
+    C, K2, N = b_res.shape
+    assert K == K2, (a.shape, b_res.shape)
+
+    res_dtype = _res_dtype(mset)
+    a_res = mset.to_residues(a.astype(jnp.int32)).astype(res_dtype)
+
+    segs = segment_count(K, max_abs_a, max_abs_b, mset)
+    seg_len = _round_up((K + segs - 1) // segs, 128)
+    segs = (K + seg_len - 1) // seg_len
+
+    bm, bn, bk = _choose_blocks(M, N, seg_len)
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    Kp = _round_up(seg_len, bk)
+
+    total = jnp.zeros((M, N), jnp.int32)
+    for s in range(segs):
+        lo = s * seg_len
+        hi = min(lo + seg_len, K)
+        a_s = a_res[:, :, lo:hi]
+        b_s = b_res[:, lo:hi, :]
+        a_p = jnp.zeros((C, Mp, Kp), res_dtype).at[:, :M, : hi - lo].set(a_s)
+        b_p = jnp.zeros((C, Kp, Np), res_dtype).at[:, : hi - lo, :N].set(b_s)
+        out_res = impl(a_p, b_p, mset, bm, bn, bk)
+        total = total + mset.from_residues(out_res[:, :M, :N])
+    return total
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("mset", "max_abs_a", "max_abs_b", "interpret", "use_ref",
@@ -169,36 +244,33 @@ def rns_matmul(
         backend = "ref"
     elif interpret:
         backend = "interpret"
-    impl = get_impl("rns_matmul", backend)
+    b_res = encode_rns_weights(b, mset)
+    return _rns_run(a, b_res, mset=mset, max_abs_a=max_abs_a,
+                    max_abs_b=max_abs_b, backend=backend)
 
-    M, K = a.shape
-    K2, N = b.shape
-    assert K == K2, (a.shape, b.shape)
 
-    res_dtype = jnp.int8 if max(mset.moduli) <= 257 else jnp.int32
-    a_res = mset.to_residues(a.astype(jnp.int32)).astype(res_dtype)
-    b_res = mset.to_residues(b.astype(jnp.int32)).astype(res_dtype)
+@functools.partial(
+    jax.jit,
+    static_argnames=("mset", "max_abs_a", "max_abs_b", "backend"),
+)
+def rns_matmul_enc(
+    a: jax.Array,
+    b_res: jax.Array,
+    *,
+    mset: ModuliSet = P21,
+    max_abs_a: int,
+    max_abs_b: int,
+    backend: str | None = None,
+) -> jax.Array:
+    """:func:`rns_matmul` with a residue-resident B operand.
 
-    segs = segment_count(K, max_abs_a, max_abs_b, mset)
-    seg_len = _round_up((K + segs - 1) // segs, 128)
-    segs = (K + seg_len - 1) // seg_len
-
-    bm, bn, bk = _choose_blocks(M, N, seg_len)
-    Mp, Np = _round_up(M, bm), _round_up(N, bn)
-    Kp = _round_up(seg_len, bk)
-
-    C = mset.num_channels
-    total = jnp.zeros((M, N), jnp.int32)
-    for s in range(segs):
-        lo = s * seg_len
-        hi = min(lo + seg_len, K)
-        a_s = a_res[:, :, lo:hi]
-        b_s = b_res[:, lo:hi, :]
-        a_p = jnp.zeros((C, Mp, Kp), res_dtype).at[:, :M, : hi - lo].set(a_s)
-        b_p = jnp.zeros((C, Kp, Np), res_dtype).at[:, : hi - lo, :N].set(b_s)
-        out_res = impl(a_p, b_p, mset, bm, bn, bk)
-        total = total + mset.from_residues(out_res[:, :M, :N])
-    return total
+    ``b_res``: (C, K, N) planes from :func:`encode_rns_weights` — typically
+    a served weight, encoded once at load time.  Only the activation ``a``
+    is forward-converted per call; outputs are bit-identical to
+    ``rns_matmul(a, b)``.
+    """
+    return _rns_run(a, b_res, mset=mset, max_abs_a=max_abs_a,
+                    max_abs_b=max_abs_b, backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -221,6 +293,23 @@ def _choose_digit_blocks(M: int, N: int) -> tuple[int, int]:
     """Small tiles: the digit axis multiplies VMEM footprint by n^2."""
     bm = 32 if M >= 32 else _round_up(M, 8)
     bn = 32 if N >= 32 else _round_up(N, 8)
+    return bm, bn
+
+
+# Decode threshold: at or below this M the sdrns path switches to the
+# matvec-style schedule (whole M block + K segment resident, grid (C, N/bn)).
+DECODE_M = 8
+
+
+def _choose_decode_blocks(M: int, N: int) -> tuple[int, int]:
+    """Decode-shaped tiles: skinny M (padded to sublanes), wide N columns.
+
+    With bm <= 8 the n^2-scaled partial-product stack shrinks 4x vs the
+    matmul tiles, which buys lane-width (128) column tiles at the same VMEM
+    budget — fewer grid steps over N for the single-token step.
+    """
+    bm = _round_up(M, 8)
+    bn = 128 if N >= 128 else _round_up(N, 8)
     return bm, bn
 
 
@@ -247,9 +336,83 @@ def _sdrns_matmul_ref_impl(ad, bd, mset, bm, bn):
 
 register_impl("sdrns_matmul", "ref", _sdrns_matmul_ref_impl)
 
+# Decode-shaped variant: same kernel body, matvec schedule (bm rides whole).
+register_impl(
+    "sdrns_matvec", "pallas",
+    lambda ad, bd, mset, bm, bn: sdrns_matvec_pallas(
+        ad, bd, _wrap_signs(mset), bn=bn, interpret=False))
+register_impl(
+    "sdrns_matvec", "interpret",
+    lambda ad, bd, mset, bm, bn: sdrns_matvec_pallas(
+        ad, bd, _wrap_signs(mset), bn=bn, interpret=True))
+register_impl("sdrns_matvec", "ref", _sdrns_matmul_ref_impl)
+
 
 def _wrap_signs(mset: ModuliSet) -> jax.Array:
     return jnp.asarray([WRAP_SIGNS[k] for k, _ in mset.kinds], jnp.int32)
+
+
+def encode_sdrns_weights(w: jax.Array, mset: ModuliSet) -> jax.Array:
+    """Integer weights (..., K, N) -> SD digit planes (..., C, K, N, n) int8.
+
+    The quantize-once / convert-once half of the serving lifecycle: centered
+    residues per channel, each encoded as an n-digit SD vector.  Channel and
+    digit axes land around the matmul dims so stacked-layer leaves slice
+    cleanly under ``jax.lax.scan``.  Elementwise, so encode-then-slice along
+    K equals slice-then-encode — the property that keeps the resident path
+    bit-identical to convert-per-call.
+    """
+    n = _sdrns_digit_width(mset)
+    res = mset.to_residues(w.astype(jnp.int32), centered=True)  # (C, ..., K, N)
+    return sd.from_int(jnp.moveaxis(res, 0, -3), n)
+
+
+def _sdrns_run(a, b_dig, *, mset, max_abs_a, max_abs_b, backend):
+    """Shared runner over pre-encoded B digit planes.
+
+    Routes decode shapes (M <= DECODE_M) to the matvec schedule; both entry
+    points (convert-per-call and residue-resident) land here with identical
+    segmentation and tiling, so digit outputs are bit-identical.
+    """
+    n = _sdrns_digit_width(mset)
+    M, K = a.shape
+    C, K2, N, n2 = b_dig.shape
+    assert (K, n) == (K2, n2), (a.shape, b_dig.shape)
+
+    if M <= DECODE_M:
+        op = "sdrns_matvec"
+        bm, bn = _choose_decode_blocks(M, N)
+    else:
+        op = "sdrns_matmul"
+        bm, bn = _choose_digit_blocks(M, N)
+    impl = get_impl(op, backend)
+
+    segs = segment_count(K, max_abs_a, max_abs_b, mset)
+    seg_len = (K + segs - 1) // segs
+    # VMEM bound: the kernel materializes an (n, bm, k, bn, n) int8 PP
+    # stack per grid step, so the dynamic-range segmentation alone is not a
+    # memory bound — cap the K slice to keep that stack within budget.
+    k_cap = max(_PP_BUDGET_BYTES // (n * n * bm * bn), 1)
+    seg_len = min(seg_len, k_cap)
+    segs = (K + seg_len - 1) // seg_len
+
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+
+    total = jnp.zeros((M, N), jnp.int32)
+    for s in range(segs):
+        lo = s * seg_len
+        hi = min(lo + seg_len, K)
+        a_s = a[:, lo:hi].astype(jnp.int32)
+        # centered residues -> SD digit planes (zero rows/cols pad to tiles;
+        # the zero digit vector is the zero residue, so padding is inert)
+        a_res = mset.to_residues(a_s, centered=True)        # (C, M, ks)
+        ad = jnp.zeros((C, Mp, hi - lo, n), jnp.int8)
+        ad = ad.at[:, :M].set(sd.from_int(a_res, n))
+        bd = jnp.zeros((C, hi - lo, Np, n), jnp.int8)
+        bd = bd.at[:, :, :N].set(b_dig[:, lo:hi])
+        out_dig = impl(ad, bd, mset, bm, bn)                # (C, Mp, Np, n)
+        total = total + sdrns.sdrns_decode(out_dig[:, :M, :N], mset)
+    return total
 
 
 @functools.partial(
@@ -281,43 +444,34 @@ def sdrns_matmul(
     Returns:
       (M, N) int32, exact A @ B.
     """
-    n = _sdrns_digit_width(mset)
-    impl = get_impl("sdrns_matmul", backend)
+    b_dig = encode_sdrns_weights(b, mset)
+    return _sdrns_run(a, b_dig, mset=mset, max_abs_a=max_abs_a,
+                      max_abs_b=max_abs_b, backend=backend)
 
-    M, K = a.shape
-    K2, N = b.shape
-    assert K == K2, (a.shape, b.shape)
 
-    bm, bn = _choose_digit_blocks(M, N)
-    segs = segment_count(K, max_abs_a, max_abs_b, mset)
-    seg_len = (K + segs - 1) // segs
-    # VMEM bound: the kernel materializes an (n, bm, k, bn, n) int8 PP
-    # stack per grid step, so the dynamic-range segmentation alone is not a
-    # memory bound — cap the K slice to keep that stack within budget.
-    k_cap = max(_PP_BUDGET_BYTES // (n * n * bm * bn), 1)
-    seg_len = min(seg_len, k_cap)
-    segs = (K + seg_len - 1) // seg_len
+@functools.partial(
+    jax.jit,
+    static_argnames=("mset", "max_abs_a", "max_abs_b", "backend"),
+)
+def sdrns_matmul_enc(
+    a: jax.Array,
+    b_dig: jax.Array,
+    *,
+    mset: ModuliSet = P21,
+    max_abs_a: int,
+    max_abs_b: int,
+    backend: str | None = None,
+) -> jax.Array:
+    """:func:`sdrns_matmul` with a residue-resident B operand.
 
-    Mp, Np = _round_up(M, bm), _round_up(N, bn)
-    C = mset.num_channels
-
-    total = jnp.zeros((M, N), jnp.int32)
-    for s in range(segs):
-        lo = s * seg_len
-        hi = min(lo + seg_len, K)
-        a_s = a[:, lo:hi].astype(jnp.int32)
-        b_s = b[lo:hi, :].astype(jnp.int32)
-        # centered residues -> SD digit planes (zero rows/cols pad to tiles;
-        # the zero digit vector is the zero residue, so padding is inert)
-        a_res = mset.to_residues(a_s, centered=True)        # (C, M, ks)
-        b_res = mset.to_residues(b_s, centered=True)        # (C, ks, N)
-        ad = jnp.zeros((C, Mp, hi - lo, n), jnp.int8)
-        ad = ad.at[:, :M].set(sd.from_int(a_res, n))
-        bd = jnp.zeros((C, hi - lo, Np, n), jnp.int8)
-        bd = bd.at[:, :, :N].set(sd.from_int(b_res, n))
-        out_dig = impl(ad, bd, mset, bm, bn)                # (C, Mp, Np, n)
-        total = total + sdrns.sdrns_decode(out_dig[:, :M, :N], mset)
-    return total
+    ``b_dig``: (C, K, N, n) SD digit planes from
+    :func:`encode_sdrns_weights` — a served weight encoded once at prepare
+    time.  Only the activation ``a`` is quantizer-bounded and
+    forward-converted per call; digit outputs are bit-identical to
+    ``sdrns_matmul(a, b)`` because both share :func:`_sdrns_run`.
+    """
+    return _sdrns_run(a, b_dig, mset=mset, max_abs_a=max_abs_a,
+                      max_abs_b=max_abs_b, backend=backend)
 
 
 # ---------------------------------------------------------------------------

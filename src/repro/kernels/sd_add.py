@@ -29,7 +29,6 @@ def _kernel(x_ref, y_ref, out_ref, *, n: int, wrap_sign: int,
     x = x_ref[...].astype(jnp.int8)
     y = y_ref[...].astype(jnp.int8)
     p = x + y
-    nd = x.shape[-1]
     idx = jax.lax.broadcasted_iota(jnp.int32, p.shape, dimension=p.ndim - 1)
 
     # lookahead prev_i = p_{i-1}; position 0 sees wrap_sign * p_{n-1}

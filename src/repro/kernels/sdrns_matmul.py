@@ -37,7 +37,7 @@ from repro.core import sd
 from repro.core.sdrns import WRAP_SIGNS
 from repro.kernels import compat
 
-__all__ = ["sdrns_matmul_pallas", "WRAP_SIGNS"]
+__all__ = ["sdrns_matmul_pallas", "sdrns_matvec_pallas", "WRAP_SIGNS"]
 
 
 def _rotate_pp(digits: jax.Array, p: int, ws: jax.Array) -> jax.Array:
@@ -146,5 +146,57 @@ def sdrns_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((C, M, N, n), jnp.int8),
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(wrap_signs.astype(jnp.int32), a_dig, b_dig)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def sdrns_matvec_pallas(
+    a_dig: jax.Array,
+    b_dig: jax.Array,
+    wrap_signs: jax.Array,
+    *,
+    bn: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode-shaped SD-RNS modular matmul: skinny M, K-resident digit planes.
+
+    The serving decode step multiplies a handful of token activations
+    (M = batch, typically <= 8 after padding) against a resident weight's
+    digit planes.  Tiling the M axis buys nothing there, so this variant
+    keeps the whole (padded) M block *and* the whole K segment resident per
+    grid step and walks only ``(C, N/bn)`` — a matvec-style schedule: the A
+    digits load once per channel and B's K-resident planes stream through
+    wide ``bn`` column tiles.  The kernel body is byte-for-byte the matmul
+    body (same Eq. 2 rotations, same pairwise adder trees), so output digit
+    vectors stay bit-identical to :func:`sdrns_matmul_pallas` and the
+    digit-level reference.
+
+    Args:
+      a_dig: (C, M, K, n) int8 SD digits with M small (ops.py pads to 8).
+      b_dig: (C, K, N, n) int8 SD digits of the resident weight.
+      wrap_signs: (C,) int32 end-around signs per channel.
+    Returns:
+      (C, M, N, n) int8 SD digits of (A @ B) mod m_c per channel.
+    """
+    interpret = compat.resolve_interpret(interpret)
+    C, M, K, n = a_dig.shape
+    _, K2, N, n2 = b_dig.shape
+    assert (K, n) == (K2, n2), (a_dig.shape, b_dig.shape)
+    assert N % bn == 0, (N, bn)
+
+    grid = (C, N // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda c, j: (c,)),
+            pl.BlockSpec((1, M, K, n), lambda c, j: (c, 0, 0, 0)),
+            pl.BlockSpec((1, K, bn, n), lambda c, j: (c, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, M, bn, n), lambda c, j: (c, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, M, N, n), jnp.int8),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(wrap_signs.astype(jnp.int32), a_dig, b_dig)

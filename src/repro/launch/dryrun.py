@@ -40,7 +40,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
              save_hlo: bool = False) -> dict:
     # imports deferred: jax must init with the forced device count
     import jax
-    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import SHAPES, get_config

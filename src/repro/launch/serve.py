@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -32,6 +31,10 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-prepare", action="store_true",
+                    help="keep weights float and convert per call (baseline "
+                         "for the residue-resident default; see "
+                         "benchmarks/serving_bench.py)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -50,7 +53,8 @@ def main(argv=None):
     if cfg.is_encdec:
         s_max = P  # encoder memory length; decoder len = cfg.dec_len
 
-    engine = ServingEngine(model, params, batch=B, s_max=s_max)
+    engine = ServingEngine(model, params, batch=B, s_max=s_max,
+                           prepare=not args.no_prepare)
     rng = np.random.default_rng(args.seed)
     if cfg.is_encdec:
         from repro.models.frontends import synthetic_frames

@@ -17,10 +17,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.data.tokens import TokenPipeline
 from repro.models.api import build_model
 from repro.train.ft import FtConfig, run_training, run_with_restarts

@@ -9,6 +9,10 @@ pure jax functions suitable for ``jax.jit`` / ``.lower()``:
   *produced* (sized ``s_max``), not passed in
 * ``decode(params, token, cache, pos) -> (logits, cache)``
 * ``init_cache(batch, s_max) -> cache pytree``
+* ``prepare_params(params) -> params`` — residue-resident weight pass
+  (quantize once, forward-convert once; identity for bns).  Prefill/decode
+  accept either form — prepared trees are ordinary pytrees of arrays, so
+  the jit signatures and layer scans are unchanged.
 * ``input_specs(shape) -> batch pytree of ShapeDtypeStructs`` (dry-run)
 * ``cache_roles(cache) -> pytree of sharding-role tuples`` (dry-run)
 
@@ -32,6 +36,7 @@ from repro.models import frontends
 from repro.models import transformer as tf_mod
 from repro.models.attention import KVCache
 from repro.models.ssm import SsmCache
+from repro.quant import residency
 
 __all__ = ["Model", "build_model", "cross_entropy"]
 
@@ -55,6 +60,7 @@ class Model:
     init_cache: Callable[..., Any]
     input_specs: Callable[[ShapeConfig], dict[str, Any]]
     cache_roles: Callable[[Any], Any]
+    prepare_params: Callable[[Any], Any]
 
 
 MOE_AUX_WEIGHT = 0.01
@@ -98,6 +104,33 @@ def build_model(cfg: ArchConfig, *, backend: str = "bns",
                                             dense_kw=dense_kw)
         ce = cross_entropy(logits, batch["labels"])
         return ce + MOE_AUX_WEIGHT * aux, ce
+
+    # -- residue-resident weights -------------------------------------------
+    def prepare_params(params):
+        """Quantize-once / convert-once pass over a parameter tree.
+
+        Every ``{"w": ...}`` dense parameter dict (including stacked-layer
+        and stacked-expert leaves — leading axes are preserved, so the
+        layer scans slice prepared leaves exactly as they sliced ``w``) is
+        replaced with the residue-resident form of
+        :func:`repro.quant.residency.prepare_dense`.  Identity for the bns
+        backend.  The MoE router is *skipped*: it is consumed by a raw f32
+        einsum (routing stays float by design), not by ``linear.dense``.
+        Prepared trees are inference-only — use them for prefill/decode,
+        not ``loss``.
+        """
+        if backend == "bns":
+            return params
+
+        def walk(node, name=None):
+            if isinstance(node, dict):
+                if set(node) == {"w"} and name != "router":
+                    return residency.prepare_dense(
+                        node, backend=backend, bits=rns_bits)
+                return {k: walk(v, k) for k, v in node.items()}
+            return node
+
+        return walk(params)
 
     # -- serving -------------------------------------------------------------
     def init_cache(batch: int, s_max: int, dtype=jnp.bfloat16):
@@ -192,4 +225,5 @@ def build_model(cfg: ArchConfig, *, backend: str = "bns",
 
     return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
                  decode=decode, init_cache=init_cache,
-                 input_specs=input_specs, cache_roles=cache_roles)
+                 input_specs=input_specs, cache_roles=cache_roles,
+                 prepare_params=prepare_params)

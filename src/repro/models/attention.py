@@ -2,6 +2,12 @@
 prefill/decode — parameterized over the arithmetic backend via
 ``models.linear.dense`` and over the mesh via ``parallel.sharding.constrain``.
 
+All four projection weights (wq/wk/wv/wo) may arrive residue-resident
+(repro/quant/residency.py): ``linear.dense`` detects the prepared form, so
+the decode step's projections run conversion-free against precomputed digit
+planes — nothing here changes shape-wise, the prepared leaves just carry
+the extra channel/digit axes behind the same dict keys.
+
 Layout decisions (see DESIGN.md §5):
 * KV is stored *ungrouped* in the cache ((B, T, n_kv, hd)) and repeated to the
   full head count at compute time — scores then carry a single merged head dim

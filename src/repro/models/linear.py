@@ -9,6 +9,14 @@ partial-product rotations plus carry-free adder trees in one Pallas kernel
 estimator (exact integer forward, float backward), the standard QAT
 treatment.
 
+Residue-resident weights: when ``params`` is in the prepared form produced
+by :func:`repro.quant.residency.prepare_dense` (int codes + scale +
+precomputed residue/digit planes), :func:`dense` detects it and skips the
+per-call weight quantize + forward-convert entirely — only the activation
+is quantized and converted, and the kernel consumes the resident planes via
+the ``*_enc`` entry points.  Outputs are bit-identical to the unprepared
+path; the prepared path is inference-only (the float weight is dropped).
+
 The kernel implementation is selected by ``impl`` via the backend registry
 in :mod:`repro.kernels.ops`:
   * None        — auto by platform ("pallas" on TPU, "interpret" elsewhere).
@@ -20,13 +28,13 @@ in :mod:`repro.kernels.ops`:
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.moduli import P21, ModuliSet
 from repro.kernels import ops
+from repro.quant import residency
 from repro.quant.quant import qmax_for_bits, quantize_symmetric
 
 __all__ = ["dense", "init_dense", "rns_qmatmul", "sdrns_qmatmul"]
@@ -60,6 +68,11 @@ def _qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
 def _qmatmul_fwd(x, w, bits, mset, impl, op):
     qmax = qmax_for_bits(bits)
     qx, sx = quantize_symmetric(x, bits, axis=-1)      # per-token scales
+    # Per-call weight encode: the generic kernel entry re-derives the
+    # weight's residue/digit planes inside.  Counted at trace time so the
+    # zero-conversion property of the prepared path is testable.
+    residency.record("weight_quantize")
+    residency.record("weight_forward_convert")
     qw, sw = quantize_symmetric(w, bits, axis=0)       # per-out-channel
     matmul = ops.sdrns_matmul if op == "sdrns" else ops.rns_matmul
     acc = matmul(qx, qw, mset=mset, max_abs_a=qmax, max_abs_b=qmax,
@@ -91,6 +104,56 @@ def sdrns_qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
 
 
 # ---------------------------------------------------------------------------
+# Residue-resident forward: the weight's planes are precomputed, so only the
+# activation side quantizes/converts per call.  Inference-only (no VJP): the
+# float weight no longer exists to straight-through into.
+# ---------------------------------------------------------------------------
+
+
+def _check_resident_meta(params, bits, mset, op):
+    """Static bits/mset consistency check — works under jit and scan.
+
+    ``bits``/``mset`` must equal the prepare-time values: ``max_abs_b``
+    drives K-segmentation, and an understated bound silently overflows the
+    moduli range.  Prepared dicts encode the bit width in the *shape* of
+    the ``qbits`` leaf and the channel count/digit width in the plane
+    shapes, so the check is on static shapes, not (traced) values.
+    """
+    meta = params.get("qbits")
+    if meta is not None and meta.shape[-1] != bits:
+        raise ValueError(
+            f"residue-resident params were prepared with "
+            f"bits={meta.shape[-1]} but dense() was called with "
+            f"bits={bits} — K-segmentation bounds would be wrong"
+        )
+    C = mset.num_channels
+    planes = params["w_dig"] if op == "sdrns" else params["w_res"]
+    plane_c = planes.shape[-4] if op == "sdrns" else planes.shape[-3]
+    if plane_c != C:
+        raise ValueError(
+            f"residue-resident planes carry {plane_c} channels but mset "
+            f"{mset.moduli} has {C} — prepared under a different moduli set"
+        )
+
+
+def _qmatmul_resident(x, params, bits, mset, impl, op):
+    """x: (M, K) float, params: prepared dense dict -> (M, N) float."""
+    _check_resident_meta(params, bits, mset, op)
+    qmax = qmax_for_bits(bits)
+    qx, sx = quantize_symmetric(x, bits, axis=-1)      # per-token scales
+    residency.record("weight_reuse")
+    if op == "sdrns":
+        acc = ops.sdrns_matmul_enc(qx, params["w_dig"], mset=mset,
+                                   max_abs_a=qmax, max_abs_b=qmax,
+                                   backend=impl)
+    else:
+        acc = ops.rns_matmul_enc(qx, params["w_res"], mset=mset,
+                                 max_abs_a=qmax, max_abs_b=qmax,
+                                 backend=impl)
+    return acc.astype(jnp.float32) * sx * params["scale"]
+
+
+# ---------------------------------------------------------------------------
 # Public dense entry point.
 # ---------------------------------------------------------------------------
 
@@ -110,7 +173,24 @@ def dense(
 
     x: (..., d_in) -> (..., d_out).  Leading dims are flattened for the RNS
     path (the kernel is 2-D) and restored after.
+
+    If ``params`` is residue-resident (see :mod:`repro.quant.residency`),
+    the per-call weight quantize + forward-convert is skipped; ``backend``
+    must match the backend the parameters were prepared for, and ``bits`` /
+    ``mset`` must equal the prepare-time values (same jit statics).
     """
+    kind = residency.prepared_kind(params)
+    if kind is not None:
+        if backend != kind:
+            raise ValueError(
+                f"params are residue-resident for backend {kind!r} but "
+                f"dense was called with backend {backend!r}"
+            )
+        lead = x.shape[:-1]
+        d_in = x.shape[-1]
+        x2 = x.reshape(-1, d_in).astype(jnp.float32)
+        y2 = _qmatmul_resident(x2, params, bits, mset, impl, kind)
+        return y2.reshape(*lead, y2.shape[-1]).astype(compute_dtype)
     w = params["w"]
     if backend == "bns":
         # Dot-output dtype is a measured, per-arch policy (EXPERIMENTS.md

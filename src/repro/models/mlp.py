@@ -1,4 +1,10 @@
-"""Feed-forward blocks (SwiGLU / GELU) over the switchable arithmetic backend."""
+"""Feed-forward blocks (SwiGLU / GELU) over the switchable arithmetic backend.
+
+Weights may be residue-resident (repro/quant/residency.py): the gate/up/down
+dicts then hold precomputed digit or residue planes instead of a float
+``"w"``, and ``linear.dense`` serves them conversion-free.  The activation
+nonlinearity stays in float either way — only the matmuls change domain.
+"""
 from __future__ import annotations
 
 from typing import Any

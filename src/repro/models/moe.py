@@ -26,7 +26,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models import linear
 from repro.parallel.sharding import constrain, get_shard_ctx
 
 __all__ = ["init_moe", "moe", "moe_capacity"]

@@ -21,10 +21,17 @@ Caches (stacked over layers on axis 0):
 * dense/moe/vlm: ``KVCache(k, v)`` with leaves (L, B, S_max, n_kv, hd);
 * ssm: ``SsmCache(conv, state)`` with leaves (L, B, ...);
 * hybrid: ``{"ssm": SsmCache(L, ...), "attn": KVCache(n_apps, ...)}``.
+
+Residue-resident serving: every execution path here scans *whatever leaves
+the parameter tree holds* — prepared trees (models/api.py prepare_params)
+swap each stacked ``(L, K, N)`` float weight for stacked int8 codes, scales
+and digit/residue planes, and the same ``jax.lax.scan``s slice them per
+layer with no change to this module.  The decode step then performs zero
+weight quantize/forward-convert work (the conversion-free steady state the
+serving engine relies on).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

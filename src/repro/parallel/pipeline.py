@@ -51,7 +51,7 @@ def pipeline_apply(
     assert n_micro >= S, f"need >= {S} microbatches to fill the pipeline"
 
     p_specs = jax.tree_util.tree_map(
-        lambda l: P(axis, *[None] * (l.ndim - 1)), stage_params)
+        lambda a: P(axis, *[None] * (a.ndim - 1)), stage_params)
     x_spec = P(*[None] * x.ndim)
 
     @functools.partial(
@@ -59,7 +59,7 @@ def pipeline_apply(
         in_specs=(p_specs, x_spec), out_specs=x_spec, check_vma=False)
     def run(local_params, xs):
         # local_params leaves: (1, ...) -> squeeze the stage dim
-        lp = jax.tree_util.tree_map(lambda l: l[0], local_params)
+        lp = jax.tree_util.tree_map(lambda a: a[0], local_params)
         stage = jax.lax.axis_index(axis)
         mb_shape = xs.shape[1:]
         T = n_micro + S - 1          # fill + steady + drain ticks

@@ -26,13 +26,11 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import math
 import re
 from contextvars import ContextVar
 from typing import Any, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
@@ -214,7 +212,6 @@ def _leaf_roles(path_names: list[str], shape: tuple[int, ...],
                 *, stacked: bool, n_experts_tp: bool) -> list:
     """Role list (len == ndim) for one parameter leaf."""
     names = set(path_names)
-    nd = len(shape)
     lead: list = [None] if stacked else []
     body = shape[1:] if stacked else shape
 

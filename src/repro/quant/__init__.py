@@ -1,3 +1,5 @@
 from repro.quant.quant import dequantize, quantize_symmetric
+from repro.quant.residency import prepare_dense, prepared_kind
 
-__all__ = ["quantize_symmetric", "dequantize"]
+__all__ = ["quantize_symmetric", "dequantize", "prepare_dense",
+           "prepared_kind"]

@@ -1,0 +1,142 @@
+"""Residue-resident weight preparation — quantize once, convert once, serve many.
+
+The serving lifecycle of a quantized weight under the (SD-)RNS backends has
+three stages the paper amortizes once but a naive implementation repeats on
+every matmul call:
+
+1. **quantize** — float weight -> symmetric int codes + per-output-channel
+   scale (``quant.quantize_symmetric``);
+2. **forward-convert** — int codes -> centered residue planes (RNS) or SD
+   digit planes (SD-RNS) via :mod:`repro.kernels.ops` encode helpers;
+3. **serve** — every prefill/decode matmul consumes the planes directly
+   through the ``*_enc`` kernel entry points.
+
+:func:`prepare_dense` performs stages 1–2 eagerly, replacing the float
+``{"w": ...}`` parameter dict with the *prepared* form
+
+    {"qw": int8 codes, "scale": f32 per-out-channel, "w_dig"/"w_res": planes}
+
+``models.linear.dense`` detects the prepared form (:func:`prepared_kind`)
+and skips both per-call stages on the hot path.  Every leaf keeps the
+original leading (layer-stack) axes, so prepared parameter trees ride
+through ``jax.lax.scan``, checkpointing, and jit signatures unchanged.
+
+Prepared parameters are inference-only: the float weight is dropped (that
+is the memory/bandwidth point), so there is nothing to backpropagate into.
+Training keeps the unprepared form with its straight-through estimator.
+
+Trace counters
+--------------
+``record``/``counters`` count, *at trace time*, how often the per-call
+weight-encode path runs vs the resident path.  ``models.linear`` records
+``weight_quantize``/``weight_forward_convert`` when a matmul re-derives its
+weight planes and ``weight_reuse`` when it consumes resident ones — so a
+test can trace a decode step and assert the hot path performs zero weight
+conversions (tests/test_residency.py).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moduli import P21, ModuliSet
+from repro.kernels import ops
+from repro.quant.quant import dequantize, quantize_symmetric
+
+__all__ = [
+    "prepare_dense",
+    "prepared_kind",
+    "dequantize_weight",
+    "record",
+    "reset_counters",
+    "counters",
+]
+
+
+# ---------------------------------------------------------------------------
+# Trace-time conversion counters.
+# ---------------------------------------------------------------------------
+
+_COUNTS: collections.Counter = collections.Counter()
+
+
+def record(event: str) -> None:
+    """Count one trace-time occurrence of ``event`` (see module docstring)."""
+    _COUNTS[event] += 1
+
+
+def reset_counters() -> None:
+    _COUNTS.clear()
+
+
+def counters() -> dict[str, int]:
+    """Snapshot of the per-event trace counts since the last reset."""
+    return dict(_COUNTS)
+
+
+# ---------------------------------------------------------------------------
+# Prepared parameter form.
+# ---------------------------------------------------------------------------
+
+
+def prepare_dense(
+    params: dict[str, jax.Array],
+    *,
+    backend: str,
+    bits: int = 4,
+    mset: ModuliSet = P21,
+) -> dict[str, jax.Array]:
+    """``{"w": float}`` -> residue-resident form for ``backend``.
+
+    Quantization matches the per-call path exactly: symmetric, per output
+    channel (reduction over the K axis, ``axis=-2`` — identical to the
+    ``axis=0`` the 2-D hot path uses, but stack-safe).  The resulting digit
+    or residue planes are therefore bit-identical to what the unprepared
+    path derives on every call, which is what makes the swap transparent.
+
+    Leading axes of ``w`` (layer stacks, expert stacks) are preserved on
+    every produced leaf.
+    """
+    if backend not in ("rns", "sdrns"):
+        raise ValueError(
+            f"prepare_dense: backend must be 'rns' or 'sdrns', got {backend!r}"
+        )
+    w = params["w"].astype(jnp.float32)
+    if w.ndim < 2:
+        raise ValueError(f"dense weight must be at least 2-D, got {w.shape}")
+    qw, scale = quantize_symmetric(w, bits, axis=-2)
+    # qbits records the prepare-time bit width in its *shape* (last axis =
+    # bits, leading axes match the weight stack).  Array values are tracers
+    # under jit, but shapes stay static — so models/linear.py can verify
+    # bits/mset consistency inside jitted/scanned code, where a silent
+    # mismatch would under-segment K and overflow the moduli range.
+    out = {"qw": qw.astype(jnp.int8), "scale": scale,
+           "qbits": jnp.zeros(w.shape[:-2] + (bits,), jnp.int8)}
+    if backend == "sdrns":
+        out["w_dig"] = ops.encode_sdrns_weights(qw, mset)
+    else:
+        out["w_res"] = ops.encode_rns_weights(qw, mset)
+    return out
+
+
+def prepared_kind(params: Any) -> str | None:
+    """Which backend a parameter dict was prepared for, or ``None``."""
+    if not isinstance(params, dict):
+        return None
+    if "w_dig" in params:
+        return "sdrns"
+    if "w_res" in params:
+        return "rns"
+    return None
+
+
+def dequantize_weight(params: dict[str, jax.Array]) -> jax.Array:
+    """Reconstruct the float weight a prepared dict encodes (``qw * scale``).
+
+    The closest float form available once the original weight is dropped —
+    used for diagnostics and for comparing against the unprepared path.
+    """
+    return dequantize(params["qw"], params["scale"])

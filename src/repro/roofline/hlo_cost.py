@@ -247,7 +247,6 @@ def analyze_hlo(text: str) -> HloCost:
                     by += rb
                 continue
             if kind == "while":
-                mc = re.search(r"condition=%([\w.\-]+)", op.attrs)
                 mb = re.search(r"body=%([\w.\-]+)", op.attrs)
                 mt = _TRIP_RE.search(op.attrs)
                 trips = int(mt.group(1)) if mt else 1

@@ -7,6 +7,14 @@ place (functionally).  Static batching with slot reuse — the engine refills
 finished slots between generate() calls; positions are uniform per batch
 (the decode-step contract), which matches throughput-oriented TPU serving.
 
+Under the (SD-)RNS backends the engine makes weights *residue-resident* at
+construction (``prepare=True``, the default): ``model.prepare_params`` runs
+the quantize-once / forward-convert-once pass, so the steady-state decode
+loop performs zero weight quantize or forward-convert work — each step
+quantizes only the token activations and consumes the precomputed digit or
+residue planes (DESIGN.md §7).  The prefill/decode jit signatures accept
+either parameter form; prepared trees are ordinary pytrees of arrays.
+
 On the production mesh the same step functions lower with sharded caches —
 launch/dryrun.py compiles exactly these for the decode_32k / long_500k cells.
 """
@@ -33,9 +41,14 @@ class GenerateResult:
 
 class ServingEngine:
     def __init__(self, model: Model, params: Any, *, batch: int,
-                 s_max: int, cache_dtype=jnp.bfloat16):
+                 s_max: int, cache_dtype=jnp.bfloat16, prepare: bool = True):
+        """``prepare=True`` makes quantized weights residue-resident up
+        front (identity under the bns backend); ``prepare=False`` keeps the
+        convert-per-call path — useful only as a baseline to measure the
+        conversion overhead against (benchmarks/serving_bench.py)."""
         self.model = model
-        self.params = params
+        self.params = model.prepare_params(params) if prepare else params
+        self.prepared = prepare
         self.batch = batch
         self.s_max = s_max
         self.cache_dtype = cache_dtype

@@ -12,7 +12,7 @@ token streams.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -8,6 +8,15 @@ returns host numpy arrays; the caller ``device_put``s them with whatever
 shardings the *current* mesh wants — that indirection is what makes resume
 elastic (save on N hosts, restore onto M; tests/test_checkpoint.py).
 
+Residue-resident parameter trees (repro/quant/residency.py) checkpoint
+through the same path: the prepared form is a plain pytree whose int8 code /
+digit-plane leaves round-trip exactly through ``.npz``.  Because those
+planes are *exact* integer encodings — not approximations — ``restore``
+refuses float<->integer dtype-kind casts instead of silently ``astype``-ing:
+a float template under an integer plane (or vice versa) is a structure
+mismatch, and a lossy cast would corrupt the digit semantics.  Same-kind
+casts (f32 -> bf16, int8 -> int32) stay allowed for elastic resume.
+
 Retention keeps the newest ``keep`` checkpoints; cleanup is best-effort.
 """
 from __future__ import annotations
@@ -101,5 +110,13 @@ def restore(directory: str, template: Any, step: int | None = None) -> Any:
             raise ValueError(
                 f"shape mismatch for {key}: ckpt {arr.shape} vs "
                 f"template {tmpl.shape}")
+        tdtype = np.dtype(tmpl.dtype)
+        if (np.issubdtype(arr.dtype, np.integer)
+                != np.issubdtype(tdtype, np.integer)):
+            raise ValueError(
+                f"dtype-kind mismatch for {key}: ckpt {arr.dtype} vs "
+                f"template {tdtype} — integer leaves (quantized codes, "
+                "residue/digit planes) are exact and must not cast "
+                "across kinds")
         leaves.append(arr.astype(tmpl.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -21,11 +21,9 @@ control flow is exercised in-process so it is *testable on CPU*:
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Any, Callable
 
-import jax
 import numpy as np
 
 from repro.train import checkpoint

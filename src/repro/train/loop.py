@@ -45,11 +45,11 @@ def make_train_step(model: Model, opt_cfg: OptConfig,
 
             def body(acc, mb):
                 g_acc, l_acc, c_acc = acc
-                (l, c), g = grad_fn(params, mb)
+                (lval, c), g = grad_fn(params, mb)
                 g_acc = jax.tree_util.tree_map(
                     lambda a, b: (a + b.astype(accum_dtype)
                                   ).astype(accum_dtype), g_acc, g)
-                return (g_acc, l_acc + l, c_acc + c), None
+                return (g_acc, l_acc + lval, c_acc + c), None
 
             (gsum, lsum, csum), _ = jax.lax.scan(
                 body, (zeros, jnp.float32(0), jnp.float32(0)), micro)

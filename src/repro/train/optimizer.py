@@ -45,7 +45,10 @@ def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
 
 def init_opt_state(params: Any, cfg: OptConfig) -> dict[str, Any]:
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {
         "m": jax.tree_util.tree_map(zeros, params),
         "v": jax.tree_util.tree_map(zeros, params),

@@ -48,6 +48,44 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         checkpoint.restore(str(tmp_path), {"x": jnp.zeros((3,))})
 
 
+def test_checkpoint_rejects_float_int_kind_cast(tmp_path):
+    """Digit/residue planes are exact integer encodings — restoring them
+    into a float template (or vice versa) must fail loudly, not silently
+    ``astype`` into corruption."""
+    checkpoint.save(str(tmp_path), 1, {"planes": jnp.ones((4,), jnp.int8)})
+    with pytest.raises(ValueError, match="dtype-kind"):
+        checkpoint.restore(str(tmp_path), {"planes": jnp.zeros((4,))})
+
+
+def test_residue_resident_checkpoint_roundtrip(tmp_path):
+    """prepared -> saved -> loaded params: bit-identical digit planes and
+    identical logits (the quantize-once / convert-once artifact survives the
+    checkpoint boundary exactly)."""
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(),
+                              n_layers=1, d_model=16, n_heads=2, n_kv=1,
+                              d_ff=32, vocab=64, head_dim=8,
+                              compute_dtype="float32")
+    model = build_model(cfg, backend="sdrns", rns_impl="interpret")
+    params = model.init(jax.random.PRNGKey(0))
+    prepared = model.prepare_params(params)
+    checkpoint.save(str(tmp_path), 3, prepared)
+    back = checkpoint.restore(str(tmp_path), prepared)
+
+    for (path_a, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(prepared)[0],
+            jax.tree_util.tree_flatten_with_path(back)[0]):
+        assert np.asarray(b).dtype == np.asarray(a).dtype, path_a
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(path_a))
+
+    toks = (np.arange(4, dtype=np.int32)[None, :].repeat(2, 0)) % cfg.vocab
+    prefill = jax.jit(model.prefill, static_argnames=("s_max",))
+    logits_a, _ = prefill(prepared, {"tokens": toks}, s_max=8)
+    logits_b, _ = prefill(back, {"tokens": toks}, s_max=8)
+    np.testing.assert_array_equal(np.asarray(logits_a),
+                                  np.asarray(logits_b))
+
+
 def _tiny_setup(tmp_path, name, total_steps, failure_at=None):
     cfg = dataclasses.replace(get_config("yi-6b").reduced(),
                               n_layers=1, d_model=32, n_heads=2, n_kv=1,

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline.hlo_cost import analyze_hlo
 

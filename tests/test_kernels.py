@@ -4,13 +4,12 @@ Every kernel is validated against its ref.py pure-jnp oracle across a
 shape/dtype/moduli sweep, plus against the exact integer matmul oracle
 end-to-end (forward conv -> kernel -> reverse conv == int32 matmul).
 """
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core import P16, P21, P24, CRT40, sd, sdrns
-from repro.core.moduli import ModuliSet
+from repro.core import CRT40, P16, P21, P24, sd
 from repro.kernels import ops, ref
 from repro.kernels.rns_matmul import rns_matmul_pallas
 

@@ -1,7 +1,7 @@
 """Property tests for moduli sets and residue conversions."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.core.moduli import (

@@ -1,0 +1,229 @@
+"""Residue-resident weights: conversion-free decode, bit-identity, routing.
+
+The contract under test (DESIGN.md §7):
+
+1. ``prepare_dense`` replaces ``{"w"}`` with int8 codes + scale + digit (or
+   residue) planes, preserving leading stack axes; the MoE router is skipped.
+2. The prepared planes are bit-identical to what the convert-per-call path
+   derives on every call — encode-then-slice == slice-then-encode.
+3. A traced decode step with prepared params performs *zero* weight
+   quantize / forward-convert operations (trace counters), while the
+   unprepared step pays both per matmul.
+4. Per-dense outputs are bit-identical eagerly; under jit/scan the integer
+   results stay exact and the float epilogue agrees to f32 epsilon (XLA may
+   fuse the two different graphs differently), so greedy decode is
+   token-identical.
+5. Decode shapes (M <= DECODE_M) route through the ``sdrns_matvec`` op,
+   whose digit outputs are bit-exact vs the digit-level reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import sd
+from repro.core.moduli import P21
+from repro.kernels import ops
+from repro.kernels.ref import sdrns_matmul_ref
+from repro.kernels.sdrns_matmul import WRAP_SIGNS, sdrns_matvec_pallas
+from repro.models import linear
+from repro.models.api import build_model
+from repro.quant import residency
+from repro.quant.quant import quantize_symmetric
+from repro.serving.engine import ServingEngine
+
+RNG = np.random.default_rng(11)
+
+
+def _tiny_model(backend="sdrns"):
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(),
+                              n_layers=1, d_model=16, n_heads=2, n_kv=1,
+                              d_ff=32, vocab=64, head_dim=8,
+                              compute_dtype="float32")
+    model = build_model(cfg, backend=backend, rns_impl="interpret")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def sdrns_model():
+    cfg, model, params = _tiny_model("sdrns")
+    return cfg, model, params, model.prepare_params(params)
+
+
+# ---------------------------------------------------------------------------
+# 1. Prepared form structure.
+# ---------------------------------------------------------------------------
+
+
+def test_prepare_dense_structure_and_stack_axes(sdrns_model):
+    _, _, params, prepared = sdrns_model
+    L = params["layers"]["attn"]["wq"]["w"].shape[0]
+    p = prepared["layers"]["attn"]["wq"]
+    K, N = params["layers"]["attn"]["wq"]["w"].shape[1:]
+    assert set(p) == {"qw", "scale", "w_dig", "qbits"}
+    assert p["qw"].shape == (L, K, N) and p["qw"].dtype == jnp.int8
+    assert p["scale"].shape == (L, 1, N)
+    assert p["qbits"].shape == (L, 4)       # prepare-time bits, shape-encoded
+    C, n = P21.num_channels, 7
+    assert p["w_dig"].shape == (L, C, K, N, n)
+    assert p["w_dig"].dtype == jnp.int8
+    # non-dense leaves ride through untouched
+    assert "table" in prepared["embed"]
+    assert "scale" in prepared["final_norm"]
+
+
+def test_prepare_skips_moe_router(sdrns_model):
+    _, model, _, _ = sdrns_model
+    tree = {"router": {"w": jnp.ones((8, 4))},
+            "proj": {"w": jnp.ones((8, 4))}}
+    out = model.prepare_params(tree)
+    assert set(out["router"]) == {"w"}          # raw f32 einsum operand
+    assert residency.prepared_kind(out["proj"]) == "sdrns"
+
+
+def test_prepare_backend_mismatch_raises():
+    params = linear.init_dense(jax.random.PRNGKey(1), 8, 8)
+    prep = residency.prepare_dense(params, backend="rns", bits=4)
+    assert residency.prepared_kind(prep) == "rns"
+    with pytest.raises(ValueError, match="residue-resident"):
+        linear.dense(prep, jnp.ones((2, 8)), backend="sdrns",
+                     impl="interpret", compute_dtype=jnp.float32)
+
+
+def test_prepare_bits_mismatch_raises_even_under_jit():
+    """bits drives K-segmentation; consuming int8-prepared planes with a
+    narrower bits setting would silently overflow the moduli range.  The
+    bit width is shape-encoded (qbits leaf), so the check fires at trace
+    time — under jit, where the serving engine actually runs."""
+    params = linear.init_dense(jax.random.PRNGKey(4), 8, 8)
+    prep = residency.prepare_dense(params, backend="rns", bits=8)
+    x = jnp.ones((2, 8))
+    kw = dict(backend="rns", bits=4, impl="interpret",
+              compute_dtype=jnp.float32)
+    with pytest.raises(ValueError, match="K-segmentation"):
+        linear.dense(prep, x, **kw)
+    with pytest.raises(ValueError, match="K-segmentation"):
+        jax.jit(lambda p, x: linear.dense(p, x, **kw))(prep, x)
+
+
+# ---------------------------------------------------------------------------
+# 2. Plane bit-identity vs the per-call encode.
+# ---------------------------------------------------------------------------
+
+
+def test_prepared_planes_match_per_call_encode():
+    w = jnp.asarray(RNG.normal(size=(3, 12, 8)), jnp.float32)  # stacked
+    prep = residency.prepare_dense({"w": w}, backend="sdrns", bits=4)
+    qw, sw = quantize_symmetric(w, 4, axis=-2)
+    np.testing.assert_array_equal(np.asarray(prep["qw"]), np.asarray(qw))
+    np.testing.assert_array_equal(np.asarray(prep["scale"]), np.asarray(sw))
+    per_layer = jnp.stack([ops.encode_sdrns_weights(qw[i], P21)
+                           for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(prep["w_dig"]),
+                                  np.asarray(per_layer))
+
+
+# ---------------------------------------------------------------------------
+# 3. Zero weight conversions in the traced decode step.
+# ---------------------------------------------------------------------------
+
+
+def test_decode_trace_zero_weight_conversions(sdrns_model):
+    cfg, model, params, prepared = sdrns_model
+    tok = jnp.zeros((2, 1), jnp.int32)
+    cache = model.init_cache(2, 8)
+    pos = jnp.int32(3)
+
+    residency.reset_counters()
+    jax.make_jaxpr(model.decode)(prepared, tok, cache, pos)
+    got = residency.counters()
+    assert got.get("weight_quantize", 0) == 0
+    assert got.get("weight_forward_convert", 0) == 0
+    assert got.get("weight_reuse", 0) > 0
+
+    residency.reset_counters()
+    jax.make_jaxpr(model.decode)(params, tok, cache, pos)
+    base = residency.counters()
+    residency.reset_counters()
+    # the unprepared step pays quantize + forward-convert per weight matmul
+    assert base["weight_quantize"] == got["weight_reuse"]
+    assert base["weight_forward_convert"] == got["weight_reuse"]
+
+
+# ---------------------------------------------------------------------------
+# 4. Output bit-identity (eager) and decode equivalence (jitted).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["sdrns", "rns"])
+@pytest.mark.parametrize("M", [4, 16])  # matvec route and matmul route
+def test_dense_output_bit_identical_eager(backend, M):
+    params = linear.init_dense(jax.random.PRNGKey(2), 24, 16)
+    x = jax.random.normal(jax.random.PRNGKey(3), (M, 24))
+    prep = residency.prepare_dense(params, backend=backend, bits=4)
+    kw = dict(backend=backend, impl="interpret", compute_dtype=jnp.float32)
+    y_u = linear.dense(params, x, **kw)
+    y_p = linear.dense(prep, x, **kw)
+    np.testing.assert_array_equal(np.asarray(y_u), np.asarray(y_p))
+
+
+def test_engine_decode_token_identical_and_logits_close(sdrns_model):
+    cfg, model, params, _ = sdrns_model
+    prompts = (np.arange(6, dtype=np.int32)[None, :]
+               .repeat(2, 0)) % cfg.vocab
+    eng_conv = ServingEngine(model, params, batch=2, s_max=12,
+                             prepare=False)
+    eng_res = ServingEngine(model, params, batch=2, s_max=12)
+    assert eng_res.prepared and not eng_conv.prepared
+    r_conv = eng_conv.generate({"tokens": prompts}, max_new=3)
+    r_res = eng_res.generate({"tokens": prompts}, max_new=3)
+    # integer matmul results are exact on both paths; the float epilogue may
+    # fuse differently under jit, so logits agree to f32 epsilon and the
+    # greedy argmax is token-identical.
+    np.testing.assert_array_equal(r_conv.tokens, r_res.tokens)
+    np.testing.assert_allclose(r_conv.prefill_logits, r_res.prefill_logits,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_engine_prepare_is_identity_for_bns():
+    cfg, model, params = _tiny_model("bns")
+    eng = ServingEngine(model, params, batch=2, s_max=8)
+    assert eng.params is params
+
+
+# ---------------------------------------------------------------------------
+# 5. Decode-shaped kernel: routing and digit bit-exactness.
+# ---------------------------------------------------------------------------
+
+
+def test_matvec_kernel_digit_bit_exact_vs_reference():
+    M, K, N = 8, 6, 16
+    a = RNG.integers(-5, 6, (M, K)).astype(np.int32)
+    b = RNG.integers(-5, 6, (K, N)).astype(np.int32)
+    n = P21.kinds[0][1]
+    ad = sd.from_int(P21.to_residues(jnp.asarray(a), centered=True), n)
+    bd = sd.from_int(P21.to_residues(jnp.asarray(b), centered=True), n)
+    ws = jnp.asarray([WRAP_SIGNS[k] for k, _ in P21.kinds], jnp.int32)
+    got = sdrns_matvec_pallas(ad, bd, ws, bn=8, interpret=True)
+    want = sdrns_matmul_ref(ad, bd, P21)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(jnp.max(jnp.abs(got))) <= 1  # digit closure
+
+
+def test_decode_m_routes_to_matvec_and_matches_oracle():
+    assert callable(ops.get_impl("sdrns_matvec", "interpret"))
+    assert callable(ops.get_impl("sdrns_matvec", "ref"))
+    for M in (1, ops.DECODE_M):
+        a = RNG.integers(-7, 8, (M, 20)).astype(np.int32)
+        b = RNG.integers(-7, 8, (20, 40)).astype(np.int32)
+        got = ops.sdrns_matmul(jnp.asarray(a), jnp.asarray(b), mset=P21,
+                               max_abs_a=7, max_abs_b=7,
+                               backend="interpret")
+        np.testing.assert_array_equal(
+            np.asarray(got), a.astype(np.int64) @ b.astype(np.int64))

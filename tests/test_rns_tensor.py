@@ -1,10 +1,10 @@
 """RnsTensor: pytree behaviour, ring ops, lazy matmul semantics."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.core import P16, P21, RnsTensor
+from repro.core import P21, RnsTensor
 
 
 def test_pytree_roundtrip_and_jit():

@@ -1,6 +1,6 @@
 """Property tests for the signed-digit redundant layer (paper Eq. 1)."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sd

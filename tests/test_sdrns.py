@@ -1,11 +1,11 @@
 """Property tests for SD-RNS: carry-free modular ops (paper §II, Eq. 2)."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sd, sdrns
-from repro.core.moduli import P16, P21, P24, special_set
+from repro.core.moduli import P16, P21, P24
 
 KINDS = [("pow2m1", 6), ("pow2", 6), ("pow2p1", 6),
          ("pow2m1", 8), ("pow2", 8), ("pow2p1", 8)]

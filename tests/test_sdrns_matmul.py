@@ -13,10 +13,10 @@ Three layers of checking (Pallas interpret mode on CPU):
    ``models/linear.py``'s ``backend="sdrns"`` agrees with the bns matmul up
    to int4 quantization error.
 """
-import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.core import sd
 from repro.core.moduli import P16, P21, P24, ModuliSet

@@ -24,9 +24,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import numerics as nx
 from repro.core.moduli import P21
-from repro.kernels import ops
 from repro.kernels.ref import int_matmul_ref
+
+RNS_SPEC = nx.EncodeSpec(layout="rns", mset=P21, max_abs=7)
+SD_SPEC = nx.EncodeSpec(layout="sd", mset=P21, max_abs=7)
 
 
 def run(verbose: bool = True, smoke: bool = False) -> dict:
@@ -40,8 +43,8 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
     for (M, K, N) in shapes:
         a = rng.integers(-7, 8, (M, K)).astype(np.int32)
         b = rng.integers(-7, 8, (K, N)).astype(np.int32)
-        out = ops.rns_matmul(jnp.asarray(a), jnp.asarray(b), mset=P21,
-                             max_abs_a=7, max_abs_b=7, interpret=True)
+        out = nx.matmul(jnp.asarray(a), nx.encode(jnp.asarray(b), RNS_SPEC),
+                        max_abs_a=7, backend="interpret")
         ref = int_matmul_ref(jnp.asarray(a), jnp.asarray(b))
         exact = bool(jnp.array_equal(out, ref))
         results.append({"shape": (M, K, N), "exact": exact})
@@ -60,8 +63,8 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
     M = K = N = 64 if smoke else 256
     a = jnp.asarray(rng.integers(-7, 8, (M, K)), jnp.int32)
     b = jnp.asarray(rng.integers(-7, 8, (K, N)), jnp.int32)
-    f = jax.jit(lambda a, b: ops.rns_matmul(a, b, mset=P21, max_abs_a=7,
-                                            max_abs_b=7, use_ref=True))
+    f = jax.jit(lambda a, b: nx.matmul(a, nx.encode(b, RNS_SPEC),
+                                       max_abs_a=7, backend="ref"))
     t_rns = _time(lambda: f(a, b), reps=20)
     af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
     g = jax.jit(lambda a, b: a @ b)
@@ -72,15 +75,15 @@ def run(verbose: bool = True, smoke: bool = False) -> dict:
     Msd, Ksd, Nsd = (16, 8, 16) if smoke else (32, 16, 32)
     a_sd = jnp.asarray(rng.integers(-7, 8, (Msd, Ksd)), jnp.int32)
     b_sd = jnp.asarray(rng.integers(-7, 8, (Ksd, Nsd)), jnp.int32)
-    sd_kw = dict(mset=P21, max_abs_a=7, max_abs_b=7)
-    fused = ops.sdrns_matmul(a_sd, b_sd, backend="interpret", **sd_kw)
+    b_enc = nx.encode(b_sd, SD_SPEC)  # forward conversion paid once
+    fused = nx.matmul(a_sd, b_enc, max_abs_a=7, backend="interpret")
     sd_exact = bool(jnp.array_equal(fused, int_matmul_ref(a_sd, b_sd)))
     assert sd_exact, "fused SD-RNS kernel mismatch vs int oracle"
 
-    t_fused = _time(lambda: ops.sdrns_matmul(
-        a_sd, b_sd, backend="interpret", **sd_kw))
-    t_unfused = _time(lambda: ops.sdrns_matmul(
-        a_sd, b_sd, backend="ref", **sd_kw))
+    t_fused = _time(lambda: nx.matmul(a_sd, b_enc, max_abs_a=7,
+                                      backend="interpret"))
+    t_unfused = _time(lambda: nx.matmul(a_sd, b_enc, max_abs_a=7,
+                                        backend="ref"))
 
     out = {"smoke": smoke,
            "exactness": results, "lazy_capacity": cap,

@@ -1,0 +1,193 @@
+"""Typed numerics API bench: prepared MoE decode + encode-once matmul.
+
+Two measurements on the post-PR-3 surface (everything through
+``repro.numerics`` — no deprecation shims anywhere near a timed loop):
+
+1. **Prepared MoE decode** — a tiny mixture-of-experts model served under
+   the rns/sdrns systems, decode ms/token with residue-resident
+   ``ResidueTensor`` expert stacks (``prepare=True``) vs per-call
+   conversion (``prepare=False``), plus the structural proof: the traced
+   prepared decode step performs *zero* weight quantize/forward-convert
+   events while covering the expert-stack ``nx.einsum`` and the
+   tied-embedding logits ``nx.matmul`` (the two residency candidates the
+   ROADMAP named).
+2. **Encode-once matmul** — ``nx.matmul`` against a pre-encoded weight vs
+   encode+matmul per call, at a prefill shape and a decode (matvec-route)
+   shape, rns layout on the interpret backend: the conversion cost the
+   typed carrier amortizes, visible at the API level.
+
+Run:  PYTHONPATH=src python benchmarks/numerics_bench.py [--smoke]
+Writes BENCH_numerics[_smoke].json for the CI artifact trail.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import numerics as nx
+from repro.configs import get_config
+from repro.core.moduli import P21
+from repro.models.api import build_model
+from repro.quant import residency
+from repro.serving.engine import ServingEngine
+
+
+def _decode_ms(eng: ServingEngine, prompts: np.ndarray, *, steps: int,
+               reps: int) -> float:
+    prompt_len = prompts.shape[1]
+
+    def loop():
+        logits, cache = eng._prefill(eng.params, {"tokens": prompts},
+                                     s_max=eng.s_max)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        t0 = time.perf_counter()
+        for i in range(steps):
+            logits, cache = eng._decode(eng.params, tok, cache,
+                                        jnp.int32(prompt_len + i))
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        tok.block_until_ready()
+        return (time.perf_counter() - t0) / steps
+
+    loop()  # warmup: compile prefill + decode
+    return float(min(loop() for _ in range(reps))) * 1e3
+
+
+def bench_moe_decode(system: str, *, d_model: int, d_ff: int,
+                     n_experts: int, steps: int, reps: int) -> dict:
+    cfg = dataclasses.replace(
+        get_config("moonshot-v1-16b-a3b").reduced(),
+        n_layers=1, d_model=d_model, d_ff=d_ff, n_experts=n_experts,
+        top_k=2, n_heads=2, n_kv=1, head_dim=d_model // 2,
+        vocab=64, compute_dtype="float32")
+    model = build_model(cfg, system=system, rns_impl="interpret")
+    params = model.init(jax.random.PRNGKey(0))
+
+    B, P = 2, 6
+    s_max = P + steps + 2
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (B, P)).astype(np.int32)
+
+    eng_conv = ServingEngine(model, params, batch=B, s_max=s_max,
+                             prepare=False)
+    eng_res = ServingEngine(model, params, batch=B, s_max=s_max)
+
+    # structural proof, recorded with the numbers: the prepared decode
+    # trace is conversion-free across experts + logits
+    tok = jnp.zeros((B, 1), jnp.int32)
+    cache = model.init_cache(B, s_max)
+    residency.reset_counters()
+    jax.make_jaxpr(model.decode)(eng_res.params, tok, cache, jnp.int32(3))
+    counts = residency.counters()
+    assert counts.get("weight_quantize", 0) == 0, counts
+    assert counts.get("weight_forward_convert", 0) == 0, counts
+
+    ms_conv = _decode_ms(eng_conv, prompts, steps=steps, reps=reps)
+    ms_res = _decode_ms(eng_res, prompts, steps=steps, reps=reps)
+    return {
+        "cell": "moe_decode",
+        "system": system,
+        "d_model": d_model,
+        "n_experts": n_experts,
+        "batch": B,
+        "decode_steps": steps,
+        "decode_ms_per_call_conversion": ms_conv,
+        "decode_ms_residue_resident": ms_res,
+        "speedup": ms_conv / ms_res,
+        "trace_weight_reuse": counts.get("weight_reuse", 0),
+        "trace_weight_conversions": 0,
+    }
+
+
+def bench_encode_once(*, M: int, K: int, N: int, reps: int) -> dict:
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(-7, 8, (M, K)), jnp.int32)
+    b = jnp.asarray(rng.integers(-7, 8, (K, N)), jnp.int32)
+    spec = nx.EncodeSpec(layout="rns", mset=P21, max_abs=7)
+    t = nx.encode(b, spec)
+
+    resident = jax.jit(
+        lambda a, t: nx.matmul(a, t, max_abs_a=7, backend="interpret"))
+    per_call = jax.jit(
+        lambda a, b: nx.matmul(a, nx.encode(b, spec), max_abs_a=7,
+                               backend="interpret"))
+
+    def _time(f, *args):
+        f(*args).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            f(*args).block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e3
+
+    ms_res = _time(resident, a, t)
+    ms_conv = _time(per_call, a, b)
+    return {
+        "cell": "encode_once_matmul",
+        "shape": (M, K, N),
+        "decode_shape": M <= nx.DECODE_M,
+        "ms_per_call_encode": ms_conv,
+        "ms_resident": ms_res,
+        "speedup": ms_conv / ms_res,
+    }
+
+
+def run(*, smoke: bool = False, verbose: bool = True) -> dict:
+    if smoke:
+        moe_cells = [("rns", dict(d_model=32, d_ff=64, n_experts=4,
+                                  steps=6, reps=3))]
+        mm_cells = [dict(M=4, K=256, N=128, reps=10),
+                    dict(M=64, K=256, N=128, reps=10)]
+    else:
+        moe_cells = [("rns", dict(d_model=64, d_ff=128, n_experts=4,
+                                  steps=16, reps=5)),
+                     ("sdrns", dict(d_model=16, d_ff=32, n_experts=4,
+                                    steps=4, reps=2))]
+        mm_cells = [dict(M=4, K=512, N=256, reps=20),
+                    dict(M=128, K=512, N=256, reps=20)]
+    cells = []
+    for system, kw in moe_cells:
+        r = bench_moe_decode(system, **kw)
+        cells.append(r)
+        if verbose:
+            print(f"[numerics_bench] moe decode ({system}, "
+                  f"E={r['n_experts']}, d={r['d_model']}): "
+                  f"per-call {r['decode_ms_per_call_conversion']:.2f} "
+                  f"ms/tok vs resident "
+                  f"{r['decode_ms_residue_resident']:.2f} ms/tok "
+                  f"({r['speedup']:.3f}x), "
+                  f"{r['trace_weight_reuse']} resident consumers, "
+                  "0 trace-time conversions")
+    for kw in mm_cells:
+        r = bench_encode_once(**kw)
+        cells.append(r)
+        if verbose:
+            shape_tag = "decode" if r["decode_shape"] else "prefill"
+            print(f"[numerics_bench] nx.matmul {r['shape']} ({shape_tag}): "
+                  f"per-call encode {r['ms_per_call_encode']:.2f} ms vs "
+                  f"resident {r['ms_resident']:.2f} ms "
+                  f"({r['speedup']:.3f}x)")
+    return {"smoke": smoke, "cells": cells}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for CI on CPU")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke)
+    path = args.json or ("BENCH_numerics_smoke.json" if args.smoke
+                         else "BENCH_numerics.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[numerics_bench] wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,13 +1,14 @@
 """Per-token decode latency: residue-resident weights vs per-call conversion.
 
 The serving engine's steady state is the decode loop; under the (SD-)RNS
-backends the unprepared path re-quantizes and forward-converts every weight
+systems the unprepared path re-quantizes and forward-converts every weight
 matrix on *every* token step, while the residue-resident path (prepare_params
-at engine construction) did that once and serves precomputed planes.  This
-bench measures exactly that delta: two engines over the same model and
-parameters, one with ``prepare=False``, one with the default
-``prepare=True``, timed over the same jitted decode step loop on the
-interpret kernel backend.
+at engine construction — ResidueTensor leaves consumed through the typed
+repro.numerics API, no deprecation shims anywhere in the measured loop) did
+that once and serves precomputed planes.  This bench measures exactly that
+delta: two engines over the same model and parameters, one with
+``prepare=False``, one with the default ``prepare=True``, timed over the
+same jitted decode step loop on the interpret kernel backend.
 
 What is asserted vs reported:
 
@@ -66,14 +67,14 @@ def _decode_ms(eng: ServingEngine, prompts: np.ndarray, *, steps: int,
     return float(min(loop() for _ in range(reps))) * 1e3
 
 
-def bench_backend(backend: str, *, d_model: int, d_ff: int, n_layers: int,
-                  steps: int, reps: int) -> dict:
+def bench_system(system: str, *, d_model: int, d_ff: int, n_layers: int,
+                 steps: int, reps: int) -> dict:
     cfg = dataclasses.replace(
         get_config("yi-6b").reduced(),
         n_layers=n_layers, d_model=d_model, d_ff=d_ff,
         n_heads=2, n_kv=1, head_dim=d_model // 2,
         vocab=64, compute_dtype="float32")
-    model = build_model(cfg, backend=backend, rns_impl="interpret")
+    model = build_model(cfg, system=system, rns_impl="interpret")
     params = model.init(jax.random.PRNGKey(0))
 
     B, P = 4, 8
@@ -87,7 +88,7 @@ def bench_backend(backend: str, *, d_model: int, d_ff: int, n_layers: int,
     ms_conv = _decode_ms(eng_conv, prompts, steps=steps, reps=reps)
     ms_res = _decode_ms(eng_res, prompts, steps=steps, reps=reps)
     return {
-        "backend": backend,
+        "system": system,
         "d_model": d_model,
         "n_layers": n_layers,
         "batch": B,
@@ -114,13 +115,13 @@ def run(*, smoke: bool = False, verbose: bool = True) -> dict:
                            reps=3)),
         ]
     results = []
-    for backend, kw in cells:
-        r = bench_backend(backend, **kw)
+    for system, kw in cells:
+        r = bench_system(system, **kw)
         results.append(r)
         if verbose:
-            tag = ("gate" if backend == "rns"
+            tag = ("gate" if system == "rns"
                    else "informational on CPU — see module docstring")
-            print(f"[serving_bench] {backend} decode "
+            print(f"[serving_bench] {system} decode "
                   f"(B={r['batch']}, L={r['n_layers']}, "
                   f"d={r['d_model']}, interpret kernels) [{tag}]:")
             print("  per-call conversion : "
@@ -145,7 +146,7 @@ def main(argv=None):
         json.dump(out, f, indent=2)
     print(f"[serving_bench] wrote {path}")
     if args.smoke:
-        gate = next(c for c in out["cells"] if c["backend"] == "rns")
+        gate = next(c for c in out["cells"] if c["system"] == "rns")
         if gate["speedup"] <= 1.0:
             print("[serving_bench] FAIL: residue-resident decode did not "
                   "beat per-call conversion on the rns cell")

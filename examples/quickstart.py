@@ -1,15 +1,20 @@
 """Quickstart: the paper's SD-RNS arithmetic in five minutes.
 
+Two knobs to keep apart throughout (DESIGN.md §8): ``system`` is the number
+system a model computes in (bns / rns / sdrns — ``build_model(system=...)``),
+while ``backend`` on the numerics ops below selects the *kernel
+implementation* (pallas / interpret / ref, auto by platform).
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
+from repro import numerics as nx
 from repro.core import sd
 from repro.core.cost_model import eq3_total, select_number_system
 from repro.core.moduli import P21, special_set
 from repro.core.sdrns import SdRnsNumber
-from repro.kernels import ops
 
 print("== 1. residue decomposition (the paper's Eq. 2 moduli) ==")
 ms = special_set(5)                    # {31, 32, 33}, P=16 row of Table I
@@ -36,9 +41,14 @@ print("\n== 4. exact integer matmul through RNS channels (TPU kernel) ==")
 rng = np.random.default_rng(0)
 A = jnp.asarray(rng.integers(-7, 8, (64, 128)), jnp.int32)
 B = jnp.asarray(rng.integers(-7, 8, (128, 64)), jnp.int32)
-C = ops.rns_matmul(A, B, mset=P21, max_abs_a=7, max_abs_b=7, interpret=True)
+# encode once (the forward conversion the paper amortizes), matmul many
+tB = nx.encode(B, nx.EncodeSpec(layout="rns", mset=P21, max_abs=7))
+C = nx.matmul(A, tB, max_abs_a=7, backend="interpret")
 print(f"A@B exact: {bool(jnp.array_equal(C, A @ B))}  "
       f"(3 int8 channels, zero in-loop reductions)")
+print(f"encoded weight: {tB}")
+print(f"decode round-trip exact: "
+      f"{bool(jnp.array_equal(nx.decode(tB), B))}")
 
 print("\n== 5. which number system should your workload use? ==")
 for (x_, y_) in ((1000, 0), (0, 1000), (500, 500)):

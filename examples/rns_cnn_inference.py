@@ -3,7 +3,7 @@ matmul executes in the SD-RNS integer backend.
 
 Pipeline:
   1. train AlexNet (float) briefly on the synthetic CIFAR-10 set;
-  2. run inference under ``backend="rns"`` — int6 quantization (the paper's
+  2. run inference under ``system="rns"`` — int6 quantization (the paper's
      DNN arithmetic is 16-bit-class fixed point; 6-bit operands with exact
      integer accumulation live in the same dynamic-range regime as its P=16
      row), 3-channel redundant-residue matmuls, MRC reconstruction;
@@ -38,7 +38,7 @@ def main():
     xs, ys = synthetic_cifar(4096, split="train")
     xt, yt = synthetic_cifar(args.eval_n, split="test")
 
-    bns_kw = {"backend": "bns", "compute_dtype": jnp.float32}
+    bns_kw = {"system": "bns", "compute_dtype": jnp.float32}
 
     def loss_fn(p, xb, yb):
         logits = cnn_forward(p, spec, xb, dense_kw=bns_kw)
@@ -71,7 +71,7 @@ def main():
     acc_f, _ = accuracy(bns_kw)
     t_f = time.time() - t0
 
-    rns_kw = {"backend": "rns", "bits": args.bits,
+    rns_kw = {"system": "rns", "bits": args.bits,
               "impl": "interpret", "compute_dtype": jnp.float32}
     t0 = time.time()
     acc_r, logits_r = accuracy(rns_kw)

@@ -4,6 +4,11 @@ Exercises the exact prefill/decode step functions the decode_32k / long_500k
 dry-run cells compile — at reduced scale so it runs on CPU in seconds.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch yi-6b] [--batch 4]
+      PYTHONPATH=src python examples/serve_lm.py --system sdrns
+
+``--system`` picks the number system the model computes in (bns/rns/sdrns);
+the kernel implementation (pallas on TPU, interpreter on CPU) is the
+orthogonal axis, auto-selected by the repro.numerics registry.
 """
 import argparse
 import time
@@ -19,6 +24,8 @@ from repro.serving.engine import ServingEngine
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--system", default="bns",
+                    choices=("bns", "rns", "sdrns"))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=24)
@@ -26,7 +33,7 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    model = build_model(cfg)
+    model = build_model(cfg, system=args.system)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     engine = ServingEngine(model, params, batch=args.batch,

@@ -6,7 +6,7 @@ a few minutes and prints the falling loss; ``--preset m100`` builds the
 scale — same code path, more compute).
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--preset tiny]
-      PYTHONPATH=src python examples/train_lm.py --backend rns --steps 40
+      PYTHONPATH=src python examples/train_lm.py --system rns --steps 40
 """
 import argparse
 import dataclasses
@@ -31,7 +31,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
     ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--backend", default="bns", choices=("bns", "rns"))
+    ap.add_argument("--system", "--backend", dest="system", default="bns",
+                    choices=("bns", "rns"),
+                    help="number system (--backend is a deprecated alias)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default="checkpoints/train_lm")
     ap.add_argument("--resume", action="store_true",
@@ -48,13 +50,13 @@ def main():
         get_config("qwen3-8b").reduced(),
         d_model=d, n_layers=L, n_heads=H, n_kv=kv, d_ff=ff, vocab=vocab,
         head_dim=d // H)
-    model = build_model(cfg, backend=args.backend,
-                        rns_impl="interpret" if args.backend == "rns"
+    model = build_model(cfg, system=args.system,
+                        rns_impl="interpret" if args.system == "rns"
                         else "ref")
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(
         jax.eval_shape(model.init, jax.random.key(0))))
     print(f"[train_lm] {args.preset}: {n_params/1e6:.1f}M params, "
-          f"seq={seq} batch={batch} backend={args.backend}")
+          f"seq={seq} batch={batch} system={args.system}")
 
     opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=20,
                         total_steps=args.steps)

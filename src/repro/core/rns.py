@@ -1,113 +1,108 @@
-"""RnsTensor — a tensor of integers represented in residue channels.
+"""RnsTensor — channel-first elementwise view of the residue representation.
 
-This is the framework-level carrier of the paper's RNS representation: a pytree
-holding ``(C, ...)`` stacked residue planes plus (static) moduli metadata, with
-arithmetic that mirrors integer arithmetic mod M.  It is jit/vmap/scan-friendly
-(the moduli ride along as aux data) and is what the quantized model layers and
-the Pallas kernels exchange.
+Since PR 3 this is a thin subclass of
+:class:`repro.numerics.ResidueTensor` — the framework-wide typed carrier of
+residue-domain values — specialized to the legacy channel-first ``(C, ...)``
+plane layout and arbitrary value shapes.  The ring arithmetic (centered
+add/sub/mul, negation, flush) is *inherited*: ResidueTensor's ops are
+channel-axis-aware and this subclass only pins ``channel_axis = 0``.  What
+stays local is the elementwise-tensor surface (``lazy_add``/``lazy_mul``
+redundancy ops, integer ``scale_by``, and the jnp reference ``matmul``) —
+for kernel-backed matmuls use the weight-layout ResidueTensor via
+``repro.numerics.encode`` / ``matmul``.
 
 Redundancy contract: residue planes may be *non-canonical* (outside
 ``[-m/2, m/2]``) between operations — the TPU analogue of the paper's
-signed-digit redundancy.  ``flush()`` re-centers.  Every op documents how much
-redundancy headroom it consumes; ``ModuliSet.lazy_add_capacity`` gives the
-budget.
+signed-digit redundancy.  ``flush()`` re-centers.  Every op documents how
+much redundancy headroom it consumes; ``ModuliSet.lazy_add_capacity`` gives
+the budget.
 """
 from __future__ import annotations
 
-import dataclasses
 import jax
 import jax.numpy as jnp
 
 from repro.core.moduli import ModuliSet
+from repro.numerics.tensor import ResidueTensor
 
 __all__ = ["RnsTensor"]
 
 
 @jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class RnsTensor:
-    residues: jax.Array  # (C, ...) int32 (int8 storage allowed for small sets)
-    mset: ModuliSet      # static aux data
+class RnsTensor(ResidueTensor):
+    """(C, ...) int32 residue planes (int8 storage allowed for small sets)."""
+
+    def __init__(self, residues: jax.Array, mset: ModuliSet):
+        super().__init__(planes=residues, scale=None, mset=mset,
+                         layout="rns", qbits=None, max_abs=None)
+
+    def _validate(self) -> None:
+        # channel-first elementwise layout: any value rank, channel axis 0
+        if self.planes.shape[0] != self.mset.num_channels:
+            raise ValueError(
+                f"residues carry {self.planes.shape[0]} channels but mset "
+                f"{self.mset.moduli} has {self.mset.num_channels}")
 
     # -- pytree protocol ------------------------------------------------------
     def tree_flatten(self):
-        return (self.residues,), self.mset
+        return (self.planes,), self.mset
 
     @classmethod
     def tree_unflatten(cls, mset, children):
-        return cls(children[0], mset)
+        obj = object.__new__(cls)
+        obj.planes, obj.scale = children[0], None
+        obj.mset, obj.layout = mset, "rns"
+        obj.qbits, obj.max_abs = None, None
+        return obj
 
-    # -- constructors ----------------------------------------------------------
+    # -- layout pivots (everything ResidueTensor's shared ops need) ----------
+    @property
+    def channel_axis(self) -> int:
+        return 0
+
+    @property
+    def shape(self):
+        return self.planes.shape[1:]
+
+    def _with_planes(self, planes: jax.Array) -> "RnsTensor":
+        return RnsTensor(planes, self.mset)
+
+    # -- legacy surface -------------------------------------------------------
+    @property
+    def residues(self) -> jax.Array:
+        return self.planes
+
     @classmethod
     def from_int(cls, x: jax.Array, mset: ModuliSet) -> "RnsTensor":
         return cls(mset.to_residues(x, centered=True), mset)
 
-    # -- views ------------------------------------------------------------------
-    @property
-    def shape(self):
-        return self.residues.shape[1:]
-
-    @property
-    def dtype(self):
-        return self.residues.dtype
-
-    def to_int(self) -> jax.Array:
-        """Reverse conversion.  Exact when the represented |value| < 2**30 and
-        < M/2 (the framework's quantizers enforce this via K-segmentation)."""
-        return self.mset.from_residues(self.residues)
-
-    def flush(self) -> "RnsTensor":
-        """Reduce all channels to centered canonical form (spends no headroom)."""
-        return RnsTensor(self.mset.center(self.residues), self.mset)
-
-    # -- arithmetic (exact mod M) -----------------------------------------------
-    def __add__(self, other: "RnsTensor") -> "RnsTensor":
-        assert self.mset.moduli == other.mset.moduli
-        return RnsTensor(
-            self.mset.center(self.residues + other.residues), self.mset
-        )
-
-    def __sub__(self, other: "RnsTensor") -> "RnsTensor":
-        assert self.mset.moduli == other.mset.moduli
-        return RnsTensor(
-            self.mset.center(self.residues - other.residues), self.mset
-        )
-
-    def __mul__(self, other: "RnsTensor") -> "RnsTensor":
-        assert self.mset.moduli == other.mset.moduli
-        return RnsTensor(
-            self.mset.center(self.residues * other.residues), self.mset
-        )
-
-    def __neg__(self) -> "RnsTensor":
-        return RnsTensor(-self.residues, self.mset)
-
     # Lazy variants: skip the re-centering; caller owns the headroom budget.
     def lazy_add(self, other: "RnsTensor") -> "RnsTensor":
-        return RnsTensor(self.residues + other.residues, self.mset)
+        return RnsTensor(self.planes + other.planes, self.mset)
 
     def lazy_mul(self, other: "RnsTensor") -> "RnsTensor":
-        return RnsTensor(self.residues * other.residues, self.mset)
+        return RnsTensor(self.planes * other.planes, self.mset)
 
-    def scale(self, k: int) -> "RnsTensor":
+    def scale_by(self, k: int) -> "RnsTensor":
         """Multiply by an integer scalar (converted per-channel)."""
         planes = jnp.stack(
             [
                 jnp.remainder(
-                    self.residues[c] * jnp.int32(k % m), jnp.int32(m)
+                    self.planes[c] * jnp.int32(k % m), jnp.int32(m)
                 )
                 for c, m in enumerate(self.mset.moduli)
             ]
         )
         return RnsTensor(self.mset.center(planes), self.mset)
 
-    # -- linalg -------------------------------------------------------------------
+    # -- linalg ---------------------------------------------------------------
     def matmul(self, other: "RnsTensor") -> "RnsTensor":
-        """Channel-wise modular matmul (reference path; the Pallas kernel in
-        ``repro.kernels`` is the production path).  Lazy reduction: a single
-        mod at the end, valid while K <= lazy_add_capacity()."""
+        """Channel-wise modular matmul (jnp reference path; the Pallas
+        kernels behind ``repro.numerics.matmul`` are the production path).
+        Lazy reduction: a single mod at the end, valid while
+        K <= lazy_add_capacity()."""
         assert self.mset.moduli == other.mset.moduli
-        K = self.residues.shape[-1]
+        K = self.planes.shape[-1]
         cap = self.mset.lazy_add_capacity()
         if K > cap:
             raise ValueError(
@@ -115,14 +110,10 @@ class RnsTensor:
             )
         acc = jnp.einsum(
             "c...ik,c...kj->c...ij",
-            self.residues.astype(jnp.int32),
-            other.residues.astype(jnp.int32),
+            self.planes.astype(jnp.int32),
+            other.planes.astype(jnp.int32),
         )
         return RnsTensor(self.mset.center(acc), self.mset)
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"RnsTensor(shape={self.shape}, moduli={self.mset.moduli})"
-
-
-def _hash_mset(m: ModuliSet) -> int:  # ensures jit cache keys are stable
-    return hash(m.moduli)

@@ -9,7 +9,7 @@ cannot download CIFAR-10, so this module provides:
 * CIFAR-scale **AlexNet** (the classic 5-conv/3-fc shape adapted to 32x32)
   and **VGG-16** definitions built on an im2col conv that routes every
   matmul through ``models.linear.dense`` — i.e. the whole CNN can run under
-  ``backend="rns"`` (the paper's SD-RNS arithmetic) or ``backend="bns"``;
+  ``system="rns"`` (the paper's SD-RNS arithmetic) or ``system="bns"``;
 * exact per-layer (adds, muls) op counts for both networks at full CIFAR
   scale — the (x, y) mixes that ``benchmarks/dnn_speedup.py`` feeds into the
   Eq. 3 delay model to reproduce the paper's 1.27x / 2.25x speedups.
@@ -165,7 +165,7 @@ def init_cnn(key: jax.Array, spec: CnnSpec) -> dict[str, Any]:
 def cnn_forward(params: dict[str, Any], spec: CnnSpec, images: jax.Array,
                 *, dense_kw: dict[str, Any] | None = None) -> jax.Array:
     """images (B, 32, 32, 3) f32 -> logits (B, n_classes) f32."""
-    dense_kw = dense_kw or {"backend": "bns", "compute_dtype": jnp.float32}
+    dense_kw = dense_kw or {"system": "bns", "compute_dtype": jnp.float32}
     x = images
     for i, layer in enumerate(spec.layers):
         if layer[0] == "conv":

@@ -5,14 +5,14 @@ sdrns_matmul — fused signed-digit residue matmul (Eq. 2 rotations + carry-free
                adder trees in one kernel body).
 sd_add       — digit-parallel carry-free SD-RNS addition (VPU).
 
-``ops`` holds the public jit'd wrappers and the backend registry
-(pallas / interpret / ref, auto-selected by platform), ``ref`` the pure-jnp
+The public compute surface is :mod:`repro.numerics` (typed
+encode/matmul/einsum/add over ``ResidueTensor``); ``kernels.ops`` holds the
+deprecated legacy entry points as shims over it.  ``ref`` has the pure-jnp
 oracles, ``compat`` the JAX version-compat layer.
 """
 from repro.kernels.ops import (
     encode_rns_weights,
     encode_sdrns_weights,
-    resolve_backend,
     rns_matmul,
     rns_matmul_enc,
     sd_add,
@@ -23,3 +23,13 @@ from repro.kernels.ops import (
 __all__ = ["rns_matmul", "rns_matmul_enc", "sdrns_matmul",
            "sdrns_matmul_enc", "encode_rns_weights", "encode_sdrns_weights",
            "sd_add", "resolve_backend"]
+
+
+def __getattr__(name: str):
+    # lazy: repro.numerics imports kernel bodies from this package, so the
+    # registry re-export cannot be resolved during package import
+    if name == "resolve_backend":
+        from repro.numerics import resolve_backend
+
+        return resolve_backend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,63 +1,51 @@
-"""Public jit'd wrappers around the Pallas kernels, plus the backend registry.
+"""DEPRECATED entry points — thin shims over :mod:`repro.numerics`.
 
-``rns_matmul`` and ``sdrns_matmul`` are the production entry points used by
-``models/linear.py``: integer operands in, exact int32 matmul out, with
+The five legacy matmul/add entry points (``rns_matmul``, ``rns_matmul_enc``,
+``sdrns_matmul``, ``sdrns_matmul_enc``, ``sd_add``) and the weight encoders
+(``encode_rns_weights``, ``encode_sdrns_weights``) now forward to the typed
+numerics API and emit :class:`DeprecationWarning`.  They land on the *same*
+shared runners (``numerics/runners.py``), so outputs are bit-identical to
+the pre-refactor paths — only the surface moved.
 
-* forward conversion to centered residues (int8 when all moduli allow) — and,
-  for the SD-RNS path, signed-digit encoding of each residue channel,
-* shape padding to kernel-aligned blocks,
-* automatic K-segmentation when the exact result could exceed the moduli
-  set's half dynamic range (each segment is exact; segments sum in int32),
-* reverse (MRC) conversion.
+Migration map (DESIGN.md §8 has the full table)::
 
-Residue-resident weights
-------------------------
-The B operand of a serving matmul is a *weight*: its residue/digit planes
-never change between token steps, so re-deriving them per call is pure
-overhead (the conversion cost the paper amortizes once).  The ``*_enc``
-entry points — :func:`rns_matmul_enc` and :func:`sdrns_matmul_enc` — accept
-planes pre-encoded by :func:`encode_rns_weights` / :func:`encode_sdrns_weights`
-and convert only the activation operand.  Because encoding is elementwise,
-encode-then-slice equals slice-then-encode, so both entry points share one
-runner per op and stay bit-identical to the convert-per-call path.
+    rns_matmul(a, b, ...)        -> nx.matmul(a, nx.encode(b, rns_spec), ...)
+    rns_matmul_enc(a, planes)    -> nx.matmul(a, ResidueTensor(planes, ...))
+    sdrns_matmul(a, b, ...)      -> nx.matmul(a, nx.encode(b, sd_spec), ...)
+    sdrns_matmul_enc(a, planes)  -> nx.matmul(a, ResidueTensor(planes, ...))
+    sd_add(x, y, kind=...)       -> nx.add(x, y, kind=...)
+    encode_rns_weights(w, mset)  -> nx.encode(w, EncodeSpec("rns", mset)).planes
+    encode_sdrns_weights(w, mset)-> nx.encode(w, EncodeSpec("sd", mset)).planes
 
-Decode shapes (M <= 8) route to the ``sdrns_matvec`` op — the matvec-style
-kernel schedule in :mod:`repro.kernels.sdrns_matmul` that keeps the whole M
-block and K segment resident and walks only (C, N/bn).
-
-Backend registry
-----------------
-Every op dispatches through a small registry keyed by ``backend``:
-
-* ``"pallas"``    — ``pl.pallas_call`` compiled by Mosaic (real TPU);
-* ``"interpret"`` — the same kernel body in the Pallas interpreter (CPU
-  correctness tests and this container);
-* ``"ref"``       — pure-jnp oracle with the same flop/byte structure
-  (CPU dry-run compilation / roofline).
-
-``backend=None`` auto-selects by platform (``pallas`` on TPU, ``interpret``
-elsewhere), so callers — ``models/linear.py``, the serving engine — pick the
-fused path without changing.  See DESIGN.md §6 and §7.
+The backend registry (``BACKENDS`` / ``resolve_backend`` / ``register_impl``
+/ ``get_impl``), ``segment_count`` and ``DECODE_M`` are re-exported from
+``repro.numerics`` without deprecation — they are infrastructure, not the
+entry-point zoo.  In-repo code must import them from ``repro.numerics``;
+CI runs a ``-W error::DeprecationWarning`` tier-1 variant to keep ``src/``
+off the shims.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
+import warnings
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import sd, sdrns
 from repro.core.moduli import P21, ModuliSet
-from repro.kernels import compat
-from repro.kernels.rns_matmul import rns_matmul_pallas
-from repro.kernels.sd_add import sd_add_pallas
-from repro.kernels.sdrns_matmul import (
-    WRAP_SIGNS,
-    sdrns_matmul_pallas,
-    sdrns_matvec_pallas,
-)
+
+# Names re-exported (lazily, to avoid a circular import with
+# repro.numerics — which imports the kernel bodies from this package) from
+# the registry surface; resolved by the module __getattr__ below.
+_NUMERICS_REEXPORTS = ("BACKENDS", "DECODE_M", "ResidueTensor", "get_impl",
+                      "register_impl", "resolve_backend", "segment_count")
+
+
+def __getattr__(name: str):
+    if name in _NUMERICS_REEXPORTS:
+        import repro.numerics as nx
+
+        return getattr(nx, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "rns_matmul",
@@ -76,146 +64,29 @@ __all__ = [
 ]
 
 
-# ---------------------------------------------------------------------------
-# Backend registry.
-# ---------------------------------------------------------------------------
-
-BACKENDS = ("pallas", "interpret", "ref")
-
-_REGISTRY: dict[str, dict[str, Callable]] = {}
-
-
-def resolve_backend(backend: str | None = None) -> str:
-    """Resolve a backend name; ``None``/``"auto"`` selects by platform."""
-    if backend in (None, "auto"):
-        return "pallas" if compat.platform() == "tpu" else "interpret"
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
-    return backend
-
-
-def register_impl(op: str, backend: str, fn: Callable) -> None:
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
-    _REGISTRY.setdefault(op, {})[backend] = fn
-
-
-def get_impl(op: str, backend: str | None = None) -> Callable:
-    impls = _REGISTRY.get(op)
-    if impls is None:
-        raise KeyError(f"no backends registered for op {op!r}")
-    return impls[resolve_backend(backend)]
-
-
-def _round_up(v: int, k: int) -> int:
-    return (v + k - 1) // k * k
-
-
-def segment_count(K: int, max_abs_a: int, max_abs_b: int,
-                  mset: ModuliSet) -> int:
-    """Segments needed so each exact partial result fits (-M/2, M/2)."""
-    if max_abs_a == 0 or max_abs_b == 0:
-        return 1
-    per_term = max_abs_a * max_abs_b
-    cap = mset.half_range // per_term
-    if cap < 1:
-        raise ValueError(
-            f"operand bound {per_term} exceeds dynamic range of {mset.moduli}"
-        )
-    segs = (K + cap - 1) // cap
-    return max(segs, 1)
-
-
-# ---------------------------------------------------------------------------
-# rns_matmul — int8 residue planes, lazy reduction, MXU tiling.
-# ---------------------------------------------------------------------------
-
-
-def _choose_blocks(M: int, N: int, K: int) -> tuple[int, int, int]:
-    """MXU-aligned tiles that do not over-pad small problems."""
-    bm = 128 if M >= 128 else _round_up(M, 8)
-    bn = 128 if N >= 128 else _round_up(N, 128)  # lane dim: keep 128
-    bk = 512 if K >= 512 else _round_up(K, 128)
-    return bm, max(bn, 128), max(bk, 128)
-
-
-register_impl(
-    "rns_matmul", "pallas",
-    lambda a, b, mset, bm, bn, bk: rns_matmul_pallas(
-        a, b, jnp.asarray(mset.moduli, jnp.int32),
-        bm=bm, bn=bn, bk=bk, interpret=False))
-register_impl(
-    "rns_matmul", "interpret",
-    lambda a, b, mset, bm, bn, bk: rns_matmul_pallas(
-        a, b, jnp.asarray(mset.moduli, jnp.int32),
-        bm=bm, bn=bn, bk=bk, interpret=True))
-
-
-def _rns_matmul_ref_impl(a, b, mset, bm, bn, bk):
-    from repro.kernels.ref import rns_matmul_ref
-
-    return rns_matmul_ref(a, b, mset)
-
-
-register_impl("rns_matmul", "ref", _rns_matmul_ref_impl)
-
-
-def _res_dtype(mset: ModuliSet):
-    return jnp.int8 if max(mset.moduli) <= 257 else jnp.int32
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{old} is deprecated; use {new} "
+        "(see DESIGN.md §8 for the migration map)",
+        DeprecationWarning, stacklevel=3)
 
 
 def encode_rns_weights(w: jax.Array, mset: ModuliSet) -> jax.Array:
-    """Integer weights (..., K, N) -> centered residue planes (..., C, K, N).
+    """Deprecated: ``nx.encode(w, EncodeSpec(layout='rns', ...)).planes``."""
+    _warn("encode_rns_weights", "repro.numerics.encode")
+    from repro.numerics.runners import encode_rns_planes
 
-    The channel axis lands *after* any leading (layer-stack) axes so the
-    planes slice cleanly under ``jax.lax.scan`` over stacked layers.  int8
-    when every centered residue fits (the MXU-path rule of ``rns_matmul``).
-    """
-    res = mset.to_residues(w.astype(jnp.int32))          # (C, ..., K, N)
-    return jnp.moveaxis(res, 0, -3).astype(_res_dtype(mset))
+    return encode_rns_planes(w, mset)
 
 
-def _rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend):
-    """Shared runner: activation conversion + segmentation + kernel dispatch.
+def encode_sdrns_weights(w: jax.Array, mset: ModuliSet) -> jax.Array:
+    """Deprecated: ``nx.encode(w, EncodeSpec(layout='sd', ...)).planes``."""
+    _warn("encode_sdrns_weights", "repro.numerics.encode")
+    from repro.numerics.runners import encode_sd_planes
 
-    ``b_res``: (C, K, N) pre-encoded centered residue planes.  Both the
-    convert-per-call entry point and the residue-resident one land here, so
-    their outputs are bit-identical by construction.
-    """
-    impl = get_impl("rns_matmul", backend)
-    M, K = a.shape
-    C, K2, N = b_res.shape
-    assert K == K2, (a.shape, b_res.shape)
-
-    res_dtype = _res_dtype(mset)
-    a_res = mset.to_residues(a.astype(jnp.int32)).astype(res_dtype)
-
-    segs = segment_count(K, max_abs_a, max_abs_b, mset)
-    seg_len = _round_up((K + segs - 1) // segs, 128)
-    segs = (K + seg_len - 1) // seg_len
-
-    bm, bn, bk = _choose_blocks(M, N, seg_len)
-    Mp, Np = _round_up(M, bm), _round_up(N, bn)
-    Kp = _round_up(seg_len, bk)
-
-    total = jnp.zeros((M, N), jnp.int32)
-    for s in range(segs):
-        lo = s * seg_len
-        hi = min(lo + seg_len, K)
-        a_s = a_res[:, :, lo:hi]
-        b_s = b_res[:, lo:hi, :]
-        a_p = jnp.zeros((C, Mp, Kp), res_dtype).at[:, :M, : hi - lo].set(a_s)
-        b_p = jnp.zeros((C, Kp, Np), res_dtype).at[:, : hi - lo, :N].set(b_s)
-        out_res = impl(a_p, b_p, mset, bm, bn, bk)
-        total = total + mset.from_residues(out_res[:, :M, :N])
-    return total
+    return encode_sd_planes(w, mset)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mset", "max_abs_a", "max_abs_b", "interpret", "use_ref",
-                     "backend"),
-)
 def rns_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -227,32 +98,19 @@ def rns_matmul(
     use_ref: bool = False,
     backend: str | None = None,
 ) -> jax.Array:
-    """Exact integer matmul via RNS channels.
+    """Deprecated: encode ``b`` once, then ``nx.matmul``."""
+    _warn("rns_matmul", "repro.numerics.encode + repro.numerics.matmul")
+    import repro.numerics as nx
 
-    Args:
-      a: (M, K) integer tensor (int8/int32 values, |a| <= max_abs_a).
-      b: (K, N) integer tensor (|b| <= max_abs_b).
-      mset: moduli set; all |m|//2 must fit int8 for the MXU path.
-      max_abs_a/b: static magnitude bounds (from the quantizer) — drive
-        K-segmentation.
-      interpret/use_ref: legacy backend switches (kept for callers);
-        ``backend`` is the registry spelling, auto-selected when unset.
-    Returns:
-      (M, N) int32, exact A @ B.
-    """
     if use_ref:
         backend = "ref"
     elif interpret:
         backend = "interpret"
-    b_res = encode_rns_weights(b, mset)
-    return _rns_run(a, b_res, mset=mset, max_abs_a=max_abs_a,
-                    max_abs_b=max_abs_b, backend=backend)
+    t = nx.encode(b, nx.EncodeSpec(layout="rns", mset=mset,
+                                   max_abs=max_abs_b))
+    return nx.matmul(a, t, max_abs_a=max_abs_a, backend=backend)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mset", "max_abs_a", "max_abs_b", "backend"),
-)
 def rns_matmul_enc(
     a: jax.Array,
     b_res: jax.Array,
@@ -262,163 +120,15 @@ def rns_matmul_enc(
     max_abs_b: int,
     backend: str | None = None,
 ) -> jax.Array:
-    """:func:`rns_matmul` with a residue-resident B operand.
+    """Deprecated: wrap the planes in a ResidueTensor and ``nx.matmul``."""
+    _warn("rns_matmul_enc", "repro.numerics.matmul on a ResidueTensor")
+    import repro.numerics as nx
 
-    ``b_res``: (C, K, N) planes from :func:`encode_rns_weights` — typically
-    a served weight, encoded once at load time.  Only the activation ``a``
-    is forward-converted per call; outputs are bit-identical to
-    ``rns_matmul(a, b)``.
-    """
-    return _rns_run(a, b_res, mset=mset, max_abs_a=max_abs_a,
-                    max_abs_b=max_abs_b, backend=backend)
+    t = nx.ResidueTensor(planes=b_res, scale=None, mset=mset, layout="rns",
+                      qbits=None, max_abs=max_abs_b)
+    return nx.matmul(a, t, max_abs_a=max_abs_a, backend=backend)
 
 
-# ---------------------------------------------------------------------------
-# sdrns_matmul — fused signed-digit residue matmul (Eq. 2 in one kernel).
-# ---------------------------------------------------------------------------
-
-
-def _sdrns_digit_width(mset: ModuliSet) -> int:
-    kinds = {k for k, _ in mset.kinds}
-    widths = {n for _, n in mset.kinds}
-    if "generic" in kinds or len(widths) != 1:
-        raise ValueError(
-            "sdrns_matmul needs a special moduli set (2^n-1 / 2^n / 2^n+1 "
-            f"at one width), got kinds {mset.kinds}"
-        )
-    return next(iter(widths))
-
-
-def _choose_digit_blocks(M: int, N: int) -> tuple[int, int]:
-    """Small tiles: the digit axis multiplies VMEM footprint by n^2."""
-    bm = 32 if M >= 32 else _round_up(M, 8)
-    bn = 32 if N >= 32 else _round_up(N, 8)
-    return bm, bn
-
-
-# Decode threshold: at or below this M the sdrns path switches to the
-# matvec-style schedule (whole M block + K segment resident, grid (C, N/bn)).
-DECODE_M = 8
-
-
-def _choose_decode_blocks(M: int, N: int) -> tuple[int, int]:
-    """Decode-shaped tiles: skinny M (padded to sublanes), wide N columns.
-
-    With bm <= 8 the n^2-scaled partial-product stack shrinks 4x vs the
-    matmul tiles, which buys lane-width (128) column tiles at the same VMEM
-    budget — fewer grid steps over N for the single-token step.
-    """
-    bm = _round_up(M, 8)
-    bn = 128 if N >= 128 else _round_up(N, 8)
-    return bm, bn
-
-
-# Per-grid-step budget for the kernel's partial-product stack (int8 bytes);
-# a few MiB leaves VMEM room for operands and double buffering.
-_PP_BUDGET_BYTES = 4 * 1024 * 1024
-
-
-register_impl(
-    "sdrns_matmul", "pallas",
-    lambda ad, bd, mset, bm, bn: sdrns_matmul_pallas(
-        ad, bd, _wrap_signs(mset), bm=bm, bn=bn, interpret=False))
-register_impl(
-    "sdrns_matmul", "interpret",
-    lambda ad, bd, mset, bm, bn: sdrns_matmul_pallas(
-        ad, bd, _wrap_signs(mset), bm=bm, bn=bn, interpret=True))
-
-
-def _sdrns_matmul_ref_impl(ad, bd, mset, bm, bn):
-    from repro.kernels.ref import sdrns_matmul_ref
-
-    return sdrns_matmul_ref(ad, bd, mset)
-
-
-register_impl("sdrns_matmul", "ref", _sdrns_matmul_ref_impl)
-
-# Decode-shaped variant: same kernel body, matvec schedule (bm rides whole).
-register_impl(
-    "sdrns_matvec", "pallas",
-    lambda ad, bd, mset, bm, bn: sdrns_matvec_pallas(
-        ad, bd, _wrap_signs(mset), bn=bn, interpret=False))
-register_impl(
-    "sdrns_matvec", "interpret",
-    lambda ad, bd, mset, bm, bn: sdrns_matvec_pallas(
-        ad, bd, _wrap_signs(mset), bn=bn, interpret=True))
-register_impl("sdrns_matvec", "ref", _sdrns_matmul_ref_impl)
-
-
-def _wrap_signs(mset: ModuliSet) -> jax.Array:
-    return jnp.asarray([WRAP_SIGNS[k] for k, _ in mset.kinds], jnp.int32)
-
-
-def encode_sdrns_weights(w: jax.Array, mset: ModuliSet) -> jax.Array:
-    """Integer weights (..., K, N) -> SD digit planes (..., C, K, N, n) int8.
-
-    The quantize-once / convert-once half of the serving lifecycle: centered
-    residues per channel, each encoded as an n-digit SD vector.  Channel and
-    digit axes land around the matmul dims so stacked-layer leaves slice
-    cleanly under ``jax.lax.scan``.  Elementwise, so encode-then-slice along
-    K equals slice-then-encode — the property that keeps the resident path
-    bit-identical to convert-per-call.
-    """
-    n = _sdrns_digit_width(mset)
-    res = mset.to_residues(w.astype(jnp.int32), centered=True)  # (C, ..., K, N)
-    return sd.from_int(jnp.moveaxis(res, 0, -3), n)
-
-
-def _sdrns_run(a, b_dig, *, mset, max_abs_a, max_abs_b, backend):
-    """Shared runner over pre-encoded B digit planes.
-
-    Routes decode shapes (M <= DECODE_M) to the matvec schedule; both entry
-    points (convert-per-call and residue-resident) land here with identical
-    segmentation and tiling, so digit outputs are bit-identical.
-    """
-    n = _sdrns_digit_width(mset)
-    M, K = a.shape
-    C, K2, N, n2 = b_dig.shape
-    assert (K, n) == (K2, n2), (a.shape, b_dig.shape)
-
-    if M <= DECODE_M:
-        op = "sdrns_matvec"
-        bm, bn = _choose_decode_blocks(M, N)
-    else:
-        op = "sdrns_matmul"
-        bm, bn = _choose_digit_blocks(M, N)
-    impl = get_impl(op, backend)
-
-    segs = segment_count(K, max_abs_a, max_abs_b, mset)
-    seg_len = (K + segs - 1) // segs
-    # VMEM bound: the kernel materializes an (n, bm, k, bn, n) int8 PP
-    # stack per grid step, so the dynamic-range segmentation alone is not a
-    # memory bound — cap the K slice to keep that stack within budget.
-    k_cap = max(_PP_BUDGET_BYTES // (n * n * bm * bn), 1)
-    seg_len = min(seg_len, k_cap)
-    segs = (K + seg_len - 1) // seg_len
-
-    Mp, Np = _round_up(M, bm), _round_up(N, bn)
-
-    total = jnp.zeros((M, N), jnp.int32)
-    for s in range(segs):
-        lo = s * seg_len
-        hi = min(lo + seg_len, K)
-        a_s = a[:, lo:hi].astype(jnp.int32)
-        # centered residues -> SD digit planes (zero rows/cols pad to tiles;
-        # the zero digit vector is the zero residue, so padding is inert)
-        a_res = mset.to_residues(a_s, centered=True)        # (C, M, ks)
-        ad = jnp.zeros((C, Mp, hi - lo, n), jnp.int8)
-        ad = ad.at[:, :M].set(sd.from_int(a_res, n))
-        bd = jnp.zeros((C, hi - lo, Np, n), jnp.int8)
-        bd = bd.at[:, :, :N].set(b_dig[:, lo:hi])
-        out_dig = impl(ad, bd, mset, bm, bn)                # (C, Mp, Np, n)
-        total = total + sdrns.sdrns_decode(out_dig[:, :M, :N], mset)
-    return total
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("mset", "max_abs_a", "max_abs_b", "backend"),
-)
 def sdrns_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -428,31 +138,15 @@ def sdrns_matmul(
     max_abs_b: int,
     backend: str | None = None,
 ) -> jax.Array:
-    """Exact integer matmul via fused signed-digit residue channels.
+    """Deprecated: encode ``b`` once, then ``nx.matmul``."""
+    _warn("sdrns_matmul", "repro.numerics.encode + repro.numerics.matmul")
+    import repro.numerics as nx
 
-    The digit-domain sibling of :func:`rns_matmul`: residues are encoded as
-    SD digit vectors and the whole modular matmul — Eq. 2 partial-product
-    rotations plus the end-around carry-free adder trees — runs inside one
-    Pallas kernel body per (channel, tile).
-
-    Args:
-      a: (M, K) integer tensor (|a| <= max_abs_a).
-      b: (K, N) integer tensor (|b| <= max_abs_b).
-      mset: special moduli set {2^n-1, 2^n, 2^n+1} (any subset, one width).
-      max_abs_a/b: static magnitude bounds — drive K-segmentation.
-      backend: "pallas" | "interpret" | "ref" | None (auto by platform).
-    Returns:
-      (M, N) int32, exact A @ B.
-    """
-    b_dig = encode_sdrns_weights(b, mset)
-    return _sdrns_run(a, b_dig, mset=mset, max_abs_a=max_abs_a,
-                      max_abs_b=max_abs_b, backend=backend)
+    t = nx.encode(b, nx.EncodeSpec(layout="sd", mset=mset,
+                                   max_abs=max_abs_b))
+    return nx.matmul(a, t, max_abs_a=max_abs_a, backend=backend)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mset", "max_abs_a", "max_abs_b", "backend"),
-)
 def sdrns_matmul_enc(
     a: jax.Array,
     b_dig: jax.Array,
@@ -462,40 +156,19 @@ def sdrns_matmul_enc(
     max_abs_b: int,
     backend: str | None = None,
 ) -> jax.Array:
-    """:func:`sdrns_matmul` with a residue-resident B operand.
+    """Deprecated: wrap the planes in a ResidueTensor and ``nx.matmul``."""
+    _warn("sdrns_matmul_enc", "repro.numerics.matmul on a ResidueTensor")
+    import repro.numerics as nx
 
-    ``b_dig``: (C, K, N, n) SD digit planes from
-    :func:`encode_sdrns_weights` — a served weight encoded once at prepare
-    time.  Only the activation ``a`` is quantizer-bounded and
-    forward-converted per call; digit outputs are bit-identical to
-    ``sdrns_matmul(a, b)`` because both share :func:`_sdrns_run`.
-    """
-    return _sdrns_run(a, b_dig, mset=mset, max_abs_a=max_abs_a,
-                      max_abs_b=max_abs_b, backend=backend)
+    t = nx.ResidueTensor(planes=b_dig, scale=None, mset=mset, layout="sd",
+                      qbits=None, max_abs=max_abs_b)
+    return nx.matmul(a, t, max_abs_a=max_abs_a, backend=backend)
 
 
-# ---------------------------------------------------------------------------
-# sd_add — batched carry-free SD addition.
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
 def sd_add(x: jax.Array, y: jax.Array, *, kind: str,
            interpret: bool | None = None) -> jax.Array:
-    """Batched carry-free SD addition via the Pallas kernel.
+    """Deprecated: ``nx.add(x, y, kind=...)``."""
+    _warn("sd_add", "repro.numerics.add")
+    import repro.numerics as nx
 
-    x, y: (..., n) int8 digit tensors (LSB first).  Returns same shape
-    ((..., n+1) for kind="plain").
-    """
-    n = x.shape[-1]
-    lead = x.shape[:-1]
-    B = int(np.prod(lead)) if lead else 1
-    out_n = n + 1 if kind == "plain" else n
-    nd = _round_up(max(out_n, 128), 128)
-    bb = 256 if B >= 256 else _round_up(B, 8)
-    Bp = _round_up(B, bb)
-
-    xp = jnp.zeros((Bp, nd), jnp.int8).at[:B, :n].set(x.reshape(B, n))
-    yp = jnp.zeros((Bp, nd), jnp.int8).at[:B, :n].set(y.reshape(B, n))
-    out = sd_add_pallas(xp, yp, kind=kind, n=n, bb=bb, interpret=interpret)
-    return out[:B, :out_n].reshape(*lead, out_n)
+    return nx.add(x, y, kind=kind, interpret=interpret)

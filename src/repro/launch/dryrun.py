@@ -29,13 +29,13 @@ import time
 import traceback
 
 
-def _cell_filename(arch, shape, mesh_name, backend, tag):
+def _cell_filename(arch, shape, mesh_name, system, tag):
     suffix = f"_{tag}" if tag else ""
-    return f"{arch}_{shape}_{mesh_name}_{backend}{suffix}.json"
+    return f"{arch}_{shape}_{mesh_name}_{system}{suffix}.json"
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
-             backend: str = "bns", seq_shard: bool = False,
+             system: str = "bns", seq_shard: bool = False,
              out_dir: str = "experiments/dryrun", tag: str = "",
              save_hlo: bool = False) -> dict:
     # imports deferred: jax must init with the forced device count
@@ -63,8 +63,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     # the registry auto-select the Pallas interpreter off-TPU.  sdrns is
     # deliberately unsupported here: its digit-level ref materializes an
     # O(M*K*N*n^2) intermediate, which makes the cost numbers meaningless.
-    model = build_model(cfg, backend=backend,
-                        rns_impl="ref" if backend == "rns" else None)
+    model = build_model(cfg, system=system,
+                        rns_impl="ref" if system == "rns" else None)
 
     def shardings(spec_tree):
         return jax.tree_util.tree_map(
@@ -186,7 +186,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     counts = param_counts(cfg)
     record = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
-        "backend": backend, "tag": tag,
+        "system": system, "tag": tag,
         "n_devices": mesh.size,
         "seq_shard": seq_shard,
         "params_total": counts["total"],
@@ -205,7 +205,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir,
                         _cell_filename(arch, shape_name, mesh_name,
-                                       backend, tag))
+                                       system, tag))
     with open(path, "w") as f:
         json.dump(record, f, indent=1)
     if save_hlo:
@@ -219,7 +219,9 @@ def main(argv=None):
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--mesh", choices=("single", "multi"), default="single")
-    ap.add_argument("--backend", default="bns", choices=("bns", "rns"))
+    ap.add_argument("--system", "--backend", dest="system", default="bns",
+                    choices=("bns", "rns"),
+                    help="number system (--backend is a deprecated alias)")
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--tag", default="")
     ap.add_argument("--save-hlo", action="store_true")
@@ -237,9 +239,9 @@ def main(argv=None):
             for mesh_name in ("single", "multi"):
                 if not runnable:
                     _record_skip(args.out_dir, arch, shape, mesh_name,
-                                 args.backend, reason)
+                                 args.system, reason)
                     continue
-                fn = _cell_filename(arch, shape, mesh_name, args.backend,
+                fn = _cell_filename(arch, shape, mesh_name, args.system,
                                     args.tag)
                 if os.path.exists(os.path.join(args.out_dir, fn)):
                     print(f"[skip existing] {fn}")
@@ -249,7 +251,7 @@ def main(argv=None):
         for arch, shape, mesh_name in jobs:
             cmd = [sys.executable, "-m", "repro.launch.dryrun",
                    "--arch", arch, "--shape", shape, "--mesh", mesh_name,
-                   "--backend", args.backend, "--out-dir", args.out_dir]
+                   "--system", args.system, "--out-dir", args.out_dir]
             if args.seq_shard:
                 cmd.append("--seq-shard")
             if args.tag:
@@ -265,7 +267,7 @@ def main(argv=None):
     assert args.arch and args.shape, "--arch and --shape required"
     try:
         rec = run_cell(args.arch, args.shape, args.mesh == "multi",
-                       backend=args.backend, seq_shard=args.seq_shard,
+                       system=args.system, seq_shard=args.seq_shard,
                        out_dir=args.out_dir, tag=args.tag,
                        save_hlo=args.save_hlo)
     except Exception:
@@ -283,10 +285,10 @@ def main(argv=None):
     return 0
 
 
-def _record_skip(out_dir, arch, shape, mesh_name, backend, reason):
+def _record_skip(out_dir, arch, shape, mesh_name, system, reason):
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir,
-                        _cell_filename(arch, shape, mesh_name, backend,
+                        _cell_filename(arch, shape, mesh_name, system,
                                        "") .replace(".json", "_SKIP.json"))
     if os.path.exists(path):
         return

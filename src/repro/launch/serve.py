@@ -24,7 +24,9 @@ from repro.serving.engine import ServingEngine
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--backend", default="bns", choices=("bns", "rns", "sdrns"))
+    ap.add_argument("--system", "--backend", dest="system", default="bns",
+                    choices=("bns", "rns", "sdrns"),
+                    help="number system (--backend is a deprecated alias)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -40,9 +42,9 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    # rns_impl=None: the kernels/ops.py backend registry auto-selects the
+    # rns_impl=None: the repro.numerics backend registry auto-selects the
     # implementation by platform (pallas on TPU, interpret elsewhere)
-    model = build_model(cfg, backend=args.backend)
+    model = build_model(cfg, system=args.system)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
 

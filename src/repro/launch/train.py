@@ -9,7 +9,7 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
       --steps 200 --batch 8 --seq 64
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m --reduced \
-      --backend rns --steps 50
+      --system rns --steps 50
 """
 from __future__ import annotations
 
@@ -32,7 +32,9 @@ __all__ = ["main"]
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--backend", default="bns", choices=("bns", "rns", "sdrns"))
+    ap.add_argument("--system", "--backend", dest="system", default="bns",
+                    choices=("bns", "rns", "sdrns"),
+                    help="number system (--backend is a deprecated alias)")
     ap.add_argument("--reduced", action="store_true",
                     help="train the reduced config (CPU-scale)")
     ap.add_argument("--steps", type=int, default=100)
@@ -54,9 +56,9 @@ def main(argv=None):
         raise SystemExit("use examples/train_lm.py families; whisper trains "
                          "via tests/test_arch_smoke.py paths")
 
-    # rns_impl=None: the kernels/ops.py backend registry auto-selects the
+    # rns_impl=None: the repro.numerics backend registry auto-selects the
     # implementation by platform (pallas on TPU, interpret elsewhere)
-    model = build_model(cfg, backend=args.backend)
+    model = build_model(cfg, system=args.system)
     opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=10,
                         total_steps=args.steps,
                         moment_dtype=cfg.opt_state_dtype)
@@ -105,7 +107,15 @@ def main(argv=None):
     result = run_with_restarts(run_and_clear)
     dt = time.time() - t0
     hist = result["history"]
-    print(f"[done] {args.arch} backend={args.backend} steps={args.steps} "
+    if not hist:
+        from repro.train import checkpoint
+
+        print(f"[done] {args.arch} system={args.system}: nothing to do "
+              f"(checkpoint in {ckpt_dir} already at step "
+              f"{checkpoint.latest_step(ckpt_dir)} >= --steps {args.steps}; "
+              "use a fresh --ckpt-dir)")
+        return 0
+    print(f"[done] {args.arch} system={args.system} steps={args.steps} "
           f"loss {hist[0]:.3f} -> {hist[-1]:.3f} ({dt:.1f}s)")
     return 0
 

@@ -11,20 +11,24 @@ pure jax functions suitable for ``jax.jit`` / ``.lower()``:
 * ``init_cache(batch, s_max) -> cache pytree``
 * ``prepare_params(params) -> params`` — residue-resident weight pass
   (quantize once, forward-convert once; identity for bns).  Prefill/decode
-  accept either form — prepared trees are ordinary pytrees of arrays, so
-  the jit signatures and layer scans are unchanged.
+  accept either form — prepared trees are ordinary pytrees whose dense
+  weight leaves are :class:`~repro.numerics.ResidueTensor` nodes, so the
+  jit signatures and layer scans are unchanged.
 * ``input_specs(shape) -> batch pytree of ShapeDtypeStructs`` (dry-run)
 * ``cache_roles(cache) -> pytree of sharding-role tuples`` (dry-run)
 
-Arithmetic backend: ``backend="bns"`` (bf16 MXU matmuls — the baseline number
-system), ``backend="rns"`` (the paper's technique: int4 quant -> 3-channel
-redundant-residue matmul) or ``backend="sdrns"`` (the fused signed-digit
-variant; see models/linear.py).  The kernel impl is auto-selected by the
-backend registry in kernels/ops.py unless ``rns_impl`` pins it.
+Number system: ``system="bns"`` (bf16 MXU matmuls — the baseline number
+system), ``system="rns"`` (the paper's technique: int4 quant -> 3-channel
+redundant-residue matmul) or ``system="sdrns"`` (the fused signed-digit
+variant; see models/linear.py).  This axis is deliberately distinct from
+the kernel-implementation axis (pallas/interpret/ref) — the registry in
+``repro.numerics`` auto-selects the impl by platform unless ``rns_impl``
+pins it.  ``backend=`` remains as a deprecated alias of ``system=``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -36,6 +40,7 @@ from repro.models import frontends
 from repro.models import transformer as tf_mod
 from repro.models.attention import KVCache
 from repro.models.ssm import SsmCache
+from repro.numerics import ResidueTensor
 from repro.quant import residency
 
 __all__ = ["Model", "build_model", "cross_entropy"]
@@ -66,14 +71,22 @@ class Model:
 MOE_AUX_WEIGHT = 0.01
 
 
-def build_model(cfg: ArchConfig, *, backend: str = "bns",
-                rns_bits: int = 4, rns_impl: str | None = None) -> Model:
+def build_model(cfg: ArchConfig, *, system: str = "bns",
+                rns_bits: int = 4, rns_impl: str | None = None,
+                backend: str | None = None) -> Model:
+    if backend is not None:
+        warnings.warn(
+            "build_model(backend=...) is deprecated; use system= — the "
+            "number-system knob (bns/rns/sdrns), distinct from the kernel "
+            "registry backends (pallas/interpret/ref) selected by rns_impl",
+            DeprecationWarning, stacklevel=2)
+        system = backend
     compute_dtype = jnp.dtype(cfg.compute_dtype)
-    dense_kw: dict[str, Any] = {"backend": backend,
+    dense_kw: dict[str, Any] = {"system": system,
                                 "compute_dtype": compute_dtype}
     if cfg.matmul_out_dtype == "float32":
         dense_kw["out_dtype"] = jnp.float32
-    if backend in ("rns", "sdrns"):
+    if system in ("rns", "sdrns"):
         dense_kw.update(bits=rns_bits, impl=rns_impl)
 
     is_encdec = cfg.is_encdec
@@ -109,28 +122,44 @@ def build_model(cfg: ArchConfig, *, backend: str = "bns",
     def prepare_params(params):
         """Quantize-once / convert-once pass over a parameter tree.
 
-        Every ``{"w": ...}`` dense parameter dict (including stacked-layer
-        and stacked-expert leaves — leading axes are preserved, so the
-        layer scans slice prepared leaves exactly as they sliced ``w``) is
-        replaced with the residue-resident form of
-        :func:`repro.quant.residency.prepare_dense`.  Identity for the bns
-        backend.  The MoE router is *skipped*: it is consumed by a raw f32
-        einsum (routing stays float by design), not by ``linear.dense``.
-        Prepared trees are inference-only — use them for prefill/decode,
-        not ``loss``.
+        Every dense weight — ``{"w": ...}`` parameter dicts, the MoE
+        expert stacks (``w_gate``/``w_up``/``w_down``), and the
+        tied-embedding logits weight (``table.T``, stored alongside the
+        float table as ``embed.logits_w``) — is replaced with a
+        residue-resident :class:`~repro.numerics.ResidueTensor`
+        (:func:`repro.quant.residency.prepare_weight`).  Leading
+        stack axes are preserved, so the layer scans slice prepared
+        leaves exactly as they sliced ``w``.  Identity for the bns
+        system; idempotent on already-prepared trees.  The MoE router is
+        *skipped*: it is consumed by a raw f32 einsum (routing stays
+        float by design).  Prepared trees are inference-only — use them
+        for prefill/decode, not ``loss``.
         """
-        if backend == "bns":
+        if system == "bns":
             return params
+
+        def prep(w):
+            return residency.prepare_weight(w, system=system, bits=rns_bits)
 
         def walk(node, name=None):
             if isinstance(node, dict):
                 if set(node) == {"w"} and name != "router":
                     return residency.prepare_dense(
-                        node, backend=backend, bits=rns_bits)
-                return {k: walk(v, k) for k, v in node.items()}
+                        node, system=system, bits=rns_bits)
+                out = {k: walk(v, k) for k, v in node.items()}
+                # tied-embedding logits matmul (transformer.py _logits);
+                # the float table stays for the embedding gather
+                if (name == "embed" and "table" in out
+                        and not is_encdec and "logits_w" not in out):
+                    out["logits_w"] = prep(
+                        out["table"].astype(jnp.float32).T)
+                return out
+            if (name in ("w_gate", "w_up", "w_down")
+                    and not isinstance(node, ResidueTensor)):
+                return prep(node)  # MoE expert stacks (bare array leaves)
             return node
 
-        return walk(params)
+        return walk(params, name="params")
 
     # -- serving -------------------------------------------------------------
     def init_cache(batch: int, s_max: int, dtype=jnp.bfloat16):

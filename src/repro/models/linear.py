@@ -1,49 +1,62 @@
-"""Dense layer with a switchable arithmetic backend: BNS (bf16) or (SD-)RNS.
+"""Dense layer with a switchable arithmetic system: BNS (bf16) or (SD-)RNS.
 
-``backend="rns"`` routes every matmul through the paper's technique: symmetric
+``system="rns"`` routes every matmul through the paper's technique: symmetric
 int4 quantization -> 3-channel RNS modular matmul (Pallas kernel on TPU, jnp
 reference on CPU/dry-run) -> MRC reverse conversion -> dequantize.
-``backend="sdrns"`` uses the fused signed-digit variant instead — Eq. 2
+``system="sdrns"`` uses the fused signed-digit variant instead — Eq. 2
 partial-product rotations plus carry-free adder trees in one Pallas kernel
 (kernels/sdrns_matmul.py).  Training works through a straight-through
 estimator (exact integer forward, float backward), the standard QAT
-treatment.
+treatment.  Integer arithmetic goes through the typed
+:mod:`repro.numerics` API (``nx.encode`` / ``nx.matmul`` / ``nx.einsum``).
 
-Residue-resident weights: when ``params`` is in the prepared form produced
-by :func:`repro.quant.residency.prepare_dense` (int codes + scale +
-precomputed residue/digit planes), :func:`dense` detects it and skips the
-per-call weight quantize + forward-convert entirely — only the activation
-is quantized and converted, and the kernel consumes the resident planes via
-the ``*_enc`` entry points.  Outputs are bit-identical to the unprepared
-path; the prepared path is inference-only (the float weight is dropped).
+Residue-resident weights: when a parameter leaf is a
+:class:`~repro.numerics.ResidueTensor` (produced by
+``repro.quant.residency.prepare_weight``), :func:`dense` dispatches on the
+type — no dict-key sniffing — and skips the per-call weight quantize +
+forward-convert entirely: only the activation is quantized and converted,
+and the kernel consumes the resident planes.  Outputs are bit-identical to
+the unprepared path; the prepared path is inference-only (the float weight
+is dropped).  :func:`stacked_qmatmul` is the expert-stacked einsum sibling
+used by ``models/moe.py``.
 
-The kernel implementation is selected by ``impl`` via the backend registry
-in :mod:`repro.kernels.ops`:
-  * None        — auto by platform ("pallas" on TPU, "interpret" elsewhere).
-  * "pallas"    — pl.pallas_call, Mosaic lowering (real TPU).
-  * "interpret" — Pallas interpreter (CPU correctness tests).
-  * "ref"       — pure-jnp oracles (CPU dry-run compilation; same flop/byte
-                  structure as the kernel for roofline purposes).
+Two orthogonal knobs (DESIGN.md §8):
+  * ``system`` — which number system the layer computes in
+    ("bns" | "rns" | "sdrns");
+  * ``impl``   — which kernel implementation runs it, via the backend
+    registry in :mod:`repro.numerics.registry`:
+      None        — auto by platform ("pallas" on TPU, "interpret" elsewhere)
+      "pallas"    — pl.pallas_call, Mosaic lowering (real TPU)
+      "interpret" — Pallas interpreter (CPU correctness tests)
+      "ref"       — pure-jnp oracles (CPU dry-run compilation / roofline).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro import numerics as nx
 from repro.core.moduli import P21, ModuliSet
-from repro.kernels import ops
+from repro.numerics import ResidueTensor
 from repro.quant import residency
 from repro.quant.quant import qmax_for_bits, quantize_symmetric
 
-__all__ = ["dense", "init_dense", "rns_qmatmul", "sdrns_qmatmul"]
+__all__ = ["dense", "init_dense", "rns_qmatmul", "sdrns_qmatmul",
+           "stacked_qmatmul"]
 
 
 def init_dense(key: jax.Array, d_in: int, d_out: int,
                dtype=jnp.float32) -> dict[str, jax.Array]:
     scale = (2.0 / (d_in + d_out)) ** 0.5
     return {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+
+
+def _spec(op: str, bits: int, mset: ModuliSet) -> nx.EncodeSpec:
+    return nx.EncodeSpec(layout="sd" if op == "sdrns" else "rns",
+                         mset=mset, qbits=bits)
 
 
 # ---------------------------------------------------------------------------
@@ -59,8 +72,8 @@ def _qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
     Forward: exact integer (SD-)RNS matmul of the quantized operands,
     dequantized with per-token (rows of x) and per-output-channel (cols of w)
     scales.  Backward: straight-through (floats) — standard QAT.
-    ``op`` selects the integer matmul ("rns" | "sdrns"); ``impl`` is the
-    registry backend (None = auto by platform).
+    ``op`` selects the number system ("rns" | "sdrns"); ``impl`` is the
+    kernel registry backend (None = auto by platform).
     """
     return _qmatmul_fwd(x, w, bits, mset, impl, op)[0]
 
@@ -68,15 +81,14 @@ def _qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
 def _qmatmul_fwd(x, w, bits, mset, impl, op):
     qmax = qmax_for_bits(bits)
     qx, sx = quantize_symmetric(x, bits, axis=-1)      # per-token scales
-    # Per-call weight encode: the generic kernel entry re-derives the
-    # weight's residue/digit planes inside.  Counted at trace time so the
-    # zero-conversion property of the prepared path is testable.
+    # Per-call weight encode: the weight's residue/digit planes are
+    # re-derived inside.  Counted at trace time so the zero-conversion
+    # property of the prepared path is testable.
     residency.record("weight_quantize")
     residency.record("weight_forward_convert")
     qw, sw = quantize_symmetric(w, bits, axis=0)       # per-out-channel
-    matmul = ops.sdrns_matmul if op == "sdrns" else ops.rns_matmul
-    acc = matmul(qx, qw, mset=mset, max_abs_a=qmax, max_abs_b=qmax,
-                 backend=impl)                         # exact int32
+    t = nx.encode(qw, _spec(op, bits, mset))
+    acc = nx.matmul(qx, t, max_abs_a=qmax, backend=impl)  # exact int32
     out = acc.astype(jnp.float32) * sx * sw            # (M,1)*(1,N) broadcast
     return out, (x, w)
 
@@ -104,53 +116,129 @@ def sdrns_qmatmul(x: jax.Array, w: jax.Array, bits: int, mset: ModuliSet,
 
 
 # ---------------------------------------------------------------------------
+# Expert-stacked quantized einsum (the MoE hot path), same STE treatment.
+# ---------------------------------------------------------------------------
+
+
+def _split_subscripts(subscripts: str) -> tuple[str, str, str]:
+    lhs, out = subscripts.replace(" ", "").split("->")
+    a_sub, b_sub = lhs.split(",")
+    return a_sub, b_sub, out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _qeinsum(x: jax.Array, w: jax.Array, subscripts: str, bits: int,
+             mset: ModuliSet, impl: str | None, op: str) -> jax.Array:
+    """Stacked quantized einsum ("<stack>mk,<stack>kn-><stack>mn") with the
+    same quantize -> exact integer compute -> dequantize lifecycle as
+    :func:`_qmatmul`, per stack slice."""
+    return _qeinsum_fwd(x, w, subscripts, bits, mset, impl, op)[0]
+
+
+def _qeinsum_fwd(x, w, subscripts, bits, mset, impl, op):
+    qmax = qmax_for_bits(bits)
+    qx, sx = quantize_symmetric(x, bits, axis=-1)      # per-row scales
+    residency.record("weight_quantize")
+    residency.record("weight_forward_convert")
+    qw, sw = quantize_symmetric(w, bits, axis=-2)      # per-out-ch, stack-safe
+    t = nx.encode(qw, _spec(op, bits, mset))
+    acc = nx.einsum(subscripts, qx, t, max_abs_a=qmax, backend=impl)
+    out = acc.astype(jnp.float32) * sx * sw
+    return out, (x, w)
+
+
+def _qeinsum_bwd(subscripts, bits, mset, impl, op, resids, g):
+    x, w = resids
+    a_sub, b_sub, out_sub = _split_subscripts(subscripts)
+    gx = jnp.einsum(f"{out_sub},{b_sub}->{a_sub}", g, w,
+                    preferred_element_type=jnp.float32)
+    gw = jnp.einsum(f"{a_sub},{out_sub}->{b_sub}", x, g,
+                    preferred_element_type=jnp.float32)
+    return gx.astype(x.dtype), gw.astype(w.dtype)
+
+
+_qeinsum.defvjp(_qeinsum_fwd, _qeinsum_bwd)
+
+
+def stacked_qmatmul(
+    subscripts: str,
+    x: jax.Array,
+    w,
+    *,
+    system: str,
+    bits: int = 4,
+    mset: ModuliSet = P21,
+    impl: str | None = None,
+) -> jax.Array:
+    """Quantized stacked einsum over a float weight or resident planes.
+
+    ``w`` float (*stack, K, N): per-call quantize + forward-convert with
+    straight-through gradients.  ``w`` :class:`ResidueTensor` (prepared
+    expert stack): conversion-free resident path, inference-only.  Both
+    land on the same :func:`repro.numerics.einsum` runner — outputs are
+    bit-identical.
+    """
+    if isinstance(w, ResidueTensor):
+        # raises the specific residency-mismatch error for system="bns" etc.
+        _check_resident(w, bits, mset, system, where="stacked_qmatmul")
+        qmax = qmax_for_bits(bits)
+        qx, sx = quantize_symmetric(x.astype(jnp.float32), bits, axis=-1)
+        residency.record("weight_reuse")
+        acc = nx.einsum(subscripts, qx, w, max_abs_a=qmax, backend=impl)
+        return acc.astype(jnp.float32) * sx * w.scale
+    if system not in ("rns", "sdrns"):
+        raise ValueError(f"unknown system {system!r}")
+    return _qeinsum(x.astype(jnp.float32), w.astype(jnp.float32),
+                    subscripts, bits, mset, impl, system)
+
+
+# ---------------------------------------------------------------------------
 # Residue-resident forward: the weight's planes are precomputed, so only the
 # activation side quantizes/converts per call.  Inference-only (no VJP): the
 # float weight no longer exists to straight-through into.
 # ---------------------------------------------------------------------------
 
 
-def _check_resident_meta(params, bits, mset, op):
-    """Static bits/mset consistency check — works under jit and scan.
+def _check_resident(w: ResidueTensor, bits, mset, system, *,
+                    where="dense") -> None:
+    """Static bits/mset/system consistency check — works under jit and scan.
 
-    ``bits``/``mset`` must equal the prepare-time values: ``max_abs_b``
-    drives K-segmentation, and an understated bound silently overflows the
-    moduli range.  Prepared dicts encode the bit width in the *shape* of
-    the ``qbits`` leaf and the channel count/digit width in the plane
-    shapes, so the check is on static shapes, not (traced) values.
+    ``bits``/``mset`` must equal the prepare-time values: the magnitude
+    bound drives K-segmentation, and an understated bound silently
+    overflows the moduli range.  All three live as static metadata on the
+    tensor, so the check fires at trace time.
     """
-    meta = params.get("qbits")
-    if meta is not None and meta.shape[-1] != bits:
+    kind = residency.prepared_kind(w)
+    if system != kind:
+        raise ValueError(
+            f"params are residue-resident for system {kind!r} but "
+            f"{where}() was called with system {system!r}"
+        )
+    if w.qbits is not None and w.qbits != bits:
         raise ValueError(
             f"residue-resident params were prepared with "
-            f"bits={meta.shape[-1]} but dense() was called with "
+            f"bits={w.qbits} but {where}() was called with "
             f"bits={bits} — K-segmentation bounds would be wrong"
         )
-    C = mset.num_channels
-    planes = params["w_dig"] if op == "sdrns" else params["w_res"]
-    plane_c = planes.shape[-4] if op == "sdrns" else planes.shape[-3]
-    if plane_c != C:
+    if w.mset.moduli != mset.moduli:
         raise ValueError(
-            f"residue-resident planes carry {plane_c} channels but mset "
-            f"{mset.moduli} has {C} — prepared under a different moduli set"
+            f"residue-resident planes were prepared under moduli "
+            f"{w.mset.moduli} but {where}() was called with {mset.moduli}"
+        )
+    if w.scale is None:
+        raise ValueError(
+            "residue-resident weight carries no dequantization scale; "
+            "prepare it with repro.quant.residency.prepare_weight"
         )
 
 
-def _qmatmul_resident(x, params, bits, mset, impl, op):
-    """x: (M, K) float, params: prepared dense dict -> (M, N) float."""
-    _check_resident_meta(params, bits, mset, op)
+def _qmatmul_resident(x, w: ResidueTensor, bits, impl):
+    """x: (M, K) float, w: prepared ResidueTensor -> (M, N) float."""
     qmax = qmax_for_bits(bits)
     qx, sx = quantize_symmetric(x, bits, axis=-1)      # per-token scales
     residency.record("weight_reuse")
-    if op == "sdrns":
-        acc = ops.sdrns_matmul_enc(qx, params["w_dig"], mset=mset,
-                                   max_abs_a=qmax, max_abs_b=qmax,
-                                   backend=impl)
-    else:
-        acc = ops.rns_matmul_enc(qx, params["w_res"], mset=mset,
-                                 max_abs_a=qmax, max_abs_b=qmax,
-                                 backend=impl)
-    return acc.astype(jnp.float32) * sx * params["scale"]
+    acc = nx.matmul(qx, w, max_abs_a=qmax, backend=impl)
+    return acc.astype(jnp.float32) * sx * w.scale
 
 
 # ---------------------------------------------------------------------------
@@ -162,37 +250,42 @@ def dense(
     params: dict[str, jax.Array],
     x: jax.Array,
     *,
-    backend: str = "bns",
+    system: str = "bns",
     bits: int = 4,
     mset: ModuliSet = P21,
     impl: str | None = None,
     compute_dtype=jnp.bfloat16,
     out_dtype=None,
+    backend: str | None = None,
 ) -> jax.Array:
-    """y = x @ w under the selected arithmetic backend.
+    """y = x @ w under the selected arithmetic system.
 
     x: (..., d_in) -> (..., d_out).  Leading dims are flattened for the RNS
     path (the kernel is 2-D) and restored after.
 
-    If ``params`` is residue-resident (see :mod:`repro.quant.residency`),
-    the per-call weight quantize + forward-convert is skipped; ``backend``
-    must match the backend the parameters were prepared for, and ``bits`` /
-    ``mset`` must equal the prepare-time values (same jit statics).
+    If ``params["w"]`` is a :class:`ResidueTensor` (see
+    :mod:`repro.quant.residency`), the per-call weight quantize +
+    forward-convert is skipped; ``system``/``bits``/``mset`` must equal the
+    prepare-time values (same jit statics).
+
+    ``backend=`` is the deprecated spelling of ``system=`` (the kernel
+    *implementation* axis is ``impl=``).
     """
-    kind = residency.prepared_kind(params)
-    if kind is not None:
-        if backend != kind:
-            raise ValueError(
-                f"params are residue-resident for backend {kind!r} but "
-                f"dense was called with backend {backend!r}"
-            )
+    if backend is not None:
+        warnings.warn(
+            "dense(backend=...) is deprecated; use system= for the number "
+            "system (bns/rns/sdrns) and impl= for the kernel backend",
+            DeprecationWarning, stacklevel=2)
+        system = backend
+    w = params["w"]
+    if isinstance(w, ResidueTensor):
+        _check_resident(w, bits, mset, system)
         lead = x.shape[:-1]
         d_in = x.shape[-1]
         x2 = x.reshape(-1, d_in).astype(jnp.float32)
-        y2 = _qmatmul_resident(x2, params, bits, mset, impl, kind)
+        y2 = _qmatmul_resident(x2, w, bits, impl)
         return y2.reshape(*lead, y2.shape[-1]).astype(compute_dtype)
-    w = params["w"]
-    if backend == "bns":
+    if system == "bns":
         # Dot-output dtype is a measured, per-arch policy (EXPERIMENTS.md
         # §Perf iteration 3/6): bf16 results cut granite-20b HBM traffic 5%
         # (the MXU accumulates f32 internally either way) but blew up the
@@ -204,10 +297,10 @@ def dense(
             preferred_element_type=pref,
         )
         return y.astype(compute_dtype)
-    if backend not in ("rns", "sdrns"):
-        raise ValueError(f"unknown backend {backend!r}")
+    if system not in ("rns", "sdrns"):
+        raise ValueError(f"unknown system {system!r}")
     lead = x.shape[:-1]
     d_in = x.shape[-1]
     x2 = x.reshape(-1, d_in).astype(jnp.float32)
-    y2 = _qmatmul(x2, w.astype(jnp.float32), bits, mset, impl, backend)
+    y2 = _qmatmul(x2, w.astype(jnp.float32), bits, mset, impl, system)
     return y2.reshape(*lead, w.shape[-1]).astype(compute_dtype)

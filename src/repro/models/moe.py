@@ -17,6 +17,14 @@ The scatter/gather pair lowers to all-to-alls under SPMD — the EP dispatch.
 
 Load-balance aux loss is the standard switch-transformer form
 ``E * sum_e f_e * p_e``.
+
+Arithmetic system: under ``system="rns"``/``"sdrns"`` (via ``dense_kw``)
+the three expert einsums run as quantized exact integer einsums through
+``linear.stacked_qmatmul`` — per-call encode with straight-through
+gradients for training, or conversion-free residue-resident planes when
+the expert stacks are prepared :class:`~repro.numerics.ResidueTensor`
+leaves (``models/api.py::prepare_params``).  The router stays float by
+design (it feeds a raw f32 einsum — routing is not quantized arithmetic).
 """
 from __future__ import annotations
 
@@ -26,6 +34,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.models import linear
+from repro.numerics import ResidueTensor
 from repro.parallel.sharding import constrain, get_shard_ctx
 
 __all__ = ["init_moe", "moe", "moe_capacity"]
@@ -66,11 +76,23 @@ def moe(
 ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar f32).
 
-    ``dense_kw`` is accepted for interface parity; expert matmuls run as
-    stacked einsums (the RNS backend applies to the dense archs' layers —
-    expert-stacked RNS einsums are a documented future extension).
+    ``dense_kw`` selects the arithmetic system for the expert einsums
+    (``system``/``bits``/``mset``/``impl``, as for ``linear.dense``); the
+    bns default keeps the float einsums.
     """
-    del dense_kw
+    dkw = dense_kw or {}
+    system = dkw.get("system", "bns")
+    qkw = {k: dkw[k] for k in ("bits", "mset", "impl") if k in dkw}
+
+    def expert_einsum(subscripts, operand, w, out_dtype):
+        if system in ("rns", "sdrns") or isinstance(w, ResidueTensor):
+            out = linear.stacked_qmatmul(subscripts, operand, w,
+                                         system=system, **qkw)
+        else:
+            out = jnp.einsum(subscripts, operand, w.astype(operand.dtype),
+                             preferred_element_type=jnp.float32)
+        return out.astype(out_dtype)
+
     B, S, d = x.shape
     T = B * S
     E, K = n_experts, top_k
@@ -120,17 +142,13 @@ def moe(
     # stacked expert SwiGLU (operands stay in compute dtype; f32 accumulate)
     if tp_in_expert:
         buf = constrain(buf, None, "dp", None)
-    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(buf.dtype),
-                   preferred_element_type=jnp.float32)
-    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(buf.dtype),
-                   preferred_element_type=jnp.float32)
+    g = expert_einsum("ecd,edf->ecf", buf, params["w_gate"], jnp.float32)
+    u = expert_einsum("ecd,edf->ecf", buf, params["w_up"], jnp.float32)
     if tp_in_expert:
         g = constrain(g, None, "dp", "tp")
         u = constrain(u, None, "dp", "tp")
     h = (jax.nn.silu(g) * u).astype(x.dtype)
-    out_buf = jnp.einsum("ecf,efd->ecd", h,
-                         params["w_down"].astype(h.dtype),
-                         preferred_element_type=jnp.float32).astype(x.dtype)
+    out_buf = expert_einsum("ecf,efd->ecd", h, params["w_down"], x.dtype)
     if tp_in_expert:
         out_buf = constrain(out_buf, None, "dp", None)
 

@@ -24,11 +24,13 @@ Caches (stacked over layers on axis 0):
 
 Residue-resident serving: every execution path here scans *whatever leaves
 the parameter tree holds* — prepared trees (models/api.py prepare_params)
-swap each stacked ``(L, K, N)`` float weight for stacked int8 codes, scales
-and digit/residue planes, and the same ``jax.lax.scan``s slice them per
-layer with no change to this module.  The decode step then performs zero
-weight quantize/forward-convert work (the conversion-free steady state the
-serving engine relies on).
+swap each stacked ``(L, K, N)`` float weight for a
+:class:`~repro.numerics.ResidueTensor` (digit/residue planes + scale as
+leaves, moduli/layout/qbits as static metadata), and the same
+``jax.lax.scan``s slice them per layer with no change to this module.  The
+decode step then performs zero weight quantize/forward-convert work — MoE
+expert stacks and the tied-embedding logits matmul included (the
+conversion-free steady state the serving engine relies on).
 """
 from __future__ import annotations
 
@@ -136,15 +138,32 @@ def _embed_inputs(params, cfg: ArchConfig, tokens: jax.Array,
     return constrain(x, "dp", "seq", None)
 
 
-def _logits(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+def _logits(params, cfg: ArchConfig, x: jax.Array,
+            dense_kw: dict[str, Any] | None = None) -> jax.Array:
     """Logits in compute dtype (softmax/CE upcast to f32 downstream).
 
     An f32 logits matmul makes the *residual-stream cotangent* f32 for the
     entire backward pass — measured at 40% of granite-20b's HBM traffic
-    (EXPERIMENTS.md §Perf iteration 5)."""
+    (EXPERIMENTS.md §Perf iteration 5).
+
+    Under the rns/sdrns systems the tied-embedding logits matmul runs
+    through ``linear.dense`` like every other weight matmul: quantized
+    per call on unprepared trees, or conversion-free against the
+    residue-resident ``embed.logits_w`` :class:`ResidueTensor` that
+    ``prepare_params`` encodes from ``table.T`` — so the decode step's
+    largest matmul also performs zero weight quantize/forward-convert work.
+    """
+    dkw = dense_kw or {}
     x = rmsnorm(params["final_norm"], x)
-    logits = jnp.matmul(x, params["embed"]["table"].astype(x.dtype).T,
-                        preferred_element_type=x.dtype)
+    if dkw.get("system", "bns") in ("rns", "sdrns"):
+        w = params["embed"].get("logits_w")
+        node = {"w": params["embed"]["table"].astype(jnp.float32).T
+                if w is None else w}
+        lkw = {k: v for k, v in dkw.items() if k != "out_dtype"}
+        logits = linear.dense(node, x, **lkw).astype(x.dtype)
+    else:
+        logits = jnp.matmul(x, params["embed"]["table"].astype(x.dtype).T,
+                            preferred_element_type=x.dtype)
     return constrain(logits, "dp", None, "tp")
 
 
@@ -271,7 +290,7 @@ def lm_forward(
     else:
         raise ValueError(f"lm_forward does not handle family {cfg.family!r}")
 
-    return _logits(params, cfg, x), aux
+    return _logits(params, cfg, x, dense_kw), aux
 
 
 # ---------------------------------------------------------------------------
@@ -399,7 +418,7 @@ def lm_prefill(
     else:
         raise ValueError(cfg.family)
 
-    logits = _logits(params, cfg, x[:, -1:])
+    logits = _logits(params, cfg, x[:, -1:], dense_kw)
     return logits[:, 0], new_cache
 
 
@@ -528,5 +547,5 @@ def lm_decode(
     else:
         raise ValueError(cfg.family)
 
-    logits = _logits(params, cfg, x)
+    logits = _logits(params, cfg, x, dense_kw)
     return logits[:, 0], new_cache

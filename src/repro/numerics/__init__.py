@@ -1,0 +1,50 @@
+"""repro.numerics — the typed residue-domain numerics API.
+
+One surface for the paper's encode / compute / decode lifecycle::
+
+    from repro import numerics as nx
+
+    spec = nx.EncodeSpec(layout="sd", mset=P21, qbits=4)
+    t = nx.encode(w, spec)          # forward conversion, paid once
+    y = nx.matmul(qx, t)            # carry-free exact int32 matmul
+    s = nx.einsum("ecd,edf->ecf", tokens, t_experts)   # stacked (MoE)
+    v = nx.decode(t)                # reverse conversion at the boundary
+
+:class:`ResidueTensor` is the carrier — a registered pytree holding the
+residue/digit planes and optional dequant scale as leaves and the moduli
+set / layout tag / qbits / magnitude bound as static metadata, so it rides
+``jit`` / ``scan`` / checkpointing unchanged.  It subsumes the prepared
+parameter dicts of PR 2 and the legacy ``kernels/ops.py`` entry-point zoo
+(those remain as deprecation shims forwarding here).
+
+``backend=`` on the compute ops selects the kernel implementation
+(pallas / interpret / ref, None = auto by platform) via the registry in
+:mod:`repro.numerics.registry`; the model-level number-system knob is the
+separate ``system=`` argument of ``models/api.py::build_model``.
+"""
+from repro.numerics.api import EncodeSpec, add, decode, einsum, encode, matmul
+from repro.numerics.registry import (
+    BACKENDS,
+    get_impl,
+    register_impl,
+    resolve_backend,
+)
+from repro.numerics.runners import DECODE_M, segment_count
+from repro.numerics.tensor import LAYOUTS, ResidueTensor
+
+__all__ = [
+    "ResidueTensor",
+    "EncodeSpec",
+    "LAYOUTS",
+    "encode",
+    "decode",
+    "matmul",
+    "einsum",
+    "add",
+    "BACKENDS",
+    "resolve_backend",
+    "register_impl",
+    "get_impl",
+    "DECODE_M",
+    "segment_count",
+]

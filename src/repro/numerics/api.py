@@ -1,0 +1,282 @@
+"""The typed numerics surface: encode / compute / decode on ResidueTensor.
+
+One API for the paper's lifecycle (PAPER.md Fig. 1):
+
+    spec = EncodeSpec(layout="sd", mset=P21, qbits=4)
+    t = nx.encode(w, spec)            # BNS -> residue domain, paid once
+    y = nx.matmul(qx, t)              # carry-free, exact int32
+    v = nx.decode(t)                  # residue domain -> BNS, at the boundary
+
+``matmul``/``einsum`` dispatch on the tensor's static metadata (layout tag,
+moduli set, magnitude bound) and the activation shape to the Pallas runners
+in ``numerics/runners.py`` — the same runners the deprecated
+``kernels/ops.py`` entry points forward to, so digit outputs are
+bit-identical across API generations.  ``backend=`` selects the kernel
+implementation (pallas / interpret / ref, None = auto by platform); it is
+orthogonal to the model-level ``system`` knob (bns / rns / sdrns).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moduli import P21, ModuliSet
+from repro.numerics import runners
+from repro.numerics.tensor import LAYOUTS, ResidueTensor
+
+__all__ = ["EncodeSpec", "encode", "decode", "matmul", "add", "einsum"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodeSpec:
+    """Static recipe for a forward conversion (hashable — a jit static).
+
+    layout: "rns" | "sd" | "sd_matvec" — which kernel family the planes
+      target ("sd_matvec" pins the decode-shaped matvec schedule).
+    mset: the moduli set (sd layouts need a special 2^n-1/2^n/2^n+1 set).
+    qbits: quantization bit width.  Float inputs to :func:`encode` are
+      quantized to this width; integer inputs use it only as the magnitude
+      bound provenance.
+    max_abs: explicit magnitude bound of the encoded integers (overrides
+      the bound implied by ``qbits``); drives K-segmentation in matmul.
+    quant_axis: reduction axis for the quantization scale of float inputs
+      (-2 = per-output-channel on a (K, N) weight, the layer default).
+    """
+
+    layout: str = "sd"
+    mset: ModuliSet = P21
+    qbits: int | None = None
+    max_abs: int | None = None
+    quant_axis: int | None = -2
+
+    def __post_init__(self):
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"unknown layout {self.layout!r}; expected one of {LAYOUTS}")
+
+    @property
+    def bound(self) -> int | None:
+        if self.max_abs is not None:
+            return self.max_abs
+        if self.qbits is not None:
+            from repro.quant.quant import qmax_for_bits
+
+            return qmax_for_bits(self.qbits)
+        return None
+
+
+def encode(w: jax.Array, spec: EncodeSpec | None = None, *,
+           scale: jax.Array | None = None) -> ResidueTensor:
+    """Forward conversion: (..., K, N) values -> :class:`ResidueTensor`.
+
+    Integer ``w`` is encoded directly (``scale`` may carry an existing
+    dequantization scale).  Float ``w`` is first quantized symmetrically to
+    ``spec.qbits`` along ``spec.quant_axis`` — the quantize-once half of
+    the residency lifecycle — and the resulting scale rides on the tensor.
+    """
+    spec = spec or EncodeSpec()
+    if w.ndim < 2:
+        raise ValueError(f"encode needs a (..., K, N) value, got {w.shape}")
+    if jnp.issubdtype(w.dtype, jnp.floating):
+        if spec.qbits is None:
+            raise ValueError(
+                "float input needs EncodeSpec.qbits to quantize; encode "
+                "integer codes directly to skip quantization")
+        if scale is not None:
+            raise ValueError("scale= is only for pre-quantized integer input")
+        from repro.quant.quant import quantize_symmetric
+
+        w, scale = quantize_symmetric(w, spec.qbits, axis=spec.quant_axis)
+    if spec.layout == "rns":
+        planes = runners.encode_rns_planes(w, spec.mset)
+    else:
+        planes = runners.encode_sd_planes(w, spec.mset)
+    return ResidueTensor(planes=planes, scale=scale, mset=spec.mset,
+                         layout=spec.layout, qbits=spec.qbits,
+                         max_abs=spec.bound)
+
+
+def decode(t: ResidueTensor) -> jax.Array:
+    """Reverse conversion at the domain boundary.
+
+    Returns exact int32 codes, or — when the tensor carries a
+    dequantization ``scale`` — the f32 value ``codes * scale``.
+    """
+    if not isinstance(t, ResidueTensor):
+        raise TypeError(f"decode expects a ResidueTensor, got {type(t)}")
+    codes = t.to_int()
+    if t.scale is not None:
+        return codes.astype(jnp.float32) * t.scale
+    return codes
+
+
+def _bounds(t: ResidueTensor, max_abs_a: int | None) -> tuple[int, int]:
+    mab = t.max_abs
+    if mab is None:
+        raise ValueError(
+            "tensor has no magnitude bound (encode with qbits= or "
+            "max_abs=); the bound drives K-segmentation")
+    maa = mab if max_abs_a is None else max_abs_a
+    return maa, mab
+
+
+def _matmul_planes(a: jax.Array, t: ResidueTensor, max_abs_a: int | None,
+                   backend: str | None) -> jax.Array:
+    maa, mab = _bounds(t, max_abs_a)
+    if t.layout == "rns":
+        return runners.rns_run(a, t.planes, mset=t.mset, max_abs_a=maa,
+                               max_abs_b=mab, backend=backend)
+    return runners.sdrns_run(a, t.planes, mset=t.mset, max_abs_a=maa,
+                             max_abs_b=mab, backend=backend,
+                             force_matvec=t.layout == "sd_matvec")
+
+
+@functools.partial(jax.jit, static_argnames=("max_abs_a", "backend"))
+def matmul(a: jax.Array, t: ResidueTensor, *, max_abs_a: int | None = None,
+           backend: str | None = None) -> jax.Array:
+    """Exact integer matmul of an (M, K) activation against encoded planes.
+
+    Dispatches on the tensor's layout tag and the activation shape: rns ->
+    channel-wise modular matmul; sd -> fused signed-digit kernel, with
+    decode shapes (M <= DECODE_M) auto-routed to the matvec schedule;
+    sd_matvec -> matvec schedule pinned.  Only ``a`` is forward-converted
+    per call — the planes are consumed as-is (the residency economy).
+
+    Args:
+      a: (M, K) integer tensor, |a| <= max_abs_a.
+      t: encoded (K, N) weight (stacked tensors go through :func:`einsum`).
+      max_abs_a: static activation bound; defaults to the tensor's own
+        bound (activations quantized to the same width — the co-designed
+        quantizer default).
+      backend: kernel implementation ("pallas"/"interpret"/"ref"/None=auto).
+    Returns:
+      (M, N) int32, exact A @ B.
+    """
+    if not isinstance(t, ResidueTensor):
+        raise TypeError(
+            f"matmul expects a ResidueTensor operand, got {type(t)}; "
+            "encode the weight first")
+    if t.stack_shape:
+        raise ValueError(
+            f"matmul takes a 2-D encoded weight, got stacked value shape "
+            f"{t.shape}; use numerics.einsum for stacked operands")
+    if a.ndim != 2:
+        raise ValueError(f"matmul takes a 2-D activation, got {a.shape}")
+    return _matmul_planes(a, t, max_abs_a, backend)
+
+
+def _parse_stacked(subscripts: str) -> int:
+    """Validate a stacked-matmul einsum spec; return the stack rank.
+
+    Supported shape: ``<stack>mk,<stack>kn-><stack>mn`` with identical
+    stack letters on all three terms — e.g. ``"ecd,edf->ecf"`` (the MoE
+    expert stack) or ``"mk,kn->mn"`` (plain matmul).
+    """
+    try:
+        lhs, out = subscripts.replace(" ", "").split("->")
+        a_sub, b_sub = lhs.split(",")
+    except ValueError as e:
+        raise ValueError(f"malformed einsum spec {subscripts!r}") from e
+    if len(a_sub) < 2 or len(a_sub) != len(b_sub) or len(a_sub) != len(out):
+        raise ValueError(
+            f"unsupported einsum spec {subscripts!r}: need "
+            "'<stack>mk,<stack>kn-><stack>mn'")
+    stack = a_sub[:-2]
+    m, k = a_sub[-2], a_sub[-1]
+    letters = stack + m + k + b_sub[-1]
+    if (b_sub[:-2] != stack or out[:-2] != stack
+            or b_sub[-2] != k or out[-2] != m or out[-1] != b_sub[-1]
+            or len(letters) != len(set(letters))):
+        raise ValueError(
+            f"unsupported einsum spec {subscripts!r}: need "
+            "'<stack>mk,<stack>kn-><stack>mn'")
+    return len(stack)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("subscripts", "max_abs_a", "backend"))
+def einsum(subscripts: str, a: jax.Array, t: ResidueTensor, *,
+           max_abs_a: int | None = None,
+           backend: str | None = None) -> jax.Array:
+    """Stacked exact integer matmul — residue-resident MoE expert einsums.
+
+    Supports ``"<stack>mk,<stack>kn-><stack>mn"`` specs (identical leading
+    stack letters), e.g. ``nx.einsum("ecd,edf->ecf", tokens, w_experts)``
+    for an (E, C, d) token buffer against (E, d, f) expert-stacked encoded
+    weights.  Each stack slice runs the same shared runner ``matmul`` uses
+    (scanned over the stack), so digit outputs equal per-slice ``matmul``
+    bit-for-bit; decode-shaped slices ride the matvec schedule.
+    """
+    if not isinstance(t, ResidueTensor):
+        raise TypeError(
+            f"einsum expects a ResidueTensor operand, got {type(t)}")
+    stack_nd = _parse_stacked(subscripts)
+    if a.ndim != stack_nd + 2:
+        raise ValueError(
+            f"activation rank {a.ndim} does not match spec "
+            f"{subscripts!r} (want {stack_nd + 2})")
+    if len(t.stack_shape) != stack_nd:
+        raise ValueError(
+            f"encoded operand stack {t.stack_shape} does not match spec "
+            f"{subscripts!r} (want rank {stack_nd})")
+    if stack_nd == 0:
+        return _matmul_planes(a, t, max_abs_a, backend)
+    stack_shape = a.shape[:stack_nd]
+    if tuple(t.stack_shape) != tuple(stack_shape):
+        raise ValueError(
+            f"stack mismatch: activation {stack_shape} vs encoded "
+            f"{t.stack_shape}")
+    if a.shape[-1] != t.shape[-2]:
+        raise ValueError(
+            f"contraction mismatch: {a.shape} vs encoded value {t.shape}")
+    S = 1
+    for d in stack_shape:
+        S *= d
+    a_r = a.reshape(S, *a.shape[stack_nd:])
+    p_r = t.planes.reshape(S, *t.planes.shape[stack_nd:])
+
+    def body(carry, xs):
+        a_i, p_i = xs
+        t_i = ResidueTensor(planes=p_i, scale=None, mset=t.mset,
+                            layout=t.layout, qbits=t.qbits,
+                            max_abs=t.max_abs)
+        return carry, _matmul_planes(a_i, t_i, max_abs_a, backend)
+
+    _, outs = jax.lax.scan(body, None, (a_r, p_r))
+    return outs.reshape(*stack_shape, *outs.shape[1:])
+
+
+def add(x, y, *, kind: str | None = None,
+        interpret: bool | None = None):
+    """Carry-free SD addition — typed tensors or raw digit arrays.
+
+    * ``ResidueTensor`` operands (matching layouts): per-channel modular
+      carry-free addition through the Pallas sd_add kernel for sd layouts,
+      centered plane addition for rns.  Returns a ResidueTensor.
+    * Raw ``(..., n)`` digit arrays with ``kind=`` ("plain" | "pow2m1" |
+      "pow2" | "pow2p1"): the batched kernel directly ((..., n+1) out for
+      "plain").  Returns a digit array.
+
+    ``interpret``: Pallas interpreter toggle (None = auto by platform).
+    """
+    if isinstance(x, ResidueTensor) or isinstance(y, ResidueTensor):
+        if not (isinstance(x, ResidueTensor) and isinstance(y, ResidueTensor)):
+            raise TypeError("cannot add a ResidueTensor to a raw array")
+        x._check_ring_op(y)
+        if kind is not None:
+            raise ValueError("kind= is only for raw digit arrays; typed "
+                             "tensors carry their own channel kinds")
+        if not x.is_sd:
+            return x + y  # centered plane addition
+        planes = x._per_channel(
+            lambda k, a, b: runners.sd_add_run(a, b, kind=k,
+                                               interpret=interpret),
+            x.planes, y.planes)
+        return x._with_planes(planes)
+    if kind is None:
+        raise ValueError("raw digit arrays need kind= "
+                         "('plain' | 'pow2m1' | 'pow2' | 'pow2p1')")
+    return runners.sd_add_run(x, y, kind=kind, interpret=interpret)

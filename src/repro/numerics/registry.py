@@ -1,0 +1,54 @@
+"""Kernel-implementation registry for the numerics dispatch surface.
+
+Every numerics op (``rns_matmul``, ``sdrns_matmul``, ``sdrns_matvec``,
+``sd_add``) registers up to three implementations:
+
+* ``"pallas"``    — ``pl.pallas_call`` compiled by Mosaic (real TPU);
+* ``"interpret"`` — the same kernel body in the Pallas interpreter (CPU
+  correctness tests and CI containers);
+* ``"ref"``       — pure-jnp oracle with the same flop/byte structure
+  (CPU dry-run compilation / roofline).
+
+``backend=None`` auto-selects by platform (``pallas`` on TPU, ``interpret``
+elsewhere).  This axis — *which implementation runs the kernel* — is
+deliberately distinct from the model-level ``system`` knob
+(``bns``/``rns``/``sdrns`` — *which number system the model computes in*);
+see ``models/api.py::build_model``.
+
+This module was factored out of ``kernels/ops.py`` so the typed
+``repro.numerics`` API and the legacy shims share one registry without an
+import cycle.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.kernels import compat
+
+__all__ = ["BACKENDS", "resolve_backend", "register_impl", "get_impl"]
+
+BACKENDS = ("pallas", "interpret", "ref")
+
+_REGISTRY: dict[str, dict[str, Callable]] = {}
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Resolve a backend name; ``None``/``"auto"`` selects by platform."""
+    if backend in (None, "auto"):
+        return "pallas" if compat.platform() == "tpu" else "interpret"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    return backend
+
+
+def register_impl(op: str, backend: str, fn: Callable) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    _REGISTRY.setdefault(op, {})[backend] = fn
+
+
+def get_impl(op: str, backend: str | None = None) -> Callable:
+    impls = _REGISTRY.get(op)
+    if impls is None:
+        raise KeyError(f"no backends registered for op {op!r}")
+    return impls[resolve_backend(backend)]

@@ -1,0 +1,314 @@
+"""Internal kernel runners behind the typed numerics API.
+
+These are the shared execution paths every public surface lands on — the
+typed ``repro.numerics`` dispatch (``matmul``/``einsum``/``add``) and the
+deprecated ``kernels/ops.py`` entry points alike — which is what keeps
+digit outputs bit-identical across API generations:
+
+* :func:`rns_run`   — activation forward-conversion + K-segmentation +
+  channel-wise modular matmul over pre-encoded residue planes;
+* :func:`sdrns_run` — the signed-digit sibling (fused Eq. 2 kernel), with
+  decode shapes (M <= :data:`DECODE_M`) auto-routed to the matvec schedule;
+* :func:`sd_add_run` — batched carry-free SD addition (pad/tile plumbing
+  around the VPU kernel).
+
+Plane encoders (:func:`encode_rns_planes`, :func:`encode_sd_planes`) are
+elementwise, so encode-then-slice equals slice-then-encode — the property
+that keeps residue-resident weights bit-identical to convert-per-call.
+
+Kernel implementations are registered here against the backend registry
+(``numerics/registry.py``): pallas / interpret / ref per op.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sd, sdrns
+from repro.core.moduli import ModuliSet
+from repro.kernels.rns_matmul import rns_matmul_pallas
+from repro.kernels.sd_add import sd_add_pallas
+from repro.kernels.sdrns_matmul import (
+    WRAP_SIGNS,
+    sdrns_matmul_pallas,
+    sdrns_matvec_pallas,
+)
+from repro.numerics.registry import get_impl, register_impl
+
+__all__ = [
+    "DECODE_M",
+    "segment_count",
+    "encode_rns_planes",
+    "encode_sd_planes",
+    "rns_run",
+    "sdrns_run",
+    "sd_add_run",
+]
+
+
+def _round_up(v: int, k: int) -> int:
+    return (v + k - 1) // k * k
+
+
+def segment_count(K: int, max_abs_a: int, max_abs_b: int,
+                  mset: ModuliSet) -> int:
+    """Segments needed so each exact partial result fits (-M/2, M/2)."""
+    if max_abs_a == 0 or max_abs_b == 0:
+        return 1
+    per_term = max_abs_a * max_abs_b
+    cap = mset.half_range // per_term
+    if cap < 1:
+        raise ValueError(
+            f"operand bound {per_term} exceeds dynamic range of {mset.moduli}"
+        )
+    segs = (K + cap - 1) // cap
+    return max(segs, 1)
+
+
+# ---------------------------------------------------------------------------
+# rns — int8 residue planes, lazy reduction, MXU tiling.
+# ---------------------------------------------------------------------------
+
+
+def _choose_blocks(M: int, N: int, K: int) -> tuple[int, int, int]:
+    """MXU-aligned tiles that do not over-pad small problems."""
+    bm = 128 if M >= 128 else _round_up(M, 8)
+    bn = 128 if N >= 128 else _round_up(N, 128)  # lane dim: keep 128
+    bk = 512 if K >= 512 else _round_up(K, 128)
+    return bm, max(bn, 128), max(bk, 128)
+
+
+register_impl(
+    "rns_matmul", "pallas",
+    lambda a, b, mset, bm, bn, bk: rns_matmul_pallas(
+        a, b, jnp.asarray(mset.moduli, jnp.int32),
+        bm=bm, bn=bn, bk=bk, interpret=False))
+register_impl(
+    "rns_matmul", "interpret",
+    lambda a, b, mset, bm, bn, bk: rns_matmul_pallas(
+        a, b, jnp.asarray(mset.moduli, jnp.int32),
+        bm=bm, bn=bn, bk=bk, interpret=True))
+
+
+def _rns_matmul_ref_impl(a, b, mset, bm, bn, bk):
+    from repro.kernels.ref import rns_matmul_ref
+
+    return rns_matmul_ref(a, b, mset)
+
+
+register_impl("rns_matmul", "ref", _rns_matmul_ref_impl)
+
+
+def _res_dtype(mset: ModuliSet):
+    return jnp.int8 if max(mset.moduli) <= 257 else jnp.int32
+
+
+def encode_rns_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
+    """Integer values (..., K, N) -> centered residue planes (..., C, K, N).
+
+    The channel axis lands *after* any leading (layer-stack) axes so the
+    planes slice cleanly under ``jax.lax.scan`` over stacked layers.  int8
+    when every centered residue fits (the MXU-path rule of the rns kernel).
+    """
+    res = mset.to_residues(w.astype(jnp.int32))          # (C, ..., K, N)
+    return jnp.moveaxis(res, 0, -3).astype(_res_dtype(mset))
+
+
+def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend):
+    """Shared runner: activation conversion + segmentation + kernel dispatch.
+
+    ``b_res``: (C, K, N) pre-encoded centered residue planes.  Every public
+    surface (typed ``numerics.matmul`` and the deprecated entry points)
+    lands here, so outputs are bit-identical by construction.
+    """
+    impl = get_impl("rns_matmul", backend)
+    M, K = a.shape
+    C, K2, N = b_res.shape
+    assert K == K2, (a.shape, b_res.shape)
+
+    res_dtype = _res_dtype(mset)
+    a_res = mset.to_residues(a.astype(jnp.int32)).astype(res_dtype)
+
+    segs = segment_count(K, max_abs_a, max_abs_b, mset)
+    seg_len = _round_up((K + segs - 1) // segs, 128)
+    segs = (K + seg_len - 1) // seg_len
+
+    bm, bn, bk = _choose_blocks(M, N, seg_len)
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    Kp = _round_up(seg_len, bk)
+
+    total = jnp.zeros((M, N), jnp.int32)
+    for s in range(segs):
+        lo = s * seg_len
+        hi = min(lo + seg_len, K)
+        a_s = a_res[:, :, lo:hi]
+        b_s = b_res[:, lo:hi, :]
+        a_p = jnp.zeros((C, Mp, Kp), res_dtype).at[:, :M, : hi - lo].set(a_s)
+        b_p = jnp.zeros((C, Kp, Np), res_dtype).at[:, : hi - lo, :N].set(b_s)
+        out_res = impl(a_p, b_p, mset, bm, bn, bk)
+        total = total + mset.from_residues(out_res[:, :M, :N])
+    return total
+
+
+# ---------------------------------------------------------------------------
+# sdrns — fused signed-digit residue matmul (Eq. 2 in one kernel).
+# ---------------------------------------------------------------------------
+
+
+def _sdrns_digit_width(mset: ModuliSet) -> int:
+    from repro.numerics.tensor import _digit_width
+
+    return _digit_width(mset)
+
+
+def _choose_digit_blocks(M: int, N: int) -> tuple[int, int]:
+    """Small tiles: the digit axis multiplies VMEM footprint by n^2."""
+    bm = 32 if M >= 32 else _round_up(M, 8)
+    bn = 32 if N >= 32 else _round_up(N, 8)
+    return bm, bn
+
+
+# Decode threshold: at or below this M the sd path switches to the
+# matvec-style schedule (whole M block + K segment resident, grid (C, N/bn)).
+DECODE_M = 8
+
+
+def _choose_decode_blocks(M: int, N: int) -> tuple[int, int]:
+    """Decode-shaped tiles: skinny M (padded to sublanes), wide N columns.
+
+    With bm <= 8 the n^2-scaled partial-product stack shrinks 4x vs the
+    matmul tiles, which buys lane-width (128) column tiles at the same VMEM
+    budget — fewer grid steps over N for the single-token step.
+    """
+    bm = _round_up(M, 8)
+    bn = 128 if N >= 128 else _round_up(N, 8)
+    return bm, bn
+
+
+# Per-grid-step budget for the kernel's partial-product stack (int8 bytes);
+# a few MiB leaves VMEM room for operands and double buffering.
+_PP_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def _wrap_signs(mset: ModuliSet) -> jax.Array:
+    return jnp.asarray([WRAP_SIGNS[k] for k, _ in mset.kinds], jnp.int32)
+
+
+register_impl(
+    "sdrns_matmul", "pallas",
+    lambda ad, bd, mset, bm, bn: sdrns_matmul_pallas(
+        ad, bd, _wrap_signs(mset), bm=bm, bn=bn, interpret=False))
+register_impl(
+    "sdrns_matmul", "interpret",
+    lambda ad, bd, mset, bm, bn: sdrns_matmul_pallas(
+        ad, bd, _wrap_signs(mset), bm=bm, bn=bn, interpret=True))
+
+
+def _sdrns_matmul_ref_impl(ad, bd, mset, bm, bn):
+    from repro.kernels.ref import sdrns_matmul_ref
+
+    return sdrns_matmul_ref(ad, bd, mset)
+
+
+register_impl("sdrns_matmul", "ref", _sdrns_matmul_ref_impl)
+
+# Decode-shaped variant: same kernel body, matvec schedule (bm rides whole).
+register_impl(
+    "sdrns_matvec", "pallas",
+    lambda ad, bd, mset, bm, bn: sdrns_matvec_pallas(
+        ad, bd, _wrap_signs(mset), bn=bn, interpret=False))
+register_impl(
+    "sdrns_matvec", "interpret",
+    lambda ad, bd, mset, bm, bn: sdrns_matvec_pallas(
+        ad, bd, _wrap_signs(mset), bn=bn, interpret=True))
+register_impl("sdrns_matvec", "ref", _sdrns_matmul_ref_impl)
+
+
+def encode_sd_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
+    """Integer values (..., K, N) -> SD digit planes (..., C, K, N, n) int8.
+
+    The quantize-once / convert-once half of the serving lifecycle: centered
+    residues per channel, each encoded as an n-digit SD vector.  Channel and
+    digit axes land around the matmul dims so stacked-layer leaves slice
+    cleanly under ``jax.lax.scan``.
+    """
+    n = _sdrns_digit_width(mset)
+    res = mset.to_residues(w.astype(jnp.int32), centered=True)  # (C, ..., K, N)
+    return sd.from_int(jnp.moveaxis(res, 0, -3), n)
+
+
+def sdrns_run(a, b_dig, *, mset, max_abs_a, max_abs_b, backend,
+              force_matvec=False):
+    """Shared runner over pre-encoded B digit planes.
+
+    Routes decode shapes (M <= DECODE_M, or ``force_matvec`` — the
+    ``sd_matvec`` layout tag) to the matvec schedule; every public surface
+    lands here with identical segmentation and tiling, so digit outputs are
+    bit-identical across them.
+    """
+    n = _sdrns_digit_width(mset)
+    M, K = a.shape
+    C, K2, N, n2 = b_dig.shape
+    assert (K, n) == (K2, n2), (a.shape, b_dig.shape)
+
+    if force_matvec or M <= DECODE_M:
+        op = "sdrns_matvec"
+        bm, bn = _choose_decode_blocks(M, N)
+    else:
+        op = "sdrns_matmul"
+        bm, bn = _choose_digit_blocks(M, N)
+    impl = get_impl(op, backend)
+
+    segs = segment_count(K, max_abs_a, max_abs_b, mset)
+    seg_len = (K + segs - 1) // segs
+    # VMEM bound: the kernel materializes an (n, bm, k, bn, n) int8 PP
+    # stack per grid step, so the dynamic-range segmentation alone is not a
+    # memory bound — cap the K slice to keep that stack within budget.
+    k_cap = max(_PP_BUDGET_BYTES // (n * n * bm * bn), 1)
+    seg_len = min(seg_len, k_cap)
+    segs = (K + seg_len - 1) // seg_len
+
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+
+    total = jnp.zeros((M, N), jnp.int32)
+    for s in range(segs):
+        lo = s * seg_len
+        hi = min(lo + seg_len, K)
+        a_s = a[:, lo:hi].astype(jnp.int32)
+        # centered residues -> SD digit planes (zero rows/cols pad to tiles;
+        # the zero digit vector is the zero residue, so padding is inert)
+        a_res = mset.to_residues(a_s, centered=True)        # (C, M, ks)
+        ad = jnp.zeros((C, Mp, hi - lo, n), jnp.int8)
+        ad = ad.at[:, :M].set(sd.from_int(a_res, n))
+        bd = jnp.zeros((C, hi - lo, Np, n), jnp.int8)
+        bd = bd.at[:, :, :N].set(b_dig[:, lo:hi])
+        out_dig = impl(ad, bd, mset, bm, bn)                # (C, Mp, Np, n)
+        total = total + sdrns.sdrns_decode(out_dig[:, :M, :N], mset)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# sd_add — batched carry-free SD addition.
+# ---------------------------------------------------------------------------
+
+
+def sd_add_run(x: jax.Array, y: jax.Array, *, kind: str,
+               interpret: bool | None = None) -> jax.Array:
+    """Batched carry-free SD addition via the Pallas kernel.
+
+    x, y: (..., n) int8 digit tensors (LSB first).  Returns same shape
+    ((..., n+1) for kind="plain").
+    """
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    B = int(np.prod(lead)) if lead else 1
+    out_n = n + 1 if kind == "plain" else n
+    nd = _round_up(max(out_n, 128), 128)
+    bb = 256 if B >= 256 else _round_up(B, 8)
+    Bp = _round_up(B, bb)
+
+    xp = jnp.zeros((Bp, nd), jnp.int8).at[:B, :n].set(x.reshape(B, n))
+    yp = jnp.zeros((Bp, nd), jnp.int8).at[:B, :n].set(y.reshape(B, n))
+    out = sd_add_pallas(xp, yp, kind=kind, n=n, bb=bb, interpret=interpret)
+    return out[:B, :out_n].reshape(*lead, out_n)

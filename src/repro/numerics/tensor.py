@@ -1,0 +1,238 @@
+"""ResidueTensor — the typed carrier of residue-domain values.
+
+This is the paper's central economy as a type: pay the BNS -> R-RNS forward
+conversion once (``repro.numerics.encode``), carry the value through the
+model as residue/digit planes, do all arithmetic carry-free in the residue
+domain, and decode only at a domain boundary (``repro.numerics.decode``).
+Everything the dispatch surface needs to pick a kernel rides on the tensor:
+
+* ``planes``  — the encoded integer data (a pytree leaf, jit/scan/vmap
+  friendly).  Layout ``"rns"``: ``(*stack, C, K, N)`` centered residue
+  planes (int8 when the moduli allow).  Layouts ``"sd"``/``"sd_matvec"``:
+  ``(*stack, C, K, N, n)`` int8 signed-digit planes, digit axis LSB-first.
+  The channel axis lands *after* any leading stack axes so prepared
+  parameter trees slice cleanly under ``jax.lax.scan``.
+* ``scale``   — optional dequantization scale (a second leaf), broadcastable
+  against the decoded ``(*stack, K, N)`` value; carried by quantized
+  weights so the float epilogue travels with the planes.
+* static metadata (pytree aux data, so jit signatures key on it): the
+  ``ModuliSet``, the ``layout`` tag, the prepare-time ``qbits``, and the
+  magnitude bound ``max_abs`` that drives K-segmentation.
+
+``layout`` selects the kernel family ``matmul`` dispatches to: ``"rns"``
+(channel-wise modular matmul, lazy reduction), ``"sd"`` (fused signed-digit
+kernel; decode shapes auto-route to the matvec schedule), ``"sd_matvec"``
+(pin the matvec schedule regardless of shape).
+
+``ResidueTensor`` subsumes the prepared-dict protocol of the pre-PR-3
+``quant/residency.py`` and unifies :class:`repro.core.rns.RnsTensor` —
+the legacy channel-first elementwise carrier is now a thin subclass whose
+arithmetic is inherited from here (``channel_axis`` is the only pivot).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moduli import ModuliSet
+
+__all__ = ["LAYOUTS", "ResidueTensor"]
+
+LAYOUTS = ("rns", "sd", "sd_matvec")
+
+
+def _digit_width(mset: ModuliSet) -> int:
+    """Shared SD digit width of a special moduli set (raises for generic)."""
+    kinds = {k for k, _ in mset.kinds}
+    widths = {n for _, n in mset.kinds}
+    if "generic" in kinds or len(widths) != 1:
+        raise ValueError(
+            "signed-digit layouts need a special moduli set (2^n-1 / 2^n / "
+            f"2^n+1 at one width), got kinds {mset.kinds}"
+        )
+    return next(iter(widths))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)  # array fields: identity eq, hashable
+class ResidueTensor:
+    planes: jax.Array
+    scale: jax.Array | None = None
+    mset: ModuliSet = None  # type: ignore[assignment]
+    layout: str = "rns"
+    qbits: int | None = None
+    max_abs: int | None = None
+
+    def __post_init__(self):
+        self._validate()
+
+    def _validate(self) -> None:
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"unknown layout {self.layout!r}; expected one of {LAYOUTS}")
+        if self.mset is None:
+            raise ValueError("ResidueTensor needs a ModuliSet")
+        need = 3 if self.layout == "rns" else 4
+        if self.planes.ndim < need:
+            raise ValueError(
+                f"{self.layout} planes need >= {need} dims "
+                f"(*stack, C, K, N{', n' if need == 4 else ''}), "
+                f"got shape {self.planes.shape}")
+        C = self.mset.num_channels
+        if self.planes.shape[self.channel_axis] != C:
+            raise ValueError(
+                f"planes carry {self.planes.shape[self.channel_axis]} "
+                f"channels at axis {self.channel_axis} but mset "
+                f"{self.mset.moduli} has {C}")
+        if self.layout != "rns":
+            n = _digit_width(self.mset)
+            if self.planes.shape[-1] != n:
+                raise ValueError(
+                    f"sd planes need digit width {n} on the last axis, "
+                    f"got shape {self.planes.shape}")
+
+    # -- pytree protocol ------------------------------------------------------
+    def tree_flatten(self):
+        aux = (self.mset, self.layout, self.qbits, self.max_abs)
+        return (self.planes, self.scale), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mset, layout, qbits, max_abs = aux
+        obj = object.__new__(cls)
+        # bypass validation: children may be tracers/None during transforms
+        obj.planes, obj.scale = children
+        obj.mset, obj.layout = mset, layout
+        obj.qbits, obj.max_abs = qbits, max_abs
+        return obj
+
+    # -- views ----------------------------------------------------------------
+    @property
+    def channel_axis(self) -> int:
+        """Axis of the moduli-channel dimension (after any stack axes)."""
+        return self.planes.ndim - (3 if self.layout == "rns" else 4)
+
+    @property
+    def is_sd(self) -> bool:
+        return self.layout != "rns"
+
+    @property
+    def digit_width(self) -> int:
+        return _digit_width(self.mset)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        """Shape of the represented integer value (channel/digit axes folded)."""
+        s = list(self.planes.shape)
+        if self.is_sd:
+            del s[-1]
+        del s[self.channel_axis]
+        return tuple(s)
+
+    @property
+    def stack_shape(self) -> tuple[int, ...]:
+        """Leading (layer/expert) stack axes ahead of the 2-D value."""
+        return self.shape[:-2]
+
+    @property
+    def dtype(self):
+        return self.planes.dtype
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"{type(self).__name__}(shape={self.shape}, "
+                f"layout={self.layout!r}, moduli={self.mset.moduli}, "
+                f"qbits={self.qbits}, max_abs={self.max_abs}, "
+                f"scale={'yes' if self.scale is not None else 'no'})")
+
+    # -- internal helpers ------------------------------------------------------
+    def _with_planes(self, planes: jax.Array) -> "ResidueTensor":
+        return dataclasses.replace(self, planes=planes)
+
+    def _channel_first(self, planes: jax.Array | None = None) -> jax.Array:
+        p = self.planes if planes is None else planes
+        return jnp.moveaxis(p, self.channel_axis, 0)
+
+    def _from_channel_first(self, planes: jax.Array) -> jax.Array:
+        return jnp.moveaxis(planes, 0, self.channel_axis)
+
+    def _center(self, planes: jax.Array) -> jax.Array:
+        # int32 inside the modular reduction (int8 storage would wrap),
+        # back to the storage dtype after (centered residues fit it)
+        out = self.mset.center(self._channel_first(planes).astype(jnp.int32))
+        return self._from_channel_first(out).astype(self.planes.dtype)
+
+    def _check_ring_op(self, other: "ResidueTensor") -> None:
+        if not isinstance(other, ResidueTensor):
+            raise TypeError(f"expected ResidueTensor, got {type(other)}")
+        if self.mset.moduli != other.mset.moduli:
+            raise ValueError(
+                f"moduli mismatch: {self.mset.moduli} vs {other.mset.moduli}")
+        if self.is_sd != other.is_sd:
+            raise ValueError(
+                f"layout mismatch: {self.layout} vs {other.layout}")
+        if self.scale is not None or other.scale is not None:
+            raise ValueError(
+                "ring ops on scaled (quantized-weight) tensors are "
+                "ill-defined; decode first or drop the scale")
+
+    def _per_channel(self, fn, *operands: jax.Array) -> jax.Array:
+        """Apply ``fn(kind, *channel_planes)`` per channel, restack."""
+        ops_cf = [self._channel_first(o) for o in operands]
+        outs = [fn(kind, *(o[c] for o in ops_cf))
+                for c, (kind, _) in enumerate(self.mset.kinds)]
+        return self._from_channel_first(jnp.stack(outs, axis=0))
+
+    # -- decode ----------------------------------------------------------------
+    def to_int(self) -> jax.Array:
+        """Reverse conversion to int32 values (ignores ``scale``).
+
+        Exact whenever the represented |value| < min(M/2, 2**31).
+        """
+        from repro.core import sdrns
+
+        cf = self._channel_first()
+        if self.is_sd:
+            return sdrns.sdrns_decode(cf, self.mset)
+        # int8 storage would wrap inside the canonicalizing remainder
+        return self.mset.from_residues(cf.astype(jnp.int32))
+
+    # -- ring ops (exact mod M) ------------------------------------------------
+    def __add__(self, other: "ResidueTensor") -> "ResidueTensor":
+        from repro.core import sdrns
+
+        self._check_ring_op(other)
+        if self.is_sd:
+            return self._with_planes(self._per_channel(
+                lambda kind, x, y: sdrns.modular_add(x, y, kind),
+                self.planes, other.planes))
+        return self._with_planes(self._center(
+            self.planes.astype(jnp.int32) + other.planes.astype(jnp.int32)))
+
+    def __sub__(self, other: "ResidueTensor") -> "ResidueTensor":
+        return self + (-other)
+
+    def __mul__(self, other: "ResidueTensor") -> "ResidueTensor":
+        from repro.core import sdrns
+
+        self._check_ring_op(other)
+        if self.is_sd:
+            return self._with_planes(self._per_channel(
+                lambda kind, x, y: sdrns.modular_mul(x, y, kind),
+                self.planes, other.planes))
+        return self._with_planes(self._center(
+            self.planes.astype(jnp.int32) * other.planes.astype(jnp.int32)))
+
+    def __neg__(self) -> "ResidueTensor":
+        # digit-wise / plane-wise in both layouts — no carry chain at all
+        if self.scale is not None:
+            raise ValueError("negation of scaled tensors is ill-defined")
+        return self._with_planes((-self.planes).astype(self.planes.dtype))
+
+    def flush(self) -> "ResidueTensor":
+        """Reduce rns planes to centered canonical form (sd digits are
+        already closed over {-1, 0, 1}; no-op there)."""
+        if self.is_sd:
+            return self
+        return self._with_planes(self._center(self.planes))

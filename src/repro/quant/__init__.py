@@ -1,5 +1,10 @@
 from repro.quant.quant import dequantize, quantize_symmetric
-from repro.quant.residency import prepare_dense, prepared_kind
+from repro.quant.residency import (
+    dequantize_weight,
+    prepare_dense,
+    prepare_weight,
+    prepared_kind,
+)
 
 __all__ = ["quantize_symmetric", "dequantize", "prepare_dense",
-           "prepared_kind"]
+           "prepare_weight", "prepared_kind", "dequantize_weight"]

@@ -2,7 +2,7 @@
 
 The RNS backend computes *exact* integer matmuls; quantization is the bridge
 from floats into the integer ring.  Magnitude bounds chosen here are what let
-``kernels.ops.segment_count`` prove the exact result fits the moduli set's
+``repro.numerics.segment_count`` prove the exact result fits the moduli set's
 dynamic range — the quantizer and the number system are co-designed
 (paper §II: "applications that require frequent arithmetic operations within
 a defined numerical range").

@@ -1,25 +1,24 @@
 """Residue-resident weight preparation — quantize once, convert once, serve many.
 
-The serving lifecycle of a quantized weight under the (SD-)RNS backends has
+The serving lifecycle of a quantized weight under the (SD-)RNS systems has
 three stages the paper amortizes once but a naive implementation repeats on
 every matmul call:
 
 1. **quantize** — float weight -> symmetric int codes + per-output-channel
-   scale (``quant.quantize_symmetric``);
-2. **forward-convert** — int codes -> centered residue planes (RNS) or SD
-   digit planes (SD-RNS) via :mod:`repro.kernels.ops` encode helpers;
-3. **serve** — every prefill/decode matmul consumes the planes directly
-   through the ``*_enc`` kernel entry points.
+   scale;
+2. **forward-convert** — int codes -> centered residue planes (rns) or SD
+   digit planes (sdrns);
+3. **serve** — every prefill/decode matmul consumes the planes directly.
 
-:func:`prepare_dense` performs stages 1–2 eagerly, replacing the float
-``{"w": ...}`` parameter dict with the *prepared* form
-
-    {"qw": int8 codes, "scale": f32 per-out-channel, "w_dig"/"w_res": planes}
-
-``models.linear.dense`` detects the prepared form (:func:`prepared_kind`)
-and skips both per-call stages on the hot path.  Every leaf keeps the
-original leading (layer-stack) axes, so prepared parameter trees ride
-through ``jax.lax.scan``, checkpointing, and jit signatures unchanged.
+:func:`prepare_weight` performs stages 1–2 eagerly through
+:func:`repro.numerics.encode`, producing a typed
+:class:`~repro.numerics.ResidueTensor` whose leaves (planes + scale) ride
+``jax.lax.scan``, checkpointing and jit signatures unchanged, and whose
+static metadata (moduli set, layout, qbits, magnitude bound) lets
+``models.linear.dense`` and ``models.moe.moe`` dispatch with a plain
+``isinstance`` check — no dict-key sniffing.  :func:`prepare_dense` is the
+``{"w": float} -> {"w": ResidueTensor}`` form the parameter-tree walk in
+``models/api.py`` applies.
 
 Prepared parameters are inference-only: the float weight is dropped (that
 is the memory/bandwidth point), so there is nothing to backpropagate into.
@@ -28,11 +27,11 @@ Training keeps the unprepared form with its straight-through estimator.
 Trace counters
 --------------
 ``record``/``counters`` count, *at trace time*, how often the per-call
-weight-encode path runs vs the resident path.  ``models.linear`` records
-``weight_quantize``/``weight_forward_convert`` when a matmul re-derives its
-weight planes and ``weight_reuse`` when it consumes resident ones — so a
-test can trace a decode step and assert the hot path performs zero weight
-conversions (tests/test_residency.py).
+weight-encode path runs vs the resident path.  ``models.linear`` and
+``models.moe`` record ``weight_quantize``/``weight_forward_convert`` when a
+matmul re-derives its weight planes and ``weight_reuse`` when it consumes
+resident ones — so a test can trace a decode step and assert the hot path
+performs zero weight conversions (tests/test_residency.py).
 """
 from __future__ import annotations
 
@@ -42,11 +41,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import numerics as nx
 from repro.core.moduli import P21, ModuliSet
-from repro.kernels import ops
-from repro.quant.quant import dequantize, quantize_symmetric
+from repro.numerics import ResidueTensor
 
 __all__ = [
+    "SYSTEM_LAYOUT",
+    "prepare_weight",
     "prepare_dense",
     "prepared_kind",
     "dequantize_weight",
@@ -54,6 +55,10 @@ __all__ = [
     "reset_counters",
     "counters",
 ]
+
+# model-level number system -> ResidueTensor layout tag (and back)
+SYSTEM_LAYOUT = {"rns": "rns", "sdrns": "sd"}
+_LAYOUT_SYSTEM = {"rns": "rns", "sd": "sdrns", "sd_matvec": "sdrns"}
 
 
 # ---------------------------------------------------------------------------
@@ -82,14 +87,14 @@ def counters() -> dict[str, int]:
 # ---------------------------------------------------------------------------
 
 
-def prepare_dense(
-    params: dict[str, jax.Array],
+def prepare_weight(
+    w: jax.Array,
     *,
-    backend: str,
+    system: str,
     bits: int = 4,
     mset: ModuliSet = P21,
-) -> dict[str, jax.Array]:
-    """``{"w": float}`` -> residue-resident form for ``backend``.
+) -> ResidueTensor:
+    """Float weight (..., K, N) -> residue-resident :class:`ResidueTensor`.
 
     Quantization matches the per-call path exactly: symmetric, per output
     channel (reduction over the K axis, ``axis=-2`` — identical to the
@@ -97,46 +102,63 @@ def prepare_dense(
     or residue planes are therefore bit-identical to what the unprepared
     path derives on every call, which is what makes the swap transparent.
 
-    Leading axes of ``w`` (layer stacks, expert stacks) are preserved on
-    every produced leaf.
+    Leading axes of ``w`` (layer stacks, expert stacks) are preserved.
     """
-    if backend not in ("rns", "sdrns"):
+    if system not in SYSTEM_LAYOUT:
         raise ValueError(
-            f"prepare_dense: backend must be 'rns' or 'sdrns', got {backend!r}"
+            f"prepare_weight: system must be 'rns' or 'sdrns', got {system!r}"
         )
-    w = params["w"].astype(jnp.float32)
+    if isinstance(w, ResidueTensor):
+        # idempotent only when the existing residency matches the request —
+        # silently keeping planes prepared under other metadata would
+        # surface much later (or never) as wrong arithmetic
+        if (_LAYOUT_SYSTEM[w.layout] != system or w.qbits != bits
+                or w.mset.moduli != mset.moduli):
+            raise ValueError(
+                f"weight already residue-resident as (system="
+                f"{_LAYOUT_SYSTEM[w.layout]!r}, bits={w.qbits}, moduli="
+                f"{w.mset.moduli}) — cannot re-prepare for (system="
+                f"{system!r}, bits={bits}, moduli={mset.moduli}); the "
+                "float weight was dropped at prepare time"
+            )
+        return w
     if w.ndim < 2:
         raise ValueError(f"dense weight must be at least 2-D, got {w.shape}")
-    qw, scale = quantize_symmetric(w, bits, axis=-2)
-    # qbits records the prepare-time bit width in its *shape* (last axis =
-    # bits, leading axes match the weight stack).  Array values are tracers
-    # under jit, but shapes stay static — so models/linear.py can verify
-    # bits/mset consistency inside jitted/scanned code, where a silent
-    # mismatch would under-segment K and overflow the moduli range.
-    out = {"qw": qw.astype(jnp.int8), "scale": scale,
-           "qbits": jnp.zeros(w.shape[:-2] + (bits,), jnp.int8)}
-    if backend == "sdrns":
-        out["w_dig"] = ops.encode_sdrns_weights(qw, mset)
-    else:
-        out["w_res"] = ops.encode_rns_weights(qw, mset)
-    return out
+    spec = nx.EncodeSpec(layout=SYSTEM_LAYOUT[system], mset=mset, qbits=bits)
+    return nx.encode(w.astype(jnp.float32), spec)
+
+
+def prepare_dense(
+    params: dict[str, jax.Array],
+    *,
+    system: str,
+    bits: int = 4,
+    mset: ModuliSet = P21,
+) -> dict[str, Any]:
+    """``{"w": float}`` -> ``{"w": ResidueTensor}`` for ``system``."""
+    return {"w": prepare_weight(params["w"], system=system, bits=bits,
+                                mset=mset)}
 
 
 def prepared_kind(params: Any) -> str | None:
-    """Which backend a parameter dict was prepared for, or ``None``."""
-    if not isinstance(params, dict):
-        return None
-    if "w_dig" in params:
-        return "sdrns"
-    if "w_res" in params:
-        return "rns"
+    """Which system a parameter node is resident for, or ``None``.
+
+    Accepts a ``{"w": ResidueTensor}`` dense dict or a bare tensor.
+    """
+    w = params.get("w") if isinstance(params, dict) else params
+    if isinstance(w, ResidueTensor):
+        return _LAYOUT_SYSTEM[w.layout]
     return None
 
 
-def dequantize_weight(params: dict[str, jax.Array]) -> jax.Array:
-    """Reconstruct the float weight a prepared dict encodes (``qw * scale``).
+def dequantize_weight(params: dict[str, Any] | ResidueTensor) -> jax.Array:
+    """Reconstruct the float weight a prepared node encodes.
 
-    The closest float form available once the original weight is dropped —
+    Exact reverse conversion of the planes times the quantization scale —
+    the closest float form available once the original weight is dropped;
     used for diagnostics and for comparing against the unprepared path.
     """
-    return dequantize(params["qw"], params["scale"])
+    w = params["w"] if isinstance(params, dict) else params
+    if not isinstance(w, ResidueTensor):
+        raise TypeError(f"expected a prepared node, got {type(w)}")
+    return nx.decode(w)

@@ -7,13 +7,16 @@ place (functionally).  Static batching with slot reuse — the engine refills
 finished slots between generate() calls; positions are uniform per batch
 (the decode-step contract), which matches throughput-oriented TPU serving.
 
-Under the (SD-)RNS backends the engine makes weights *residue-resident* at
+Under the (SD-)RNS systems the engine makes weights *residue-resident* at
 construction (``prepare=True``, the default): ``model.prepare_params`` runs
-the quantize-once / forward-convert-once pass, so the steady-state decode
-loop performs zero weight quantize or forward-convert work — each step
+the quantize-once / forward-convert-once pass, replacing every dense weight
+— layer stacks, MoE expert stacks, the tied-embedding logits weight — with
+a typed :class:`~repro.numerics.ResidueTensor`, so the steady-state decode
+loop performs zero weight quantize or forward-convert work: each step
 quantizes only the token activations and consumes the precomputed digit or
-residue planes (DESIGN.md §7).  The prefill/decode jit signatures accept
-either parameter form; prepared trees are ordinary pytrees of arrays.
+residue planes (DESIGN.md §7–8).  The prefill/decode jit signatures accept
+either parameter form; prepared trees are ordinary pytrees (the tensors'
+planes/scale are leaves, their moduli/layout metadata is static).
 
 On the production mesh the same step functions lower with sharded caches —
 launch/dryrun.py compiles exactly these for the decode_32k / long_500k cells.

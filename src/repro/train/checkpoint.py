@@ -9,11 +9,15 @@ shardings the *current* mesh wants — that indirection is what makes resume
 elastic (save on N hosts, restore onto M; tests/test_checkpoint.py).
 
 Residue-resident parameter trees (repro/quant/residency.py) checkpoint
-through the same path: the prepared form is a plain pytree whose int8 code /
-digit-plane leaves round-trip exactly through ``.npz``.  Because those
-planes are *exact* integer encodings — not approximations — ``restore``
-refuses float<->integer dtype-kind casts instead of silently ``astype``-ing:
-a float template under an integer plane (or vice versa) is a structure
+through the same path: a prepared tree's
+:class:`~repro.numerics.ResidueTensor` nodes are registered pytrees, so
+their digit/residue planes and dequant scales flatten to ordinary leaves
+(keyed ``.../w/0`` planes, ``.../w/1`` scale) and round-trip exactly
+through ``.npz``; the static metadata (moduli set, layout tag, qbits)
+rides the *template's* treedef on restore.  Because the planes are *exact*
+integer encodings — not approximations — ``restore`` refuses
+float<->integer dtype-kind casts instead of silently ``astype``-ing: a
+float template under an integer plane (or vice versa) is a structure
 mismatch, and a lossy cast would corrupt the digit semantics.  Same-kind
 casts (f32 -> bf16, int8 -> int32) stay allowed for elastic resume.
 

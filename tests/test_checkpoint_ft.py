@@ -65,7 +65,7 @@ def test_residue_resident_checkpoint_roundtrip(tmp_path):
                               n_layers=1, d_model=16, n_heads=2, n_kv=1,
                               d_ff=32, vocab=64, head_dim=8,
                               compute_dtype="float32")
-    model = build_model(cfg, backend="sdrns", rns_impl="interpret")
+    model = build_model(cfg, system="sdrns", rns_impl="interpret")
     params = model.init(jax.random.PRNGKey(0))
     prepared = model.prepare_params(params)
     checkpoint.save(str(tmp_path), 3, prepared)

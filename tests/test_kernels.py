@@ -9,11 +9,19 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro import numerics as nx
 from repro.core import CRT40, P16, P21, P24, sd
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.rns_matmul import rns_matmul_pallas
 
 RNG = np.random.default_rng(0)
+
+
+def _rns_matmul(a, b, mset, max_abs):
+    t = nx.encode(jnp.asarray(b), nx.EncodeSpec(layout="rns", mset=mset,
+                                                max_abs=max_abs))
+    return nx.matmul(jnp.asarray(a), t, max_abs_a=max_abs,
+                     backend="interpret")
 
 
 # ---------------------------------------------------------------------------
@@ -35,8 +43,7 @@ SHAPES = [
 def test_rns_matmul_vs_int_oracle(M, K, N, mset):
     a = RNG.integers(-7, 8, size=(M, K)).astype(np.int32)
     b = RNG.integers(-7, 8, size=(K, N)).astype(np.int32)
-    got = ops.rns_matmul(jnp.asarray(a), jnp.asarray(b), mset=mset,
-                         max_abs_a=7, max_abs_b=7, interpret=True)
+    got = _rns_matmul(a, b, mset, 7)
     np.testing.assert_array_equal(np.asarray(got), a @ b)
 
 
@@ -67,9 +74,8 @@ def test_rns_matmul_k_segmentation():
     M, K, N = 8, 48 * 1024, 16   # 49 * 49k >> P21.half_range
     a = RNG.integers(-7, 8, size=(M, K)).astype(np.int32)
     b = RNG.integers(-7, 8, size=(K, N)).astype(np.int32)
-    assert ops.segment_count(K, 7, 7, P21) >= 2
-    got = ops.rns_matmul(jnp.asarray(a), jnp.asarray(b), mset=P21,
-                         max_abs_a=7, max_abs_b=7, interpret=True)
+    assert nx.segment_count(K, 7, 7, P21) >= 2
+    got = _rns_matmul(a, b, P21, 7)
     np.testing.assert_array_equal(np.asarray(got), a @ b)
 
 
@@ -78,8 +84,7 @@ def test_rns_matmul_int8_inputs():
     as the *result* fits the dynamic range)."""
     a = RNG.integers(-127, 128, size=(32, 64)).astype(np.int8)
     b = RNG.integers(-127, 128, size=(64, 32)).astype(np.int8)
-    got = ops.rns_matmul(jnp.asarray(a), jnp.asarray(b), mset=CRT40,
-                         max_abs_a=127, max_abs_b=127, interpret=True)
+    got = _rns_matmul(a, b, CRT40, 127)
     np.testing.assert_array_equal(
         np.asarray(got), a.astype(np.int32) @ b.astype(np.int32)
     )
@@ -87,7 +92,7 @@ def test_rns_matmul_int8_inputs():
 
 def test_rns_matmul_rejects_overflow():
     with pytest.raises(ValueError):
-        ops.segment_count(64, 2**11, 2**11, P16)
+        nx.segment_count(64, 2**11, 2**11, P16)
 
 
 @given(m=st.integers(1, 40), k=st.integers(1, 300), n=st.integers(1, 40))
@@ -95,8 +100,7 @@ def test_rns_matmul_rejects_overflow():
 def test_rns_matmul_shape_fuzz(m, k, n):
     a = RNG.integers(-7, 8, size=(m, k)).astype(np.int32)
     b = RNG.integers(-7, 8, size=(k, n)).astype(np.int32)
-    got = ops.rns_matmul(jnp.asarray(a), jnp.asarray(b), mset=P21,
-                         max_abs_a=7, max_abs_b=7, interpret=True)
+    got = _rns_matmul(a, b, P21, 7)
     np.testing.assert_array_equal(np.asarray(got), a @ b)
 
 
@@ -111,8 +115,8 @@ def test_sd_add_kernel_vs_ref(kind, n):
     B = 384
     x = RNG.integers(-1, 2, size=(B, n)).astype(np.int8)
     y = RNG.integers(-1, 2, size=(B, n)).astype(np.int8)
-    got = ops.sd_add(jnp.asarray(x), jnp.asarray(y), kind=kind,
-                     interpret=True)
+    got = nx.add(jnp.asarray(x), jnp.asarray(y), kind=kind,
+                 interpret=True)
     want = ref.sd_add_ref(jnp.asarray(x), jnp.asarray(y), kind)
     # redundant representations may differ digit-wise; values must agree
     m = {"pow2m1": (1 << n) - 1, "pow2": 1 << n, "pow2p1": (1 << n) + 1}[kind]
@@ -125,8 +129,8 @@ def test_sd_add_kernel_vs_ref(kind, n):
 def test_sd_add_plain_growth():
     x = RNG.integers(-1, 2, size=(64, 16)).astype(np.int8)
     y = RNG.integers(-1, 2, size=(64, 16)).astype(np.int8)
-    got = ops.sd_add(jnp.asarray(x), jnp.asarray(y), kind="plain",
-                     interpret=True)
+    got = nx.add(jnp.asarray(x), jnp.asarray(y), kind="plain",
+                 interpret=True)
     assert got.shape == (64, 17)
     np.testing.assert_array_equal(
         np.asarray(sd.to_int(got)),
@@ -138,8 +142,8 @@ def test_sd_add_batch_shapes():
     """Leading-dim flattening: (4, 6, n) digit tensors."""
     x = RNG.integers(-1, 2, size=(4, 6, 8)).astype(np.int8)
     y = RNG.integers(-1, 2, size=(4, 6, 8)).astype(np.int8)
-    got = ops.sd_add(jnp.asarray(x), jnp.asarray(y), kind="pow2m1",
-                     interpret=True)
+    got = nx.add(jnp.asarray(x), jnp.asarray(y), kind="pow2m1",
+                 interpret=True)
     want = ref.sd_add_ref(jnp.asarray(x), jnp.asarray(y), "pow2m1")
     m = (1 << 8) - 1
     np.testing.assert_array_equal(

@@ -21,7 +21,7 @@ def test_single_expert_equals_dense_swiglu():
                "w_up": {"w": p["w_up"][0]},
                "w_down": {"w": p["w_down"][0]}}
     y_ref = mlp_mod.swiglu(dense_p, x,
-                           {"backend": "bns", "compute_dtype": jnp.float32})
+                           {"system": "bns", "compute_dtype": jnp.float32})
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=2e-3, atol=2e-3)
     assert abs(float(aux) - 1.0) < 1e-5  # E * f * p == 1 for E == 1

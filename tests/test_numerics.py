@@ -1,0 +1,323 @@
+"""The typed numerics API: ResidueTensor properties, dispatch, legacy shims.
+
+Four layers of checking:
+
+1. **Properties** (hypothesis shim): encode -> decode round-trips exactly
+   for both layouts across moduli sets; typed add/matmul agree with the
+   plain integer oracle; pytree flatten/unflatten preserves static
+   metadata and jit does not retrace when only plane *values* change.
+2. **Dispatch**: layout tags and activation shape select the right kernel
+   family; stacked operands route through einsum; misuse raises.
+3. **Bit-identity across API generations** (the PR 3 acceptance bar): the
+   five legacy ``kernels/ops.py`` entry points are deprecation shims over
+   ``repro.numerics`` and their outputs equal ``nx.matmul`` digit-for-digit
+   at prefill and decode (M <= DECODE_M) shapes, for both layouts.
+4. **Deprecation contract**: every legacy entry point warns; the typed
+   surface does not.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import numerics as nx
+from repro.core.moduli import CRT40, P16, P21, P24
+from repro.numerics import EncodeSpec, ResidueTensor
+
+RNG = np.random.default_rng(23)
+
+SD_SETS = [P16, P21, P24]
+RNS_SETS = [P16, P21, P24, CRT40]
+
+
+def _ints(shape, lo, hi):
+    return jnp.asarray(RNG.integers(lo, hi + 1, shape), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 1. Properties.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mset", RNS_SETS, ids=lambda s: str(s.moduli))
+def test_encode_decode_round_trip_rns(mset):
+    bound = min(mset.half_range, 1 << 20)
+    v = _ints((5, 7), -bound, bound)
+    t = nx.encode(v, EncodeSpec(layout="rns", mset=mset))
+    np.testing.assert_array_equal(np.asarray(nx.decode(t)), np.asarray(v))
+
+
+@pytest.mark.parametrize("layout", ["sd", "sd_matvec"])
+@pytest.mark.parametrize("mset", SD_SETS, ids=lambda s: str(s.moduli))
+def test_encode_decode_round_trip_sd(layout, mset):
+    bound = min(mset.half_range, 1 << 20)
+    v = _ints((4, 6), -bound, bound)
+    t = nx.encode(v, EncodeSpec(layout=layout, mset=mset))
+    assert t.planes.dtype == jnp.int8
+    assert t.planes.shape[-1] == t.digit_width
+    np.testing.assert_array_equal(np.asarray(nx.decode(t)), np.asarray(v))
+
+
+@given(m=st.integers(1, 24), k=st.integers(1, 48), n=st.integers(1, 24),
+       layout=st.sampled_from(["rns", "sd"]))
+@settings(max_examples=10, deadline=None)
+def test_matmul_matches_int_oracle_fuzz(m, k, n, layout):
+    a = RNG.integers(-7, 8, (m, k)).astype(np.int32)
+    b = RNG.integers(-7, 8, (k, n)).astype(np.int32)
+    t = nx.encode(jnp.asarray(b), EncodeSpec(layout=layout, mset=P21,
+                                             max_abs=7))
+    got = nx.matmul(jnp.asarray(a), t, max_abs_a=7, backend="interpret")
+    np.testing.assert_array_equal(
+        np.asarray(got), a.astype(np.int64) @ b.astype(np.int64))
+
+
+@given(layout=st.sampled_from(["rns", "sd"]),
+       mset=st.sampled_from(SD_SETS))
+@settings(max_examples=8, deadline=None)
+def test_typed_add_matches_int_oracle(layout, mset):
+    bound = min(mset.half_range // 2, 1 << 16)
+    x = _ints((3, 5), -bound, bound)
+    y = _ints((3, 5), -bound, bound)
+    spec = EncodeSpec(layout=layout, mset=mset)
+    s = nx.add(nx.encode(x, spec), nx.encode(y, spec), interpret=True)
+    assert isinstance(s, ResidueTensor) and s.layout == layout
+    np.testing.assert_array_equal(np.asarray(s.to_int()),
+                                  np.asarray(x + y))
+    if layout == "sd":
+        assert int(jnp.max(jnp.abs(s.planes))) <= 1  # digit closure
+
+
+def test_quantizing_encode_and_scale_epilogue():
+    w = jnp.asarray(RNG.normal(size=(12, 8)), jnp.float32)
+    t = nx.encode(w, EncodeSpec(layout="sd", mset=P21, qbits=4))
+    assert t.qbits == 4 and t.max_abs == 7 and t.scale is not None
+    from repro.quant.quant import quantize_symmetric
+
+    qw, sw = quantize_symmetric(w, 4, axis=-2)
+    np.testing.assert_array_equal(np.asarray(t.to_int()), np.asarray(qw))
+    np.testing.assert_array_equal(np.asarray(nx.decode(t)),
+                                  np.asarray(qw.astype(jnp.float32) * sw))
+
+
+def test_pytree_round_trip_preserves_static_metadata():
+    v = _ints((3, 4, 5), -7, 7)  # stacked
+    t = nx.encode(v, EncodeSpec(layout="sd", mset=P21, qbits=4,
+                                max_abs=7))
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    assert len(leaves) == 1            # planes only (scale is None)
+    t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert (t2.mset.moduli, t2.layout, t2.qbits, t2.max_abs) == \
+        (P21.moduli, "sd", 4, 7)
+    assert t2.stack_shape == (3,)
+
+
+def test_jit_does_not_retrace_on_new_plane_values():
+    traces = []
+
+    @jax.jit
+    def f(t: ResidueTensor):
+        traces.append(1)
+        return t.to_int()
+
+    spec = EncodeSpec(layout="sd", mset=P21, max_abs=9)
+    f(nx.encode(_ints((4, 4), -9, 9), spec))
+    f(nx.encode(_ints((4, 4), -9, 9), spec))
+    assert len(traces) == 1
+    # different static metadata -> a new trace (metadata is a jit static)
+    f(nx.encode(_ints((4, 4), -9, 9), EncodeSpec(layout="sd", mset=P21,
+                                                 max_abs=11)))
+    assert len(traces) == 2
+
+
+def test_scan_slices_through_residue_tensor():
+    """Stacked tensors slice per layer under scan — the prepared-tree
+    contract every transformer scan relies on."""
+    v = _ints((3, 4, 5), -7, 7)
+    t = nx.encode(v, EncodeSpec(layout="sd", mset=P21, max_abs=7))
+
+    def body(carry, t_i):
+        assert t_i.planes.ndim == 4          # (C, K, N, n) slice
+        return carry, t_i.to_int()
+
+    _, vals = jax.lax.scan(body, None, t)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# 2. Dispatch.
+# ---------------------------------------------------------------------------
+
+
+def test_einsum_matches_per_slice_matmul_bit_for_bit():
+    E = 3
+    a = _ints((E, 6, 10), -7, 7)
+    b = _ints((E, 10, 12), -7, 7)
+    spec = EncodeSpec(layout="sd", mset=P21, max_abs=7)
+    t = nx.encode(b, spec)
+    got = nx.einsum("ecd,edf->ecf", a, t, max_abs_a=7, backend="interpret")
+    per = jnp.stack([nx.matmul(a[e], nx.encode(b[e], spec), max_abs_a=7,
+                               backend="interpret") for e in range(E)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(per))
+
+
+def test_einsum_plain_matmul_spec():
+    a = _ints((5, 8), -7, 7)
+    b = _ints((8, 6), -7, 7)
+    t = nx.encode(b, EncodeSpec(layout="rns", mset=P21, max_abs=7))
+    got = nx.einsum("mk,kn->mn", a, t, backend="interpret")
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(a) @ np.asarray(b))
+
+
+def test_matmul_requires_bound_and_2d():
+    b = _ints((8, 6), -7, 7)
+    t_unbounded = nx.encode(b, EncodeSpec(layout="rns", mset=P21))
+    with pytest.raises(ValueError, match="magnitude bound"):
+        nx.matmul(_ints((4, 8), -7, 7), t_unbounded, backend="interpret")
+    t_stacked = nx.encode(_ints((2, 8, 6), -7, 7),
+                          EncodeSpec(layout="rns", mset=P21, max_abs=7))
+    with pytest.raises(ValueError, match="einsum"):
+        nx.matmul(_ints((4, 8), -7, 7), t_stacked, backend="interpret")
+    with pytest.raises(TypeError):
+        nx.matmul(_ints((4, 8), -7, 7), jnp.zeros((8, 6), jnp.int32),
+                  backend="interpret")
+
+
+def test_einsum_rejects_unsupported_specs():
+    a = _ints((2, 4, 6), -3, 3)
+    t = nx.encode(_ints((2, 6, 5), -3, 3),
+                  EncodeSpec(layout="sd", mset=P21, max_abs=3))
+    for bad in ("ecd,dfe->ecf", "ecd,edf->cef", "ecd->ecf", "ed,edf->ef"):
+        with pytest.raises(ValueError):
+            nx.einsum(bad, a, t, backend="interpret")
+
+
+def test_ring_op_guards():
+    spec_sd = EncodeSpec(layout="sd", mset=P21)
+    spec_rns = EncodeSpec(layout="rns", mset=P21)
+    x = nx.encode(_ints((3, 3), -5, 5), spec_sd)
+    y = nx.encode(_ints((3, 3), -5, 5), spec_rns)
+    with pytest.raises(ValueError, match="layout"):
+        nx.add(x, y)
+    z = nx.encode(_ints((3, 3), -5, 5), EncodeSpec(layout="sd", mset=P16))
+    with pytest.raises(ValueError, match="moduli"):
+        nx.add(x, z)
+    with pytest.raises(ValueError, match="kind"):
+        nx.add(jnp.zeros((4, 7), jnp.int8), jnp.zeros((4, 7), jnp.int8))
+
+
+def test_float_encode_requires_qbits():
+    with pytest.raises(ValueError, match="qbits"):
+        nx.encode(jnp.ones((4, 4), jnp.float32), EncodeSpec(layout="sd"))
+
+
+# ---------------------------------------------------------------------------
+# 3. Bit-identity: legacy entry points == nx (prefill and decode shapes).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+@pytest.mark.parametrize("M", [4, 32], ids=["decode", "prefill"])
+@pytest.mark.parametrize("layout", ["rns", "sd"])
+def test_legacy_entry_points_bit_identical_to_nx(M, layout):
+    """Acceptance bar: the pre-refactor entry points (now shims) and the
+    typed API produce identical integer outputs — same shared runners —
+    at both the prefill matmul and decode matvec (M <= DECODE_M) shapes."""
+    from repro.kernels import ops
+
+    K, N = 20, 24
+    a = _ints((M, K), -7, 7)
+    b = _ints((K, N), -7, 7)
+    t = nx.encode(b, EncodeSpec(layout=layout, mset=P21, max_abs=7))
+    want = nx.matmul(a, t, max_abs_a=7, backend="interpret")
+    kw = dict(mset=P21, max_abs_a=7, max_abs_b=7)
+    if layout == "rns":
+        legacy = ops.rns_matmul(a, b, interpret=True, **kw)
+        legacy_enc = ops.rns_matmul_enc(a, ops.encode_rns_weights(b, P21),
+                                        backend="interpret", **kw)
+    else:
+        legacy = ops.sdrns_matmul(a, b, backend="interpret", **kw)
+        legacy_enc = ops.sdrns_matmul_enc(
+            a, ops.encode_sdrns_weights(b, P21), backend="interpret", **kw)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(legacy_enc), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(want),
+        np.asarray(a, np.int64) @ np.asarray(b, np.int64))
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_legacy_sd_add_bit_identical_to_nx():
+    from repro.kernels import ops
+
+    x = jnp.asarray(RNG.integers(-1, 2, (64, 7)), jnp.int8)
+    y = jnp.asarray(RNG.integers(-1, 2, (64, 7)), jnp.int8)
+    for kind in ("plain", "pow2m1", "pow2", "pow2p1"):
+        got = ops.sd_add(x, y, kind=kind, interpret=True)
+        want = nx.add(x, y, kind=kind, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# 4. Deprecation contract.
+# ---------------------------------------------------------------------------
+
+
+def test_every_legacy_entry_point_warns():
+    from repro.kernels import ops
+
+    a = _ints((4, 8), -3, 3)
+    b = _ints((8, 6), -3, 3)
+    kw = dict(mset=P21, max_abs_a=3, max_abs_b=3)
+    x = jnp.zeros((4, 7), jnp.int8)
+    calls = [
+        lambda: ops.rns_matmul(a, b, interpret=True, **kw),
+        lambda: ops.sdrns_matmul(a, b, backend="interpret", **kw),
+        lambda: ops.sd_add(x, x, kind="pow2m1", interpret=True),
+        lambda: ops.encode_rns_weights(b, P21),
+        lambda: ops.encode_sdrns_weights(b, P21),
+    ]
+    for call in calls:
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            call()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        planes_r = ops.encode_rns_weights(b, P21)
+        planes_d = ops.encode_sdrns_weights(b, P21)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        ops.rns_matmul_enc(a, planes_r, backend="interpret", **kw)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        ops.sdrns_matmul_enc(a, planes_d, backend="interpret", **kw)
+
+
+def test_build_model_and_dense_backend_kwargs_warn():
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models.api import build_model
+    from repro.models.linear import dense, init_dense
+
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), n_layers=1,
+                              d_model=8, n_heads=2, n_kv=1, d_ff=16,
+                              vocab=32, head_dim=4)
+    with pytest.warns(DeprecationWarning, match="system="):
+        build_model(cfg, backend="bns")
+    params = init_dense(jax.random.PRNGKey(0), 8, 4)
+    with pytest.warns(DeprecationWarning, match="system="):
+        dense(params, jnp.ones((2, 8)), backend="bns",
+              compute_dtype=jnp.float32)
+
+
+def test_typed_surface_does_not_warn():
+    b = _ints((8, 6), -7, 7)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t = nx.encode(b, EncodeSpec(layout="sd", mset=P21, max_abs=7))
+        nx.matmul(_ints((4, 8), -7, 7), t, max_abs_a=7,
+                  backend="interpret")
+        nx.decode(t)

@@ -1,14 +1,18 @@
 """Residue-resident weights: conversion-free decode, bit-identity, routing.
 
-The contract under test (DESIGN.md §7):
+The contract under test (DESIGN.md §7–8):
 
-1. ``prepare_dense`` replaces ``{"w"}`` with int8 codes + scale + digit (or
-   residue) planes, preserving leading stack axes; the MoE router is skipped.
+1. ``prepare_params`` replaces every dense weight — ``{"w": ...}`` dicts,
+   MoE expert stacks, the tied-embedding logits weight — with a typed
+   :class:`~repro.numerics.ResidueTensor` carrying planes + scale as
+   leaves and mset/layout/qbits as static metadata, preserving leading
+   stack axes; the MoE router is skipped.
 2. The prepared planes are bit-identical to what the convert-per-call path
    derives on every call — encode-then-slice == slice-then-encode.
 3. A traced decode step with prepared params performs *zero* weight
    quantize / forward-convert operations (trace counters), while the
-   unprepared step pays both per matmul.
+   unprepared step pays both per matmul — including the MoE expert-stack
+   einsums and the embedding/logits matmul.
 4. Per-dense outputs are bit-identical eagerly; under jit/scan the integer
    results stay exact and the float epilogue agrees to f32 epsilon (XLA may
    fuse the two different graphs differently), so greedy decode is
@@ -25,14 +29,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import numerics as nx
 from repro.configs import get_config
 from repro.core import sd
 from repro.core.moduli import P21
-from repro.kernels import ops
 from repro.kernels.ref import sdrns_matmul_ref
 from repro.kernels.sdrns_matmul import WRAP_SIGNS, sdrns_matvec_pallas
 from repro.models import linear
 from repro.models.api import build_model
+from repro.numerics import ResidueTensor
 from repro.quant import residency
 from repro.quant.quant import quantize_symmetric
 from repro.serving.engine import ServingEngine
@@ -40,12 +45,22 @@ from repro.serving.engine import ServingEngine
 RNG = np.random.default_rng(11)
 
 
-def _tiny_model(backend="sdrns"):
+def _tiny_model(system="sdrns"):
     cfg = dataclasses.replace(get_config("yi-6b").reduced(),
                               n_layers=1, d_model=16, n_heads=2, n_kv=1,
                               d_ff=32, vocab=64, head_dim=8,
                               compute_dtype="float32")
-    model = build_model(cfg, backend=backend, rns_impl="interpret")
+    model = build_model(cfg, system=system, rns_impl="interpret")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _tiny_moe_model(system="sdrns"):
+    cfg = dataclasses.replace(get_config("moonshot-v1-16b-a3b").reduced(),
+                              n_layers=1, d_model=16, n_heads=2, n_kv=1,
+                              d_ff=32, vocab=64, head_dim=8, n_experts=4,
+                              top_k=2, compute_dtype="float32")
+    model = build_model(cfg, system=system, rns_impl="interpret")
     params = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
 
@@ -53,6 +68,12 @@ def _tiny_model(backend="sdrns"):
 @pytest.fixture(scope="module")
 def sdrns_model():
     cfg, model, params = _tiny_model("sdrns")
+    return cfg, model, params, model.prepare_params(params)
+
+
+@pytest.fixture(scope="module")
+def sdrns_moe_model():
+    cfg, model, params = _tiny_moe_model("sdrns")
     return cfg, model, params, model.prepare_params(params)
 
 
@@ -64,47 +85,69 @@ def sdrns_model():
 def test_prepare_dense_structure_and_stack_axes(sdrns_model):
     _, _, params, prepared = sdrns_model
     L = params["layers"]["attn"]["wq"]["w"].shape[0]
-    p = prepared["layers"]["attn"]["wq"]
+    t = prepared["layers"]["attn"]["wq"]["w"]
     K, N = params["layers"]["attn"]["wq"]["w"].shape[1:]
-    assert set(p) == {"qw", "scale", "w_dig", "qbits"}
-    assert p["qw"].shape == (L, K, N) and p["qw"].dtype == jnp.int8
-    assert p["scale"].shape == (L, 1, N)
-    assert p["qbits"].shape == (L, 4)       # prepare-time bits, shape-encoded
+    assert isinstance(t, ResidueTensor)
+    assert t.layout == "sd" and t.qbits == 4 and t.max_abs == 7
+    assert t.mset.moduli == P21.moduli
     C, n = P21.num_channels, 7
-    assert p["w_dig"].shape == (L, C, K, N, n)
-    assert p["w_dig"].dtype == jnp.int8
+    assert t.planes.shape == (L, C, K, N, n)
+    assert t.planes.dtype == jnp.int8
+    assert t.scale.shape == (L, 1, N)
+    assert t.stack_shape == (L,) and t.shape == (L, K, N)
     # non-dense leaves ride through untouched
     assert "table" in prepared["embed"]
     assert "scale" in prepared["final_norm"]
 
 
-def test_prepare_skips_moe_router(sdrns_model):
-    _, model, _, _ = sdrns_model
-    tree = {"router": {"w": jnp.ones((8, 4))},
-            "proj": {"w": jnp.ones((8, 4))}}
-    out = model.prepare_params(tree)
-    assert set(out["router"]) == {"w"}          # raw f32 einsum operand
-    assert residency.prepared_kind(out["proj"]) == "sdrns"
+def test_prepare_covers_logits_weight(sdrns_model):
+    cfg, _, params, prepared = sdrns_model
+    t = prepared["embed"]["logits_w"]
+    assert isinstance(t, ResidueTensor)
+    assert t.shape == (cfg.d_model, cfg.vocab)     # table.T
+    # the float table stays for the embedding gather
+    np.testing.assert_array_equal(
+        np.asarray(prepared["embed"]["table"]),
+        np.asarray(params["embed"]["table"]))
 
 
-def test_prepare_backend_mismatch_raises():
+def test_prepare_covers_moe_expert_stacks(sdrns_moe_model):
+    cfg, model, params, prepared = sdrns_moe_model
+    moe_p = prepared["layers"]["moe"]
+    for name in ("w_gate", "w_up", "w_down"):
+        t = moe_p[name]
+        assert isinstance(t, ResidueTensor), name
+        assert t.stack_shape == params["layers"]["moe"][name].shape[:-2]
+    # the router feeds a raw f32 einsum — stays float
+    assert set(moe_p["router"]) == {"w"}
+    assert not isinstance(moe_p["router"]["w"], ResidueTensor)
+
+
+def test_prepare_is_idempotent(sdrns_model):
+    _, model, _, prepared = sdrns_model
+    again = model.prepare_params(prepared)
+    assert (again["layers"]["attn"]["wq"]["w"]
+            is prepared["layers"]["attn"]["wq"]["w"])
+
+
+def test_prepare_system_mismatch_raises():
     params = linear.init_dense(jax.random.PRNGKey(1), 8, 8)
-    prep = residency.prepare_dense(params, backend="rns", bits=4)
+    prep = residency.prepare_dense(params, system="rns", bits=4)
     assert residency.prepared_kind(prep) == "rns"
     with pytest.raises(ValueError, match="residue-resident"):
-        linear.dense(prep, jnp.ones((2, 8)), backend="sdrns",
+        linear.dense(prep, jnp.ones((2, 8)), system="sdrns",
                      impl="interpret", compute_dtype=jnp.float32)
 
 
 def test_prepare_bits_mismatch_raises_even_under_jit():
     """bits drives K-segmentation; consuming int8-prepared planes with a
     narrower bits setting would silently overflow the moduli range.  The
-    bit width is shape-encoded (qbits leaf), so the check fires at trace
-    time — under jit, where the serving engine actually runs."""
+    bit width is static ResidueTensor metadata, so the check fires at
+    trace time — under jit, where the serving engine actually runs."""
     params = linear.init_dense(jax.random.PRNGKey(4), 8, 8)
-    prep = residency.prepare_dense(params, backend="rns", bits=8)
+    prep = residency.prepare_dense(params, system="rns", bits=8)
     x = jnp.ones((2, 8))
-    kw = dict(backend="rns", bits=4, impl="interpret",
+    kw = dict(system="rns", bits=4, impl="interpret",
               compute_dtype=jnp.float32)
     with pytest.raises(ValueError, match="K-segmentation"):
         linear.dense(prep, x, **kw)
@@ -119,14 +162,18 @@ def test_prepare_bits_mismatch_raises_even_under_jit():
 
 def test_prepared_planes_match_per_call_encode():
     w = jnp.asarray(RNG.normal(size=(3, 12, 8)), jnp.float32)  # stacked
-    prep = residency.prepare_dense({"w": w}, backend="sdrns", bits=4)
+    t = residency.prepare_weight(w, system="sdrns", bits=4)
     qw, sw = quantize_symmetric(w, 4, axis=-2)
-    np.testing.assert_array_equal(np.asarray(prep["qw"]), np.asarray(qw))
-    np.testing.assert_array_equal(np.asarray(prep["scale"]), np.asarray(sw))
-    per_layer = jnp.stack([ops.encode_sdrns_weights(qw[i], P21)
-                           for i in range(3)])
-    np.testing.assert_array_equal(np.asarray(prep["w_dig"]),
+    np.testing.assert_array_equal(np.asarray(t.scale), np.asarray(sw))
+    per_layer = jnp.stack(
+        [nx.encode(qw[i], nx.EncodeSpec(layout="sd", mset=P21)).planes
+         for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(t.planes),
                                   np.asarray(per_layer))
+    # and the tensor decodes back to the quantized float form exactly
+    np.testing.assert_array_equal(
+        np.asarray(residency.dequantize_weight(t)),
+        np.asarray(qw.astype(jnp.float32) * sw))
 
 
 # ---------------------------------------------------------------------------
@@ -134,26 +181,55 @@ def test_prepared_planes_match_per_call_encode():
 # ---------------------------------------------------------------------------
 
 
+def _decode_counters(model, params, batch=2, s_max=8):
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    cache = model.init_cache(batch, s_max)
+    pos = jnp.int32(3)
+    residency.reset_counters()
+    jax.make_jaxpr(model.decode)(params, tok, cache, pos)
+    return residency.counters()
+
+
 def test_decode_trace_zero_weight_conversions(sdrns_model):
     cfg, model, params, prepared = sdrns_model
-    tok = jnp.zeros((2, 1), jnp.int32)
-    cache = model.init_cache(2, 8)
-    pos = jnp.int32(3)
-
-    residency.reset_counters()
-    jax.make_jaxpr(model.decode)(prepared, tok, cache, pos)
-    got = residency.counters()
+    got = _decode_counters(model, prepared)
     assert got.get("weight_quantize", 0) == 0
     assert got.get("weight_forward_convert", 0) == 0
     assert got.get("weight_reuse", 0) > 0
 
-    residency.reset_counters()
-    jax.make_jaxpr(model.decode)(params, tok, cache, pos)
-    base = residency.counters()
-    residency.reset_counters()
+    base = _decode_counters(model, params)
     # the unprepared step pays quantize + forward-convert per weight matmul
     assert base["weight_quantize"] == got["weight_reuse"]
     assert base["weight_forward_convert"] == got["weight_reuse"]
+
+
+def test_decode_trace_zero_conversions_moe_and_logits(sdrns_moe_model):
+    """The ROADMAP residency candidates — expert-stacked MoE einsums and
+    the embedding/logits matmul — are conversion-free in the prepared
+    decode step: zero weight quantize/forward-convert events, and the
+    reuse count covers attention + 3 expert einsums + the logits matmul."""
+    cfg, model, params, prepared = sdrns_moe_model
+    got = _decode_counters(model, prepared)
+    assert got.get("weight_quantize", 0) == 0
+    assert got.get("weight_forward_convert", 0) == 0
+    # wq, wk, wv, wo + w_gate, w_up, w_down + logits = 8 resident consumers
+    assert got["weight_reuse"] == 8
+
+    base = _decode_counters(model, params)
+    assert base["weight_quantize"] == got["weight_reuse"]
+    assert base["weight_forward_convert"] == got["weight_reuse"]
+
+
+def test_prefill_trace_zero_weight_conversions(sdrns_moe_model):
+    cfg, model, params, prepared = sdrns_moe_model
+    toks = jnp.zeros((2, 6), jnp.int32)
+    residency.reset_counters()
+    jax.make_jaxpr(lambda p, b: model.prefill(p, b, s_max=8))(
+        prepared, {"tokens": toks})
+    got = residency.counters()
+    assert got.get("weight_quantize", 0) == 0
+    assert got.get("weight_forward_convert", 0) == 0
+    assert got.get("weight_reuse", 0) > 0
 
 
 # ---------------------------------------------------------------------------
@@ -161,15 +237,35 @@ def test_decode_trace_zero_weight_conversions(sdrns_model):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("backend", ["sdrns", "rns"])
+@pytest.mark.parametrize("system", ["sdrns", "rns"])
 @pytest.mark.parametrize("M", [4, 16])  # matvec route and matmul route
-def test_dense_output_bit_identical_eager(backend, M):
+def test_dense_output_bit_identical_eager(system, M):
     params = linear.init_dense(jax.random.PRNGKey(2), 24, 16)
     x = jax.random.normal(jax.random.PRNGKey(3), (M, 24))
-    prep = residency.prepare_dense(params, backend=backend, bits=4)
-    kw = dict(backend=backend, impl="interpret", compute_dtype=jnp.float32)
+    prep = residency.prepare_dense(params, system=system, bits=4)
+    kw = dict(system=system, impl="interpret", compute_dtype=jnp.float32)
     y_u = linear.dense(params, x, **kw)
     y_p = linear.dense(prep, x, **kw)
+    np.testing.assert_array_equal(np.asarray(y_u), np.asarray(y_p))
+
+
+def test_moe_output_bit_identical_eager(sdrns_moe_model):
+    """Prepared expert stacks equal per-call expert einsums, bit for bit
+    (same shared nx.einsum runner underneath)."""
+    from repro.models import moe as moe_mod
+
+    cfg, _, params, prepared = sdrns_moe_model
+    # tree_map slices *through* ResidueTensor nodes (planes + scale leaves)
+    # exactly as jax.lax.scan slices them per layer
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+    lp_prep = jax.tree_util.tree_map(lambda a: a[0], prepared["layers"])
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 4, cfg.d_model))
+    kw = dict(n_experts=cfg.n_experts, top_k=cfg.top_k,
+              capacity_factor=cfg.moe_cf,
+              dense_kw={"system": "sdrns", "bits": 4, "impl": "interpret",
+                        "compute_dtype": jnp.float32})
+    y_u, _ = moe_mod.moe(lp["moe"], x, **kw)
+    y_p, _ = moe_mod.moe(lp_prep["moe"], x, **kw)
     np.testing.assert_array_equal(np.asarray(y_u), np.asarray(y_p))
 
 
@@ -189,6 +285,18 @@ def test_engine_decode_token_identical_and_logits_close(sdrns_model):
     np.testing.assert_array_equal(r_conv.tokens, r_res.tokens)
     np.testing.assert_allclose(r_conv.prefill_logits, r_res.prefill_logits,
                                rtol=1e-5, atol=1e-5)
+
+
+def test_engine_decode_token_identical_moe(sdrns_moe_model):
+    cfg, model, params, _ = sdrns_moe_model
+    prompts = (np.arange(6, dtype=np.int32)[None, :]
+               .repeat(2, 0)) % cfg.vocab
+    eng_conv = ServingEngine(model, params, batch=2, s_max=12,
+                             prepare=False)
+    eng_res = ServingEngine(model, params, batch=2, s_max=12)
+    r_conv = eng_conv.generate({"tokens": prompts}, max_new=3)
+    r_res = eng_res.generate({"tokens": prompts}, max_new=3)
+    np.testing.assert_array_equal(r_conv.tokens, r_res.tokens)
 
 
 def test_engine_prepare_is_identity_for_bns():
@@ -217,13 +325,26 @@ def test_matvec_kernel_digit_bit_exact_vs_reference():
 
 
 def test_decode_m_routes_to_matvec_and_matches_oracle():
-    assert callable(ops.get_impl("sdrns_matvec", "interpret"))
-    assert callable(ops.get_impl("sdrns_matvec", "ref"))
-    for M in (1, ops.DECODE_M):
+    assert callable(nx.get_impl("sdrns_matvec", "interpret"))
+    assert callable(nx.get_impl("sdrns_matvec", "ref"))
+    for M in (1, nx.DECODE_M):
         a = RNG.integers(-7, 8, (M, 20)).astype(np.int32)
         b = RNG.integers(-7, 8, (20, 40)).astype(np.int32)
-        got = ops.sdrns_matmul(jnp.asarray(a), jnp.asarray(b), mset=P21,
-                               max_abs_a=7, max_abs_b=7,
-                               backend="interpret")
+        t = nx.encode(jnp.asarray(b), nx.EncodeSpec(layout="sd", mset=P21,
+                                                    max_abs=7))
+        got = nx.matmul(jnp.asarray(a), t, max_abs_a=7,
+                        backend="interpret")
         np.testing.assert_array_equal(
             np.asarray(got), a.astype(np.int64) @ b.astype(np.int64))
+
+
+def test_sd_matvec_layout_pins_the_matvec_schedule():
+    """layout="sd_matvec" forces the matvec schedule even at prefill M."""
+    M, K, N = 16, 12, 24
+    a = RNG.integers(-7, 8, (M, K)).astype(np.int32)
+    b = RNG.integers(-7, 8, (K, N)).astype(np.int32)
+    t = nx.encode(jnp.asarray(b), nx.EncodeSpec(layout="sd_matvec",
+                                                mset=P21, max_abs=7))
+    got = nx.matmul(jnp.asarray(a), t, max_abs_a=7, backend="interpret")
+    np.testing.assert_array_equal(
+        np.asarray(got), a.astype(np.int64) @ b.astype(np.int64))

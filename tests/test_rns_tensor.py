@@ -1,4 +1,9 @@
-"""RnsTensor: pytree behaviour, ring ops, lazy matmul semantics."""
+"""RnsTensor: pytree behaviour, ring ops, lazy matmul semantics.
+
+Since PR 3 RnsTensor is the channel-first elementwise subclass of
+repro.numerics.ResidueTensor — the ring arithmetic is inherited from the
+shared channel-axis-aware implementation (layout "rns", channel_axis 0).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -31,7 +36,7 @@ def test_ring_ops():
     np.testing.assert_array_equal(np.asarray((ta - tb).to_int()), a - b)
     np.testing.assert_array_equal(np.asarray((ta * tb).to_int()), a * b)
     np.testing.assert_array_equal(np.asarray((-ta).to_int()), -a)
-    np.testing.assert_array_equal(np.asarray(ta.scale(3).to_int()), 3 * a)
+    np.testing.assert_array_equal(np.asarray(ta.scale_by(3).to_int()), 3 * a)
 
 
 def test_matmul_exact_vs_int_oracle():
@@ -60,3 +65,17 @@ def test_matmul_capacity_guard():
     tb = RnsTensor(jnp.zeros((3, big_k, 2), jnp.int32), P21)
     with pytest.raises(ValueError):
         ta.matmul(tb)
+
+
+def test_rns_tensor_is_a_residue_tensor():
+    """Unification: the legacy carrier IS the typed numerics carrier."""
+    from repro.numerics import ResidueTensor
+
+    t = RnsTensor.from_int(jnp.arange(-4, 4, dtype=jnp.int32), P21)
+    assert isinstance(t, ResidueTensor)
+    assert t.layout == "rns" and t.channel_axis == 0
+    assert t.scale is None          # the dequant-scale leaf, not scale_by()
+    # inherited ring ops close over the subclass type
+    assert isinstance(t + t, RnsTensor)
+    assert isinstance(-t, RnsTensor)
+    assert isinstance(t.flush(), RnsTensor)

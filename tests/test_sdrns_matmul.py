@@ -10,7 +10,7 @@ Three layers of checking (Pallas interpret mode on CPU):
    all three channel kinds (2^n-1 / 2^n / 2^n+1, single-channel sets) and
    the full paper sets, including the K-segmentation path;
 3. **integration** — the backend registry auto-selects off-TPU, and
-   ``models/linear.py``'s ``backend="sdrns"`` agrees with the bns matmul up
+   ``models/linear.py``'s ``system="sdrns"`` agrees with the bns matmul up
    to int4 quantization error.
 """
 import jax
@@ -18,14 +18,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import numerics as nx
 from repro.core import sd
 from repro.core.moduli import P16, P21, P24, ModuliSet
-from repro.kernels import ops
 from repro.kernels.ref import sdrns_matmul_ref
 from repro.kernels.sdrns_matmul import WRAP_SIGNS, sdrns_matmul_pallas
 from repro.models.linear import dense, init_dense
 
 RNG = np.random.default_rng(7)
+
+
+def _sdrns_matmul(a, b, mset, max_abs, backend="interpret"):
+    t = nx.encode(jnp.asarray(b), nx.EncodeSpec(layout="sd", mset=mset,
+                                                max_abs=max_abs))
+    return nx.matmul(jnp.asarray(a), t, max_abs_a=max_abs, backend=backend)
 
 KIND_SETS = [
     ModuliSet.make(((1 << 6) - 1,)),   # pow2m1
@@ -71,8 +77,7 @@ SHAPES = [
 def test_sdrns_matmul_vs_int_oracle(M, K, N, mset):
     a = RNG.integers(-7, 8, (M, K)).astype(np.int32)
     b = RNG.integers(-7, 8, (K, N)).astype(np.int32)
-    got = ops.sdrns_matmul(jnp.asarray(a), jnp.asarray(b), mset=mset,
-                           max_abs_a=7, max_abs_b=7, backend="interpret")
+    got = _sdrns_matmul(a, b, mset, 7)
     np.testing.assert_array_equal(
         np.asarray(got), a.astype(np.int64) @ b.astype(np.int64))
 
@@ -87,9 +92,8 @@ def test_per_kind_exactness_with_segmentation(mset):
     M, K, N = 12, 24, 10
     a = RNG.integers(-3, 4, (M, K)).astype(np.int32)
     b = RNG.integers(-3, 4, (K, N)).astype(np.int32)
-    assert ops.segment_count(K, 3, 3, mset) > 1  # segmentation is exercised
-    got = ops.sdrns_matmul(jnp.asarray(a), jnp.asarray(b), mset=mset,
-                           max_abs_a=3, max_abs_b=3, backend="interpret")
+    assert nx.segment_count(K, 3, 3, mset) > 1  # segmentation is exercised
+    got = _sdrns_matmul(a, b, mset, 3)
     np.testing.assert_array_equal(
         np.asarray(got), a.astype(np.int64) @ b.astype(np.int64))
 
@@ -98,32 +102,28 @@ def test_ref_backend_matches_fused():
     M, K, N = 16, 8, 16
     a = RNG.integers(-7, 8, (M, K)).astype(np.int32)
     b = RNG.integers(-7, 8, (K, N)).astype(np.int32)
-    kw = dict(mset=P21, max_abs_a=7, max_abs_b=7)
-    fused = ops.sdrns_matmul(jnp.asarray(a), jnp.asarray(b),
-                             backend="interpret", **kw)
-    unfused = ops.sdrns_matmul(jnp.asarray(a), jnp.asarray(b),
-                               backend="ref", **kw)
+    fused = _sdrns_matmul(a, b, P21, 7, backend="interpret")
+    unfused = _sdrns_matmul(a, b, P21, 7, backend="ref")
     np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
 
 
 def test_generic_moduli_rejected():
     with pytest.raises(ValueError):
-        ops.sdrns_matmul(jnp.zeros((4, 4), jnp.int32),
-                         jnp.zeros((4, 4), jnp.int32),
-                         mset=ModuliSet.make((121, 125)),
-                         max_abs_a=1, max_abs_b=1, backend="interpret")
+        _sdrns_matmul(jnp.zeros((4, 4), jnp.int32),
+                      jnp.zeros((4, 4), jnp.int32),
+                      ModuliSet.make((121, 125)), 1)
 
 
 def test_backend_registry_auto_selects_off_tpu():
-    assert ops.resolve_backend(None) == (
+    assert nx.resolve_backend(None) == (
         "pallas" if jax.default_backend() == "tpu" else "interpret")
-    assert ops.resolve_backend("ref") == "ref"
+    assert nx.resolve_backend("ref") == "ref"
     with pytest.raises(ValueError):
-        ops.resolve_backend("mosaic")
+        nx.resolve_backend("mosaic")
     # both matmul ops are registered under every backend
     for op in ("rns_matmul", "sdrns_matmul"):
-        for b in ops.BACKENDS:
-            assert callable(ops.get_impl(op, b))
+        for b in nx.BACKENDS:
+            assert callable(nx.get_impl(op, b))
 
 
 def test_dense_sdrns_backend_close_to_bns():
@@ -132,14 +132,14 @@ def test_dense_sdrns_backend_close_to_bns():
     key = jax.random.PRNGKey(0)
     params = init_dense(key, 24, 16)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 24))
-    y_bns = dense(params, x, backend="bns", compute_dtype=jnp.float32)
-    y_sd = dense(params, x, backend="sdrns", bits=4,
+    y_bns = dense(params, x, system="bns", compute_dtype=jnp.float32)
+    y_sd = dense(params, x, system="sdrns", bits=4,
                  compute_dtype=jnp.float32)
     err = float(jnp.max(jnp.abs(y_sd - y_bns)))
     scale = float(jnp.max(jnp.abs(y_bns))) + 1e-6
     assert err < 0.35 * scale + 0.15
     # and the integer core is *exactly* the rns path's integer result
-    y_rns = dense(params, x, backend="rns", bits=4,
+    y_rns = dense(params, x, system="rns", bits=4,
                   compute_dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(y_sd), np.asarray(y_rns),
                                rtol=1e-6, atol=1e-6)
@@ -150,7 +150,7 @@ def test_dense_sdrns_grad_is_straight_through():
     x = jax.random.normal(jax.random.PRNGKey(3), (4, 8))
 
     def loss(w, x):
-        return jnp.sum(dense({"w": w}, x, backend="sdrns",
+        return jnp.sum(dense({"w": w}, x, system="sdrns",
                              compute_dtype=jnp.float32) ** 2)
 
     g = jax.grad(loss)(params["w"], x)

@@ -14,7 +14,7 @@ from repro.models.ssm import (Mamba2Dims, init_mamba2, init_ssm_cache,
                               mamba2_decode, mamba2_forward)
 
 DIMS = Mamba2Dims(d_model=32, d_state=16, d_conv=4, expand=2, headdim=16)
-F32 = {"backend": "bns", "compute_dtype": "float32"}
+F32 = {"system": "bns", "compute_dtype": "float32"}
 
 
 @pytest.fixture(scope="module")

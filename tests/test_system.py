@@ -52,11 +52,13 @@ def test_train_checkpoint_serve_roundtrip(tmp_path):
 
 
 def test_rns_backend_through_model_layer():
-    """backend="rns" forward agrees with bns up to int4 quantization error,
-    and the quantized matmul itself is exact integer arithmetic."""
+    """system="rns" forward agrees with bns up to int4 quantization error
+    (every weight matmul, the tied-embedding logits matmul included, is
+    quantized), and the quantized matmul itself is exact integer
+    arithmetic."""
     cfg = dataclasses.replace(_tiny_cfg(), n_layers=1)
-    m_bns = build_model(cfg, backend="bns")
-    m_rns = build_model(cfg, backend="rns", rns_impl="interpret")
+    m_bns = build_model(cfg, system="bns")
+    m_rns = build_model(cfg, system="rns", rns_impl="interpret")
     params = m_bns.init(jax.random.PRNGKey(0))
     toks = jnp.asarray(np.random.default_rng(0).integers(
         0, cfg.vocab, (2, 16)), jnp.int32)

@@ -1,0 +1,155 @@
+"""Sharded vs replicated residue-resident decode on the test mesh.
+
+The tentpole property of mesh-sharded residue planes is *structural* —
+prepared :class:`~repro.numerics.ResidueTensor` trees shard natively
+(typed ``param_specs`` traversal), the runners ``shard_map`` the kernels
+column-parallel over the mesh, and outputs stay bit-identical — and that
+is pinned by tests/test_sharded_residency.py.  This bench records the
+*timing* side on the forced-host-device test mesh: one jitted decode step
+of a small rns model with
+
+* **replicated** prepared planes (no shard context — the pre-PR state:
+  residue-resident weights fell off the mesh path entirely), vs
+* **sharded** planes (ShardCtx installed at prepare + trace time: planes
+  TP-sharded on the output dim, runners shard_mapped).
+
+Host "devices" are threads on one CPU, so the delta is NOT a TPU speedup
+claim — it is a regression canary for the sharded path's overhead and a
+record of the per-device plane-bytes shrink (which *is* the production
+point: every model axis doubling halves resident plane bytes per chip).
+
+Run:  PYTHONPATH=src python benchmarks/sharding_bench.py [--smoke]
+Writes BENCH_sharding[_smoke].json for the CI artifact trail.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config                      # noqa: E402
+from repro.launch.mesh import make_ctx, make_test_mesh    # noqa: E402
+from repro.models.api import build_model                  # noqa: E402
+from repro.parallel.sharding import shard_ctx             # noqa: E402
+
+
+def _plane_bytes_dev(params) -> int:
+    """Per-device bytes of ResidueTensor plane/scale leaves (max shard)."""
+    from repro.numerics import ResidueTensor
+
+    total = 0
+    nodes = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, ResidueTensor))
+    for node in nodes:
+        if not isinstance(node, ResidueTensor):
+            continue
+        for arr in (node.planes, node.scale):
+            if arr is None:
+                continue
+            shards = getattr(arr, "addressable_shards", None)
+            if shards:
+                total += max(s.data.nbytes for s in shards)
+            else:
+                total += arr.nbytes
+    return total
+
+
+def _decode_ms(model, params, *, ctx, batch, steps, reps) -> float:
+    """Min-of-reps wall time per jitted decode step."""
+
+    def trace_and_run():
+        with shard_ctx(ctx):
+            dec = jax.jit(model.decode)
+            cache = model.init_cache(batch, 16)
+            tok = jnp.zeros((batch, 1), jnp.int32)
+            logits, cache = dec(params, tok, cache, jnp.int32(1))  # compile
+            t0 = time.perf_counter()
+            for i in range(steps):
+                logits, cache = dec(params, tok, cache, jnp.int32(2 + i))
+            logits.block_until_ready()
+        return (time.perf_counter() - t0) / steps
+
+    trace_and_run()  # warmup
+    return float(min(trace_and_run() for _ in range(reps))) * 1e3
+
+
+def run(*, smoke: bool = False, verbose: bool = True) -> dict:
+    if smoke:
+        dims = dict(d_model=64, d_ff=128, n_layers=1, steps=8, reps=3)
+    else:
+        dims = dict(d_model=256, d_ff=512, n_layers=2, steps=16, reps=5)
+    cfg = dataclasses.replace(
+        get_config("yi-6b").reduced(),
+        n_layers=dims["n_layers"], d_model=dims["d_model"],
+        d_ff=dims["d_ff"], n_heads=2, n_kv=1,
+        head_dim=dims["d_model"] // 2, vocab=64, compute_dtype="float32")
+    model = build_model(cfg, system="rns", rns_impl="interpret")
+    raw = model.init(jax.random.PRNGKey(0))
+    B = 8
+
+    mesh = make_test_mesh((2, 2))
+    ctx = make_ctx(mesh)
+
+    params_rep = model.prepare_params(raw)           # no ctx: replicated
+    with shard_ctx(ctx):
+        params_sh = model.prepare_params(raw)        # NamedShardings attached
+
+    ms_rep = _decode_ms(model, params_rep, ctx=None, batch=B,
+                        steps=dims["steps"], reps=dims["reps"])
+    ms_sh = _decode_ms(model, params_sh, ctx=ctx, batch=B,
+                       steps=dims["steps"], reps=dims["reps"])
+    out = {
+        "smoke": smoke,
+        "mesh": "2x2 forced-host-device",
+        "system": "rns",
+        "batch": B,
+        **{k: dims[k] for k in ("d_model", "d_ff", "n_layers", "steps")},
+        "decode_ms_replicated": ms_rep,
+        "decode_ms_sharded": ms_sh,
+        "ratio_sharded_over_replicated": ms_sh / ms_rep,
+        "plane_bytes_dev_replicated": _plane_bytes_dev(params_rep),
+        "plane_bytes_dev_sharded": _plane_bytes_dev(params_sh),
+    }
+    if verbose:
+        print(f"[sharding_bench] rns decode (B={B}, L={dims['n_layers']}, "
+              f"d={dims['d_model']}, interpret kernels, 2x2 host mesh) "
+              "[informational — host devices share one CPU]:")
+        print(f"  replicated planes : {ms_rep:8.2f} ms/token "
+              f"({out['plane_bytes_dev_replicated']} B/dev)")
+        print(f"  sharded planes    : {ms_sh:8.2f} ms/token "
+              f"({out['plane_bytes_dev_sharded']} B/dev)")
+        print(f"  ratio             : {out['ratio_sharded_over_replicated']:.3f}x")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for the CI artifact trail")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke)
+    path = args.json or ("BENCH_sharding_smoke.json" if args.smoke
+                         else "BENCH_sharding.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[sharding_bench] wrote {path}")
+    # gate: the sharded prepared tree must actually be sharded
+    if out["plane_bytes_dev_sharded"] >= out["plane_bytes_dev_replicated"]:
+        print("[sharding_bench] FAIL: sharded prepared tree is not smaller "
+              "per device than the replicated one")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,9 +10,13 @@ one device, so the flag lives here and only here.
 
 Per cell this driver:
   1. builds the model + step function (train_step for train_4k,
-     prefill/decode steps for the serving shapes);
+     prefill/decode steps for the serving shapes); under --system rns /
+     sdrns the serving cells consume *residue-resident* parameter trees
+     (ResidueTensor leaves from prepare_params) with sharded digit /
+     residue planes (--channel-shard selects the C-split layout);
   2. derives parameter / optimizer / cache / batch shardings from
-     parallel/sharding.py rules;
+     parallel/sharding.py rules (typed traversal over ResidueTensor
+     leaves);
   3. ``jax.jit(step, in_shardings=..., out_shardings=...).lower(...)
      .compile()`` under the production mesh;
   4. records memory_analysis / cost_analysis / parsed collective bytes to a
@@ -36,6 +40,7 @@ def _cell_filename(arch, shape, mesh_name, system, tag):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
              system: str = "bns", seq_shard: bool = False,
+             channel_shard: bool = False, reduced: bool = False,
              out_dir: str = "experiments/dryrun", tag: str = "",
              save_hlo: bool = False) -> dict:
     # imports deferred: jax must init with the forced device count
@@ -54,17 +59,23 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     from repro.train.optimizer import OptConfig, init_opt_state
 
     cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()  # CI smoke: tiny dims, same mesh + rule set
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "multi" if multi_pod else "single"
-    ctx = make_ctx(mesh, seq_shard=seq_shard)
+    ctx = make_ctx(mesh, seq_shard=seq_shard, channel_shard=channel_shard)
     # dry-run lowers on CPU for cost analysis: pin the pure-jnp ref
     # oracle (same flop/byte structure as the kernel) rather than letting
-    # the registry auto-select the Pallas interpreter off-TPU.  sdrns is
-    # deliberately unsupported here: its digit-level ref materializes an
-    # O(M*K*N*n^2) intermediate, which makes the cost numbers meaningless.
+    # the registry auto-select the Pallas interpreter off-TPU.  sdrns
+    # compiles through the "cost" backend — exact decoded values with the
+    # fused kernel's useful-work envelope; the digit-bit-exact ref would
+    # materialize an O(M*K*N*n^2) intermediate, unlowerable at these
+    # shapes and meaningless for cost numbers.
     model = build_model(cfg, system=system,
-                        rns_impl="ref" if system == "rns" else None)
+                        rns_impl={"bns": None, "rns": "ref",
+                                  "sdrns": "cost"}[system])
+    prepare = system in ("rns", "sdrns") and shape.kind != "train"
 
     def shardings(spec_tree):
         return jax.tree_util.tree_map(
@@ -74,6 +85,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     t0 = time.time()
     with shard_ctx(ctx):
         params_shape = jax.eval_shape(model.init, jax.random.key(0))
+        if prepare:
+            # residue-resident serving cells: the step consumes a prepared
+            # tree (ResidueTensor leaves).  param_specs traverses the typed
+            # leaves, so psh matches the prepared treedef — sharded residue
+            # planes ride in_shardings like every raw-array param.
+            params_shape = jax.eval_shape(model.prepare_params, params_shape)
         pspecs = param_specs(params_shape, ctx)
         psh = shardings(pspecs)
         batch_struct = model.input_specs(shape)
@@ -189,6 +206,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
         "system": system, "tag": tag,
         "n_devices": mesh.size,
         "seq_shard": seq_shard,
+        "channel_shard": channel_shard,
+        "reduced": reduced,
+        "residue_resident": prepare,
         "params_total": counts["total"],
         "params_active": counts["active"],
         "model_flops_total": model_flops_total(cfg, shape),
@@ -220,9 +240,17 @@ def main(argv=None):
     ap.add_argument("--shape")
     ap.add_argument("--mesh", choices=("single", "multi"), default="single")
     ap.add_argument("--system", "--backend", dest="system", default="bns",
-                    choices=("bns", "rns"),
-                    help="number system (--backend is a deprecated alias)")
+                    choices=("bns", "rns", "sdrns"),
+                    help="number system (--backend is a deprecated alias); "
+                         "rns/sdrns serving cells compile with "
+                         "residue-resident (ResidueTensor-leaf) params")
     ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--channel-shard", action="store_true",
+                    help="C-split residue-plane layout (moduli channels "
+                         "over the model axis, N replicated)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced() arch dims — CI smoke cells on the "
+                         "full production mesh")
     ap.add_argument("--tag", default="")
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--out-dir", default="experiments/dryrun")
@@ -254,6 +282,10 @@ def main(argv=None):
                    "--system", args.system, "--out-dir", args.out_dir]
             if args.seq_shard:
                 cmd.append("--seq-shard")
+            if args.channel_shard:
+                cmd.append("--channel-shard")
+            if args.reduced:
+                cmd.append("--reduced")
             if args.tag:
                 cmd += ["--tag", args.tag]
             print(f"[dryrun] {arch} x {shape} x {mesh_name} ...", flush=True)
@@ -268,6 +300,8 @@ def main(argv=None):
     try:
         rec = run_cell(args.arch, args.shape, args.mesh == "multi",
                        system=args.system, seq_shard=args.seq_shard,
+                       channel_shard=args.channel_shard,
+                       reduced=args.reduced,
                        out_dir=args.out_dir, tag=args.tag,
                        save_hlo=args.save_hlo)
     except Exception:

@@ -33,10 +33,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return Mesh(devs, axes)
 
 
-def make_ctx(mesh: Mesh, *, seq_shard: bool = False) -> ShardCtx:
-    """ShardCtx with dp = every non-"model" axis (pod folds into dp)."""
+def make_ctx(mesh: Mesh, *, seq_shard: bool = False,
+             channel_shard: bool = False) -> ShardCtx:
+    """ShardCtx with dp = every non-"model" axis (pod folds into dp).
+
+    ``channel_shard`` selects the C-split residue-plane layout for
+    ResidueTensor leaves (see parallel/sharding.py); subject to the usual
+    divisibility fallback (C % model-axis != 0 replicates the channels).
+    """
     dp = tuple(a for a in mesh.axis_names if a != "model")
-    return ShardCtx(mesh, dp=dp, tp=("model",), seq_shard=seq_shard)
+    return ShardCtx(mesh, dp=dp, tp=("model",), seq_shard=seq_shard,
+                    channel_shard=channel_shard)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:

@@ -41,6 +41,7 @@ from repro.models import transformer as tf_mod
 from repro.models.attention import KVCache
 from repro.models.ssm import SsmCache
 from repro.numerics import ResidueTensor
+from repro.parallel.sharding import get_shard_ctx, shard_params
 from repro.quant import residency
 
 __all__ = ["Model", "build_model", "cross_entropy"]
@@ -134,32 +135,43 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
         *skipped*: it is consumed by a raw f32 einsum (routing stays
         float by design).  Prepared trees are inference-only — use them
         for prefill/decode, not ``loss``.
+
+        When a :class:`~repro.parallel.sharding.ShardCtx` is installed,
+        the prepared tree comes out with ``NamedSharding``\\ s attached:
+        every leaf — ResidueTensor planes/scale included — is placed onto
+        the name-based ``param_specs`` rules (typed traversal), so the
+        serving engine and the dry-run consume mesh-resident residue
+        planes directly.  ``ctx.channel_shard`` selects the C-split plane
+        layout.
         """
         if system == "bns":
             return params
 
-        def prep(w):
-            return residency.prepare_weight(w, system=system, bits=rns_bits)
+        kw = dict(system=system, bits=rns_bits, roles=False)
 
         def walk(node, name=None):
             if isinstance(node, dict):
                 if set(node) == {"w"} and name != "router":
-                    return residency.prepare_dense(
-                        node, system=system, bits=rns_bits)
+                    return residency.prepare_dense(node, **kw)
                 out = {k: walk(v, k) for k, v in node.items()}
                 # tied-embedding logits matmul (transformer.py _logits);
                 # the float table stays for the embedding gather
                 if (name == "embed" and "table" in out
                         and not is_encdec and "logits_w" not in out):
-                    out["logits_w"] = prep(
-                        out["table"].astype(jnp.float32).T)
+                    out["logits_w"] = residency.prepare_weight(
+                        out["table"].astype(jnp.float32).T, **kw)
                 return out
             if (name in ("w_gate", "w_up", "w_down")
                     and not isinstance(node, ResidueTensor)):
-                return prep(node)  # MoE expert stacks (bare array leaves)
+                # MoE expert stacks (bare array leaves)
+                return residency.prepare_weight(node, **kw)
             return node
 
-        return walk(params, name="params")
+        prepared = walk(params, name="params")
+        ctx = get_shard_ctx()
+        if ctx is not None:
+            prepared = shard_params(prepared, ctx)
+        return prepared
 
     # -- serving -------------------------------------------------------------
     def init_cache(batch: int, s_max: int, dtype=jnp.bfloat16):

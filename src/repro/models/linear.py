@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from repro import numerics as nx
 from repro.core.moduli import P21, ModuliSet
 from repro.numerics import ResidueTensor
+from repro.parallel.sharding import constrain_any
 from repro.quant import residency
 from repro.quant.quant import qmax_for_bits, quantize_symmetric
 
@@ -233,11 +234,22 @@ def _check_resident(w: ResidueTensor, bits, mset, system, *,
 
 
 def _qmatmul_resident(x, w: ResidueTensor, bits, impl):
-    """x: (M, K) float, w: prepared ResidueTensor -> (M, N) float."""
+    """x: (M, K) float, w: prepared ResidueTensor -> (M, N) float.
+
+    Under a shard context the residue-domain hot path is mesh-aware: the
+    quantized activation rides the batch (dp) axes into the runner — which
+    may itself ``shard_map`` the kernel over the mesh (numerics/runners) —
+    and the exact int32 accumulator comes back (dp, tp)-sharded like every
+    other column-parallel matmul output.  ``constrain_any`` keeps the
+    divisibility fallback: a non-dividing request leaves the tensor free
+    rather than pinning it to replication.
+    """
     qmax = qmax_for_bits(bits)
     qx, sx = quantize_symmetric(x, bits, axis=-1)      # per-token scales
+    qx = constrain_any(qx, ("dp", None))
     residency.record("weight_reuse")
     acc = nx.matmul(qx, w, max_abs_a=qmax, backend=impl)
+    acc = constrain_any(acc, ("dp", "tp"))
     return acc.astype(jnp.float32) * sx * w.scale
 
 

@@ -14,6 +14,12 @@ Sharding: expert buffers shard tokens (C) over "data" and the stacked expert
 weights over ("model" on experts when E % axis == 0 — moonshot's 64 — else
 "model" on d_ff inside each expert — grok's 8); see parallel/sharding.py.
 The scatter/gather pair lowers to all-to-alls under SPMD — the EP dispatch.
+Residue-resident expert stacks inherit the same rules through the typed
+``param_specs`` traversal (the name rules fire on the ResidueTensor's
+represented (E, d_in, d_out) value and land on its plane/scale leaves);
+the stacked einsum stays on the XLA-partitioned path — the EP layout owns
+its collectives, so the runners' shard_map fast path applies only to the
+2-D dense matmuls.
 
 Load-balance aux loss is the standard switch-transformer form
 ``E * sum_e f_e * p_e``.

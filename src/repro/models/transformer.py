@@ -447,6 +447,7 @@ def lm_decode(
     dense_kw = dense_kw or {}
     compute_dtype = jnp.dtype(cfg.compute_dtype)
     x = params["embed"]["table"].astype(compute_dtype)[token]  # (B, 1, d)
+    x = constrain(x, "dp", None, None)
     akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
                qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
                dense_kw=dense_kw, apply_rope=not cfg.is_encdec)

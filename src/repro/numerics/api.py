@@ -124,17 +124,23 @@ def _bounds(t: ResidueTensor, max_abs_a: int | None) -> tuple[int, int]:
 
 
 def _matmul_planes(a: jax.Array, t: ResidueTensor, max_abs_a: int | None,
-                   backend: str | None) -> jax.Array:
+                   backend: str | None, shard=None) -> jax.Array:
     maa, mab = _bounds(t, max_abs_a)
     if t.layout == "rns":
         return runners.rns_run(a, t.planes, mset=t.mset, max_abs_a=maa,
-                               max_abs_b=mab, backend=backend)
+                               max_abs_b=mab, backend=backend, shard=shard)
     return runners.sdrns_run(a, t.planes, mset=t.mset, max_abs_a=maa,
                              max_abs_b=mab, backend=backend,
-                             force_matvec=t.layout == "sd_matvec")
+                             force_matvec=t.layout == "sd_matvec",
+                             shard=shard)
 
 
-@functools.partial(jax.jit, static_argnames=("max_abs_a", "backend"))
+@functools.partial(jax.jit,
+                   static_argnames=("max_abs_a", "backend", "shard"))
+def _matmul_jit(a, t, max_abs_a, backend, shard):
+    return _matmul_planes(a, t, max_abs_a, backend, shard)
+
+
 def matmul(a: jax.Array, t: ResidueTensor, *, max_abs_a: int | None = None,
            backend: str | None = None) -> jax.Array:
     """Exact integer matmul of an (M, K) activation against encoded planes.
@@ -144,6 +150,13 @@ def matmul(a: jax.Array, t: ResidueTensor, *, max_abs_a: int | None = None,
     decode shapes (M <= DECODE_M) auto-routed to the matvec schedule;
     sd_matvec -> matvec schedule pinned.  Only ``a`` is forward-converted
     per call — the planes are consumed as-is (the residency economy).
+
+    Under an installed :class:`~repro.parallel.sharding.ShardCtx` the
+    runner is ``shard_map``-ped over the mesh (rows over dp, plane columns
+    over tp — per-shard kernels, no collectives, bit-identical output).
+    The plan is resolved *here*, outside the jitted body, and passed down
+    as a static — traces key on it, so context changes can never be
+    shadowed by a stale jit cache.
 
     Args:
       a: (M, K) integer tensor, |a| <= max_abs_a.
@@ -165,7 +178,8 @@ def matmul(a: jax.Array, t: ResidueTensor, *, max_abs_a: int | None = None,
             f"{t.shape}; use numerics.einsum for stacked operands")
     if a.ndim != 2:
         raise ValueError(f"matmul takes a 2-D activation, got {a.shape}")
-    return _matmul_planes(a, t, max_abs_a, backend)
+    shard = runners.tp_shard_plan(a.shape[0], t.shape[-1])
+    return _matmul_jit(a, t, max_abs_a, backend, shard)
 
 
 def _parse_stacked(subscripts: str) -> int:

@@ -7,7 +7,12 @@ Every numerics op (``rns_matmul``, ``sdrns_matmul``, ``sdrns_matvec``,
 * ``"interpret"`` — the same kernel body in the Pallas interpreter (CPU
   correctness tests and CI containers);
 * ``"ref"``       — pure-jnp oracle with the same flop/byte structure
-  (CPU dry-run compilation / roofline).
+  (CPU dry-run compilation / roofline);
+* ``"cost"``      — compile/cost-analysis oracle: exact *decoded* values
+  with the kernel's useful-work envelope, where the bit-exact ref is
+  unlowerable at production shapes (the sdrns digit ref's O(n^2)
+  partial-product stack).  Used by ``launch/dryrun.py``; never the
+  default.
 
 ``backend=None`` auto-selects by platform (``pallas`` on TPU, ``interpret``
 elsewhere).  This axis — *which implementation runs the kernel* — is
@@ -27,7 +32,7 @@ from repro.kernels import compat
 
 __all__ = ["BACKENDS", "resolve_backend", "register_impl", "get_impl"]
 
-BACKENDS = ("pallas", "interpret", "ref")
+BACKENDS = ("pallas", "interpret", "ref", "cost")
 
 _REGISTRY: dict[str, dict[str, Callable]] = {}
 

@@ -17,16 +17,35 @@ elementwise, so encode-then-slice equals slice-then-encode — the property
 that keeps residue-resident weights bit-identical to convert-per-call.
 
 Kernel implementations are registered here against the backend registry
-(``numerics/registry.py``): pallas / interpret / ref per op.
+(``numerics/registry.py``): pallas / interpret / ref / cost per op.
+
+Mesh composition
+----------------
+:func:`tp_shard_plan` turns the installed
+:class:`~repro.parallel.sharding.ShardCtx` into a *static* shard-map plan
+``(mesh, dp_names, tp_names)``; with a plan, :func:`rns_run` /
+:func:`sdrns_run` wrap their whole body in ``kernels/compat.shard_map`` —
+activations row-sharded over ``dp``, pre-encoded planes column-sharded
+over ``tp`` on the output dim, output ``(dp, tp)``-sharded.  Column
+slices of the integer matmul are independent, so each shard runs the
+unchanged per-shard Pallas kernel with **zero collectives** and the
+result is bit-identical to the single-device path.  The plan is passed
+down as a jit static (``numerics/api.py``), never read inside a traced
+body — a context installed after a trace was cached can therefore never
+be silently ignored.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import sd, sdrns
 from repro.core.moduli import ModuliSet
+from repro.kernels import compat
 from repro.kernels.rns_matmul import rns_matmul_pallas
 from repro.kernels.sd_add import sd_add_pallas
 from repro.kernels.sdrns_matmul import (
@@ -44,7 +63,50 @@ __all__ = [
     "rns_run",
     "sdrns_run",
     "sd_add_run",
+    "tp_shard_plan",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Mesh composition: static shard-map plans for the matmul/matvec runners.
+# ---------------------------------------------------------------------------
+
+
+def tp_shard_plan(M: int, N: int):
+    """Shard-map plan from the installed ShardCtx, or ``None``.
+
+    Returns ``(mesh, dp_names, tp_names)``, all hashable — the plan is a
+    jit *static*, so traces key on it.  ``None`` (single-device path)
+    when: no context is installed; the tp axes do not divide ``N``; or the
+    ``channel_shard`` layout is active — C-split planes need cross-channel
+    reconstruction, which the XLA-partitioned path handles (it inserts
+    the channel all-gather), so they do not take the shard_map fast path.
+    ``dp_names`` is ``()`` when ``M`` is not divisible (activation rows
+    then run replicated inside the map).
+    """
+    from repro.parallel.sharding import get_shard_ctx
+
+    ctx = get_shard_ctx()
+    if ctx is None or ctx.channel_shard:
+        return None
+    tp = ctx.resolve("tp")
+    if not tp or ctx.axis_size(tp) <= 1 or N % ctx.axis_size(tp):
+        return None
+    dp = ctx.resolve("dp")
+    if not dp or M % ctx.axis_size(dp):
+        dp = ()
+    return (ctx.mesh, dp, tp)
+
+
+def _shard_mapped(body, shard, *, sd_planes: bool):
+    """Wrap a 2-operand runner body in the plan's shard_map."""
+    mesh, dp, tp = shard
+    b_spec = P(None, None, tp, None) if sd_planes else P(None, None, tp)
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp or None, None), b_spec),
+        out_specs=P(dp or None, tp),
+        check_vma=False)
 
 
 def _round_up(v: int, k: int) -> int:
@@ -115,13 +177,22 @@ def encode_rns_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
     return jnp.moveaxis(res, 0, -3).astype(_res_dtype(mset))
 
 
-def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend):
+def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend, shard=None):
     """Shared runner: activation conversion + segmentation + kernel dispatch.
 
     ``b_res``: (C, K, N) pre-encoded centered residue planes.  Every public
     surface (typed ``numerics.matmul`` and the deprecated entry points)
     lands here, so outputs are bit-identical by construction.
+
+    ``shard``: a :func:`tp_shard_plan` — maps this whole body over the
+    mesh (rows over dp, plane columns over tp; per-shard kernels, no
+    collectives).  Column slices of the exact integer matmul commute with
+    the kernel, so sharded output == single-device output bit-for-bit.
     """
+    if shard is not None:
+        body = functools.partial(rns_run, mset=mset, max_abs_a=max_abs_a,
+                                 max_abs_b=max_abs_b, backend=backend)
+        return _shard_mapped(body, shard, sd_planes=False)(a, b_res)
     impl = get_impl("rns_matmul", backend)
     M, K = a.shape
     C, K2, N = b_res.shape
@@ -225,6 +296,29 @@ register_impl(
 register_impl("sdrns_matvec", "ref", _sdrns_matmul_ref_impl)
 
 
+def _sdrns_matmul_cost_impl(ad, bd, mset, bm, bn):
+    """Dry-run cost oracle for the fused SD kernel.
+
+    The exact digit-level ref materializes an O(M*K*N*n^2) partial-product
+    stack — meaningless cost numbers and unlowerable at production shapes.
+    This backend computes the same *decoded* result with the kernel's
+    useful-work envelope (C channel-wise int32 matmuls + digit recode):
+    digit planes -> residues -> matmul -> centered residues -> digits.
+    Decoded values are exact; the digit *vectors* are canonical rather than
+    kernel-identical, so this backend exists for compile/cost analysis
+    (launch/dryrun.py), not for bit-exactness tests.
+    """
+    a_res = sd.to_int(ad)                                # (C, M, K) int32
+    b_res = sd.to_int(bd)
+    acc = jnp.einsum("cmk,ckn->cmn", a_res, b_res)
+    return sd.from_int(mset.center(acc), bd.shape[-1])
+
+
+register_impl("rns_matmul", "cost", _rns_matmul_ref_impl)
+register_impl("sdrns_matmul", "cost", _sdrns_matmul_cost_impl)
+register_impl("sdrns_matvec", "cost", _sdrns_matmul_cost_impl)
+
+
 def encode_sd_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
     """Integer values (..., K, N) -> SD digit planes (..., C, K, N, n) int8.
 
@@ -239,14 +333,23 @@ def encode_sd_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
 
 
 def sdrns_run(a, b_dig, *, mset, max_abs_a, max_abs_b, backend,
-              force_matvec=False):
+              force_matvec=False, shard=None):
     """Shared runner over pre-encoded B digit planes.
 
     Routes decode shapes (M <= DECODE_M, or ``force_matvec`` — the
     ``sd_matvec`` layout tag) to the matvec schedule; every public surface
     lands here with identical segmentation and tiling, so digit outputs are
     bit-identical across them.
+
+    ``shard``: a :func:`tp_shard_plan` — shard_maps this body over the
+    mesh (see :func:`rns_run`); the matvec schedule composes the same way
+    (its grid is (C, N/bn), so column-sharding N just shortens the grid).
     """
+    if shard is not None:
+        body = functools.partial(sdrns_run, mset=mset, max_abs_a=max_abs_a,
+                                 max_abs_b=max_abs_b, backend=backend,
+                                 force_matvec=force_matvec)
+        return _shard_mapped(body, shard, sd_planes=True)(a, b_dig)
     n = _sdrns_digit_width(mset)
     M, K = a.shape
     C, K2, N, n2 = b_dig.shape

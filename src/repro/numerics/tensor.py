@@ -146,6 +146,70 @@ class ResidueTensor:
                 f"qbits={self.qbits}, max_abs={self.max_abs}, "
                 f"scale={'yes' if self.scale is not None else 'no'})")
 
+    # -- sharding --------------------------------------------------------------
+    def leaf_roles(self, value_roles, *, channel_role=None):
+        """Per-leaf sharding roles from roles of the represented value.
+
+        This is the typed hook ``parallel/sharding.py`` traverses: a rule
+        written against the *value* shape ``(*stack, K, N)`` — e.g. the
+        name-based FSDP/TP parameter rules — maps onto the physical leaves
+        of the tensor:
+
+        * ``planes`` ``(*stack, C, K, N[, n])``: stack and K/N roles pass
+          through around the moduli-channel axis, which takes
+          ``channel_role`` (``None`` = replicated channels, the default;
+          ``"tp"`` = the *channel-shard* layout, the paper's
+          channel-parallelism mapped onto the mesh).  The SD digit axis is
+          never sharded (it is the innermost arithmetic axis).
+        * ``scale`` (broadcastable against ``(*stack, K, N)``): value roles
+          aligned from the right, with size-1 broadcast dims replicated.
+
+        In the channel-shard layout the channel role is stripped from every
+        other dim — a mesh axis may appear only once in a PartitionSpec, so
+        C and N cannot both ride the tensor axes (the two layouts are
+        alternatives); roles on *other* mesh axes (dp FSDP on K, or dp on N
+        for row-parallel weights) survive.
+
+        ``value_roles``: sequence of length ``len(self.shape)``.
+        Returns ``(planes_roles, scale_roles)`` — tuples (``scale_roles``
+        is ``None`` when the tensor carries no scale), ordered like
+        ``tree_flatten``'s children.
+        """
+        roles = list(value_roles)
+        if len(roles) != len(self.shape):
+            raise ValueError(
+                f"{len(roles)} value roles for represented shape "
+                f"{self.shape} (want {len(self.shape)})")
+        stack_roles = tuple(roles[:-2])
+        k_role, n_role = roles[-2], roles[-1]
+        if channel_role is not None:
+            # a mesh axis may appear only once per spec: the channel axis
+            # takes it, so strip the same role from EVERY other dim (the
+            # EP expert-stack axis included); roles on other axes (dp
+            # FSDP on K, or on N for row-parallel weights) survive
+            def drop(r):
+                if r == channel_role:
+                    return None
+                if isinstance(r, (tuple, list)):
+                    kept = tuple(x for x in r if x != channel_role)
+                    return kept or None
+                return r
+
+            stack_roles = tuple(drop(r) for r in stack_roles)
+            k_role, n_role = drop(k_role), drop(n_role)
+        planes_roles = stack_roles + (channel_role, k_role, n_role)
+        if self.is_sd:
+            planes_roles += (None,)
+        if self.scale is None:
+            return planes_roles, None
+        vroles = stack_roles + (k_role, n_role)
+        sshape = tuple(self.scale.shape)
+        offset = len(vroles) - len(sshape)
+        scale_roles = tuple(
+            None if dim == 1 or i + offset < 0 else vroles[i + offset]
+            for i, dim in enumerate(sshape))
+        return planes_roles, scale_roles
+
     # -- internal helpers ------------------------------------------------------
     def _with_planes(self, planes: jax.Array) -> "ResidueTensor":
         return dataclasses.replace(self, planes=planes)

@@ -14,9 +14,19 @@ Three pieces:
 * :func:`param_specs` — name-based PartitionSpec rules for parameter pytrees
   (FSDP over ``dp`` on the non-TP dim, TP over ``tp`` on heads/ffn/vocab/
   experts), applied to shape pytrees (works on ShapeDtypeStructs — no
-  allocation, dry-run safe).
+  allocation, dry-run safe).  The traversal is *typed*: a
+  :class:`~repro.numerics.ResidueTensor` node is handled as one logical
+  leaf — its name-based value roles are mapped onto the physical planes /
+  scale leaves through ``ResidueTensor.leaf_roles``, so residue-resident
+  parameter trees shard natively (TP on the output dim of the digit and
+  residue planes; the moduli-channel ``C`` axis replicated, or split over
+  ``tp`` under the ``channel_shard`` layout knob on :class:`ShardCtx`).
 
 * :func:`batch_specs` — shardings for step inputs.
+
+* :func:`shard_params` / :func:`shard_residue_tensor` — place a (prepared)
+  tree onto its rule-derived ``NamedSharding``\\ s: ``device_put`` on
+  concrete arrays, ``with_sharding_constraint`` under a trace.
 
 Roles, not axis names, appear in model code so the same model runs on the
 single-pod ``("data", "model")`` mesh and the multi-pod
@@ -45,7 +55,18 @@ __all__ = [
     "logical_to_spec",
     "Roles",
     "specs_from_roles",
+    "residue_specs",
+    "shard_params",
+    "shard_residue_tensor",
 ]
+
+
+def _is_residue(x) -> bool:
+    """Typed-leaf predicate (lazy import: numerics pulls in the kernel
+    stack, and it imports this module for the shard context)."""
+    from repro.numerics.tensor import ResidueTensor
+
+    return isinstance(x, ResidueTensor)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +90,13 @@ class ShardCtx:
     dp: tuple[str, ...] = ("data",)   # batch / FSDP axes (pod folds in here)
     tp: tuple[str, ...] = ("model",)  # tensor axes
     seq_shard: bool = False           # SP: shard residual-stream seq over tp
+    # Residue-plane layout knob: split the moduli-channel C axis of
+    # ResidueTensor leaves over tp (the paper's channel-parallelism on the
+    # mesh) instead of the default TP-on-N layout.  Subject to the same
+    # divisibility fallback as every other axis: C % tp_size != 0 leaves
+    # the channels replicated (and N replicated too — the layouts are
+    # alternatives, see ResidueTensor.leaf_roles).
+    channel_shard: bool = False
 
     def axis_size(self, roles: Sequence[str] | str) -> int:
         names = self.resolve(roles)
@@ -243,6 +271,25 @@ def _leaf_roles(path_names: list[str], shape: tuple[int, ...],
     return wrap([None] * len(body))
 
 
+def residue_specs(t: Any, value_roles: Sequence, ctx: ShardCtx) -> Any:
+    """PartitionSpec pytree (matching ``t``'s treedef) for one
+    :class:`~repro.numerics.ResidueTensor`.
+
+    ``value_roles`` are roles for the *represented* ``(*stack, K, N)``
+    value; ``ResidueTensor.leaf_roles`` maps them onto the physical planes
+    and scale leaves (the C axis takes ``tp`` under ``ctx.channel_shard``).
+    Works on tensors whose leaves are ShapeDtypeStructs — dry-run safe.
+    """
+    channel_role = "tp" if ctx.channel_shard else None
+    planes_roles, scale_roles = t.leaf_roles(value_roles,
+                                             channel_role=channel_role)
+    leaves = [_fit_spec(ctx, tuple(t.planes.shape), planes_roles)]
+    if t.scale is not None:
+        leaves.append(_fit_spec(ctx, tuple(t.scale.shape), scale_roles))
+    treedef = jax.tree_util.tree_structure(t)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def param_specs(
     shapes: Any,
     ctx: ShardCtx,
@@ -253,7 +300,11 @@ def param_specs(
 ) -> Any:
     """PartitionSpec pytree matching a param(-shape) pytree.
 
-    ``shapes``: pytree of arrays or ShapeDtypeStructs.
+    ``shapes``: pytree of arrays or ShapeDtypeStructs.  ResidueTensor
+    nodes are typed leaves: the name rules fire on their represented value
+    shape and :func:`residue_specs` expands the result onto the planes /
+    scale leaves, so the returned tree has the *same treedef* as a
+    prepared tree (usable directly as jit in_shardings).
     ``expert_axis_ok``: force EP on/off; default = auto per-leaf
     (E % tp_size == 0).
     """
@@ -261,16 +312,19 @@ def param_specs(
 
     def rule(path, leaf):
         pn = _path_names(path)
-        shape = tuple(leaf.shape)
+        shape = tuple(leaf.shape)  # ResidueTensor: the represented value
         stacked = bool(pn) and pn[0] in stacked_prefixes and len(shape) >= 1
         ep = expert_axis_ok
         if ep is None:
             body = shape[1:] if stacked else shape
             ep = len(body) == 3 and body[0] % tp_size == 0
         roles = _leaf_roles(pn, shape, stacked=stacked, n_experts_tp=ep)
+        if _is_residue(leaf):
+            return residue_specs(leaf, roles, ctx)
         return _fit_spec(ctx, shape, roles)
 
-    return jax.tree_util.tree_map_with_path(rule, shapes)
+    return jax.tree_util.tree_map_with_path(rule, shapes,
+                                            is_leaf=_is_residue)
 
 
 def named_shardings(specs: Any, mesh: Mesh) -> Any:
@@ -289,6 +343,45 @@ def logical_to_spec(ctx: ShardCtx, shape: Sequence[int], roles: Sequence) -> P:
 
 
 def specs_from_roles(shapes: Any, roles: Any, ctx: ShardCtx) -> Any:
-    """PartitionSpec pytree from a shape pytree + a matching Roles pytree."""
-    return jax.tree_util.tree_map(
-        lambda s, r: _fit_spec(ctx, tuple(s.shape), r.roles), shapes, roles)
+    """PartitionSpec pytree from a shape pytree + a matching Roles pytree.
+
+    Typed traversal: a ResidueTensor node pairs with ONE :class:`Roles`
+    entry written against its represented value shape; the per-leaf
+    expansion happens in :func:`residue_specs`.
+    """
+
+    def one(s, r):
+        if _is_residue(s):
+            return residue_specs(s, r.roles, ctx)
+        return _fit_spec(ctx, tuple(s.shape), r.roles)
+
+    return jax.tree_util.tree_map(one, shapes, roles, is_leaf=_is_residue)
+
+
+def _place(x: jax.Array, sharding: NamedSharding) -> jax.Array:
+    # device_put moves concrete arrays eagerly and stages to a sharding
+    # constraint under a trace — one spelling for both prepare-time paths
+    return jax.device_put(x, sharding)
+
+
+def shard_residue_tensor(t: Any, value_roles: Sequence,
+                         ctx: ShardCtx) -> Any:
+    """Place one ResidueTensor's leaves onto their role-derived shardings.
+
+    ``device_put`` on concrete planes/scale, ``with_sharding_constraint``
+    under a trace — so :func:`repro.quant.residency.prepare_weight` can
+    attach shardings both eagerly (serving-engine construction) and while
+    lowering (dry-run).
+    """
+    specs = residue_specs(t, value_roles, ctx)
+    sh = named_shardings(specs, ctx.mesh)
+    return jax.tree_util.tree_map(_place, t, sh)
+
+
+def shard_params(params: Any, ctx: ShardCtx, **kw: Any) -> Any:
+    """Place a whole (possibly prepared) parameter tree onto the
+    :func:`param_specs` shardings.  ResidueTensor nodes come back as
+    ResidueTensors whose planes/scale carry ``NamedSharding``s."""
+    specs = param_specs(params, ctx, **kw)
+    sh = named_shardings(specs, ctx.mesh)
+    return jax.tree_util.tree_map(_place, params, sh)

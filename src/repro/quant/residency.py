@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from repro import numerics as nx
 from repro.core.moduli import P21, ModuliSet
 from repro.numerics import ResidueTensor
+from repro.parallel import sharding
 
 __all__ = [
     "SYSTEM_LAYOUT",
@@ -93,6 +94,7 @@ def prepare_weight(
     system: str,
     bits: int = 4,
     mset: ModuliSet = P21,
+    roles: Any | None = None,
 ) -> ResidueTensor:
     """Float weight (..., K, N) -> residue-resident :class:`ResidueTensor`.
 
@@ -103,6 +105,17 @@ def prepare_weight(
     path derives on every call, which is what makes the swap transparent.
 
     Leading axes of ``w`` (layer stacks, expert stacks) are preserved.
+
+    Sharding: when a :class:`~repro.parallel.sharding.ShardCtx` is
+    installed, the prepared planes/scale leaves are placed onto their
+    role-derived ``NamedSharding``\\ s.  ``roles`` are value roles for the
+    represented ``(*stack, K, N)`` shape; the default is the generic dense
+    rule (stack replicated, FSDP on K, TP on N).  Model-level preparation
+    (``models/api.py::prepare_params``) instead applies the *name-based*
+    rules tree-wide after the walk (passing ``roles=False`` here to skip
+    the per-weight placement), so per-weight roles matter only for direct
+    callers.  Sharding is bit-transparent: placement never changes plane
+    values, only their device layout.
     """
     if system not in SYSTEM_LAYOUT:
         raise ValueError(
@@ -125,7 +138,13 @@ def prepare_weight(
     if w.ndim < 2:
         raise ValueError(f"dense weight must be at least 2-D, got {w.shape}")
     spec = nx.EncodeSpec(layout=SYSTEM_LAYOUT[system], mset=mset, qbits=bits)
-    return nx.encode(w.astype(jnp.float32), spec)
+    t = nx.encode(w.astype(jnp.float32), spec)
+    ctx = sharding.get_shard_ctx()
+    if ctx is not None and roles is not False:
+        if roles is None:  # generic dense rule: FSDP on K, TP on N
+            roles = [None] * (w.ndim - 2) + ["dp", "tp"]
+        t = sharding.shard_residue_tensor(t, roles, ctx)
+    return t
 
 
 def prepare_dense(
@@ -134,10 +153,11 @@ def prepare_dense(
     system: str,
     bits: int = 4,
     mset: ModuliSet = P21,
+    roles: Any | None = None,
 ) -> dict[str, Any]:
     """``{"w": float}`` -> ``{"w": ResidueTensor}`` for ``system``."""
     return {"w": prepare_weight(params["w"], system=system, bits=bits,
-                                mset=mset)}
+                                mset=mset, roles=roles)}
 
 
 def prepared_kind(params: Any) -> str | None:

@@ -37,9 +37,9 @@ __all__ = ["ServingEngine", "GenerateResult"]
 
 @dataclasses.dataclass
 class GenerateResult:
-    tokens: np.ndarray          # (B, max_new) generated ids
-    prefill_logits: np.ndarray  # (B, vocab)
-    steps: int
+    tokens: np.ndarray          # (B, n_emitted) generated ids
+    prefill_logits: np.ndarray  # (B, vocab) — logits of the *prefill* pass
+    steps: int                  # decode steps actually executed
 
 
 class ServingEngine:
@@ -57,18 +57,29 @@ class ServingEngine:
         self.cache_dtype = cache_dtype
         self._prefill = jax.jit(model.prefill, static_argnames=("s_max",))
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
+        self.decode_steps = 0   # cumulative decode-step count (telemetry)
 
     def generate(self, batch_inputs: dict[str, Any], *, max_new: int,
                  prompt_len: int | None = None,
                  temperature: float = 0.0,
-                 key: jax.Array | None = None) -> GenerateResult:
-        """Prefill ``batch_inputs`` then decode ``max_new`` tokens.
+                 key: jax.Array | None = None,
+                 eos: int | np.ndarray | None = None,
+                 active: np.ndarray | None = None) -> GenerateResult:
+        """Prefill ``batch_inputs`` then decode up to ``max_new`` tokens.
 
         ``prompt_len``: position of the first generated token (defaults to
         the prompt length inferred from the inputs).
+
+        ``eos``: early-stop token — a scalar, or a per-slot ``(B,)`` array
+        (entries < 0 never match, for slots without an EOS).  Decoding
+        stops as soon as every *active* slot has emitted its EOS; slots
+        marked inactive in ``active`` (e.g. the scheduler's unfilled
+        padding slots) are treated as already finished.  Without ``eos``
+        the loop always runs the full ``max_new`` tokens.
         """
         logits, cache = self._prefill(self.params, batch_inputs,
                                       s_max=self.s_max)
+        prefill_logits = np.asarray(logits)   # before the decode loop
         if prompt_len is None:
             if "tokens" in batch_inputs:
                 prompt_len = batch_inputs["tokens"].shape[1]
@@ -76,16 +87,32 @@ class ServingEngine:
                     prompt_len += batch_inputs["patches"].shape[1]
             else:
                 prompt_len = 0
-        outs = []
         tok = self._sample(logits, temperature, key, 0)
+        B = tok.shape[0]
+        done = None
+        if eos is not None:
+            eos = np.broadcast_to(np.asarray(eos, np.int64), (B,))
+            done = np.zeros(B, bool) if active is None else \
+                ~np.asarray(active, bool)
+        outs = []
+        steps = 0
         for i in range(max_new):
-            outs.append(np.asarray(tok[:, 0]))
+            t_np = np.asarray(tok[:, 0])
+            outs.append(t_np)
+            if done is not None:
+                done = done | ((eos >= 0) & (t_np == eos))
+                if done.all():
+                    break   # every live slot has hit EOS — stop decoding
+            if i + 1 == max_new:
+                break       # last token emitted; no step needed for it
             pos = jnp.int32(prompt_len + i)
             logits, cache = self._decode(self.params, tok, cache, pos)
+            steps += 1
             tok = self._sample(logits, temperature, key, i + 1)
+        self.decode_steps += steps
         return GenerateResult(tokens=np.stack(outs, axis=1),
-                              prefill_logits=np.asarray(logits),
-                              steps=max_new)
+                              prefill_logits=prefill_logits,
+                              steps=steps)
 
     @staticmethod
     def _sample(logits: jax.Array, temperature: float,

@@ -52,11 +52,24 @@ class RequestScheduler:
         plen = max(len(r.tokens) for r in reqs)
         max_new = max(r.max_new for r in reqs)
         prompts = np.full((B, plen), self.pad, np.int32)
+        # Early stop: the engine halts the decode loop once every *active*
+        # slot has emitted its EOS — unfilled padding slots are marked
+        # inactive so they can never pin the round to the full max_new.
+        # Requests without an EOS keep their slot live for the whole round
+        # (entries < 0 never match a token id).
+        eos_vec = np.full(B, -1, np.int64)
+        active = np.zeros(B, bool)
         for i, r in enumerate(reqs):
             # right-align so the final prompt token sits at position plen-1
             prompts[i, plen - len(r.tokens):] = r.tokens
+            active[i] = True
+            if r.eos is not None:
+                eos_vec[i] = r.eos
+        has_eos = any(r.eos is not None for r in reqs)
         out = self.engine.generate({"tokens": prompts}, max_new=max_new,
-                                   prompt_len=plen)
+                                   prompt_len=plen,
+                                   eos=eos_vec if has_eos else None,
+                                   active=active)
         for i, r in enumerate(reqs):
             toks = out.tokens[i, : r.max_new]
             if r.eos is not None:

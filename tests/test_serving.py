@@ -41,6 +41,40 @@ def test_identical_prompts_identical_rows(engine):
         np.testing.assert_array_equal(r.tokens[0], r.tokens[b])
 
 
+def test_prefill_logits_are_the_prefill_logits(engine):
+    """generate() must return the logits of the *prefill* pass, not the
+    last decode step's (the regression this pins): they are independent of
+    max_new and equal a direct prefill call."""
+    eng, cfg = engine
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    r1 = eng.generate({"tokens": prompts}, max_new=1)
+    r6 = eng.generate({"tokens": prompts}, max_new=6)
+    np.testing.assert_array_equal(r1.prefill_logits, r6.prefill_logits)
+    direct, _ = eng._prefill(eng.params, {"tokens": prompts},
+                             s_max=eng.s_max)
+    np.testing.assert_array_equal(np.asarray(direct), r6.prefill_logits)
+    # and the first generated token is the argmax of those logits
+    np.testing.assert_array_equal(
+        r6.tokens[:, 0], np.argmax(r6.prefill_logits, axis=-1))
+
+
+def test_generate_eos_early_stop_counts_steps(engine):
+    """Once every slot has emitted its EOS the decode loop halts."""
+    eng, cfg = engine
+    rng = np.random.default_rng(6)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    probe = eng.generate({"tokens": prompts}, max_new=3)
+    # choose each slot's own 2nd emitted token as its EOS
+    eos = probe.tokens[:, 1].astype(np.int64)
+    before = eng.decode_steps
+    r = eng.generate({"tokens": prompts}, max_new=32, eos=eos)
+    assert r.steps == eng.decode_steps - before
+    assert r.steps < 32                       # early stop actually fired
+    assert r.tokens.shape[1] == r.steps + 1   # one decode per extra token
+    np.testing.assert_array_equal(r.tokens[:, :2], probe.tokens[:, :2])
+
+
 def test_temperature_sampling_in_range(engine):
     eng, cfg = engine
     rng = np.random.default_rng(1)

@@ -8,8 +8,9 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import (dnn_speedup, fig1_curves, flash_bench,
-                        kernel_bench, table1_delay, table2_selection)
+from benchmarks import (attention_bench, dnn_speedup, fig1_curves,
+                        flash_bench, kernel_bench, table1_delay,
+                        table2_selection)
 
 
 def main() -> int:
@@ -44,6 +45,13 @@ def main() -> int:
     fb = flash_bench.run()
     if fb["traffic_ratio_kernel"] < 10:
         failures.append("flash kernel ledger should dominate materialized")
+
+    # flash-vs-materialized agreement is asserted inside run(); the
+    # measured structural property is that neither flash lowering
+    # materializes its score buffer (regresses on silent fallback)
+    ab = attention_bench.run(smoke=True, verbose=False)
+    if any(c["hlo_scores_materialized"] for c in ab["cells"]):
+        failures.append("attention flash lowering materialized scores")
 
     print("\n== benchmark summary ==")
     if failures:

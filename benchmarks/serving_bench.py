@@ -22,6 +22,12 @@ What is asserted vs reported:
   tests/test_residency.py; on TPU the kernel shrinks and the avoided
   conversion becomes a real fraction of the step.
 
+Reported throughput is split into **prefill tokens/s** and **decode
+steps/s** (one number hid which phase moved), and every generate() records
+its **decode dispatch count** — the fused ``lax.while_loop`` loop issues 1
+device dispatch per generate() vs the host loop's one-per-token, measured
+side by side in the ``loops`` section.
+
 Run:  PYTHONPATH=src python benchmarks/serving_bench.py [--smoke]
 Writes BENCH_serving[_smoke].json for the CI artifact trail.
 """
@@ -67,6 +73,22 @@ def _decode_ms(eng: ServingEngine, prompts: np.ndarray, *, steps: int,
     return float(min(loop() for _ in range(reps))) * 1e3
 
 
+def _prefill_tokens_per_s(eng: ServingEngine, prompts: np.ndarray, *,
+                          reps: int) -> float:
+    """Prefill throughput (prompt tokens consumed per second)."""
+    B, P = prompts.shape
+
+    def once():
+        t0 = time.perf_counter()
+        logits, _ = eng._prefill(eng.params, {"tokens": prompts},
+                                 s_max=eng.s_max)
+        logits.block_until_ready()
+        return time.perf_counter() - t0
+
+    once()  # warmup
+    return B * P / min(once() for _ in range(reps))
+
+
 def bench_system(system: str, *, d_model: int, d_ff: int, n_layers: int,
                  steps: int, reps: int) -> dict:
     cfg = dataclasses.replace(
@@ -95,8 +117,49 @@ def bench_system(system: str, *, d_model: int, d_ff: int, n_layers: int,
         "decode_steps": steps,
         "decode_ms_per_call_conversion": ms_conv,
         "decode_ms_residue_resident": ms_res,
+        "decode_steps_per_s_residue_resident": 1e3 / ms_res,
+        "prefill_tokens_per_s_residue_resident": _prefill_tokens_per_s(
+            eng_res, prompts, reps=reps),
         "speedup": ms_conv / ms_res,
     }
+
+
+def bench_loops(*, steps: int, reps: int) -> dict:
+    """Fused lax.while_loop decode vs the per-token host loop.
+
+    Same model/params/prompts; the measured object is ``generate()`` end to
+    end, plus the decode dispatch count each loop issues (1 vs steps).
+    """
+    cfg = dataclasses.replace(
+        get_config("yi-6b").reduced(),
+        n_layers=2, d_model=128, d_ff=256, n_heads=2, n_kv=1, head_dim=64,
+        vocab=64, compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P = 4, 8
+    s_max = P + steps + 2
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (B, P)).astype(np.int32)
+
+    def ms_per_generate(eng):
+        def once():
+            t0 = time.perf_counter()
+            eng.generate({"tokens": prompts}, max_new=steps)
+            return time.perf_counter() - t0
+
+        once()  # warmup: compile
+        return float(min(once() for _ in range(reps))) * 1e3
+
+    out = {"batch": B, "max_new": steps}
+    for name, fused in (("fused", True), ("host", False)):
+        eng = ServingEngine(model, params, batch=B, s_max=s_max,
+                            fused_loop=fused)
+        ms = ms_per_generate(eng)
+        r = eng.generate({"tokens": prompts}, max_new=steps)
+        out[f"{name}_ms_per_generate"] = ms
+        out[f"{name}_decode_dispatches_per_generate"] = r.decode_dispatches
+    out["speedup"] = out["host_ms_per_generate"] / out["fused_ms_per_generate"]
+    return out
 
 
 def run(*, smoke: bool = False, verbose: bool = True) -> dict:
@@ -128,8 +191,24 @@ def run(*, smoke: bool = False, verbose: bool = True) -> dict:
                   f"{r['decode_ms_per_call_conversion']:8.2f} ms/token")
             print("  residue-resident    : "
                   f"{r['decode_ms_residue_resident']:8.2f} ms/token")
+            print("  prefill             : "
+                  f"{r['prefill_tokens_per_s_residue_resident']:8.0f} "
+                  "tokens/s")
+            print("  decode              : "
+                  f"{r['decode_steps_per_s_residue_resident']:8.1f} steps/s")
             print(f"  speedup             : {r['speedup']:.3f}x")
-    return {"smoke": smoke, "cells": results}
+    loops = bench_loops(steps=8 if smoke else 24, reps=2 if smoke else 5)
+    if verbose:
+        print(f"[serving_bench] decode loop (B={loops['batch']}, "
+              f"max_new={loops['max_new']}):")
+        print(f"  host loop  : {loops['host_ms_per_generate']:8.2f} "
+              f"ms/generate "
+              f"({loops['host_decode_dispatches_per_generate']} dispatches)")
+        print(f"  fused loop : {loops['fused_ms_per_generate']:8.2f} "
+              f"ms/generate "
+              f"({loops['fused_decode_dispatches_per_generate']} dispatch)")
+        print(f"  speedup    : {loops['speedup']:.3f}x")
+    return {"smoke": smoke, "cells": results, "loops": loops}
 
 
 def main(argv=None):

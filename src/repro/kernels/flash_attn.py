@@ -1,21 +1,45 @@
-"""Pallas TPU kernel: flash attention (online-softmax, tiled).
+"""Pallas TPU kernels: flash attention (online-softmax, tiled) — GQA-native
+prefill/full-sequence kernel plus a flash-decoding split-KV schedule.
 
 Beyond-paper optimization for the serving/training attention hot-spot: the
-baseline attention materializes (B, H, Sq, Skv) f32 scores in HBM (measured
-at ~10% of granite-20b's training traffic and the whole of the long-context
-prefill wall); this kernel keeps every score tile in VMEM and carries the
-online-softmax statistics (running max m, normalizer l, weighted
-accumulator) in f32 scratch — HBM traffic drops to Q/K/V/O only.
+baseline attention materializes (B, H, Sq, T) f32 scores in HBM (measured at
+~10% of granite-20b's training traffic and the whole of the long-context
+prefill wall); these kernels keep every score tile in VMEM and carry the
+online-softmax statistics (running max m, normalizer l, weighted accumulator)
+in f32 scratch — HBM traffic drops to Q/K/V/O only.
 
-Tiling: grid ``(B*H, Sq/bq, Skv/bk)`` with the KV axis innermost/sequential
-("arbitrary") so the scratch carry is valid; blocks are MXU-aligned
-(multiples of 128 on the Sq/Skv dims; head_dim rides whole).  VMEM per step:
-``bq*hd + bk*hd`` (operand tiles, bf16) + ``bq*(hd+2)`` f32 scratch — the
-default (256, 512) tiles use well under 1 MiB, leaving VMEM for
-double-buffered pipelining.
+Layout and GQA
+--------------
+Operands ride in the model's native layouts — q ``(B, Sq, H, hd)``, k/v
+``(B, T, Kv, hd)`` (exactly the KV-cache layout) — and grouped-query heads
+are resolved in the *BlockSpec index map*: query head ``h`` reads KV head
+``h // (H // Kv)``, so the grouped cache is never repeated/materialized to
+the full head count (the ``jnp.repeat`` the materialized path used to pay
+every decode step).
+
+Runtime ``kv_len``
+------------------
+The number of valid KV positions is a **runtime operand** — a ``(B,)`` int32
+array in SMEM — never a static.  Every decode position therefore reuses one
+compiled kernel (the old static ``kv_len`` recompiled per token), and ragged
+per-batch prompt lengths mask correctly inside one batch.
+
+Tiling
+------
+``flash_attention_pallas``: grid ``(B, H, ceil(Sq/bq), ceil(T/bk))`` with the
+KV axis innermost/sequential ("arbitrary") so the scratch carry is valid.
+``flash_decode_pallas``: grid ``(B, H, ceil(T/bk))`` with the KV-chunk axis
+*parallel* — each chunk emits (o, m, l) online-softmax partials and a tiny
+merge pass (plain jnp, see ``numerics/attention.py``) log-sum-exp-combines
+them; this is the TPU form of flash-decoding's split-KV scheme.
+
+Blocks need not divide the sequence dims: out-of-bounds tiles are padded by
+the runtime (NaN in interpret mode, clamped reads under Mosaic), so every
+tile is sanitized against its true extent before it enters the accumulation.
 
 Exactness: this is *exact* attention (same math as the reference, different
-summation order); tests sweep shapes/causal masks against ``ref.py``.
+summation order); tests sweep GQA ratios / causal / ragged ``kv_len``
+against ``ref.py``.
 """
 from __future__ import annotations
 
@@ -28,21 +52,24 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
 
-__all__ = ["flash_attention_pallas", "DEFAULT_BLOCKS"]
+__all__ = ["flash_attention_pallas", "flash_decode_pallas", "DEFAULT_BLOCKS"]
 
 DEFAULT_BLOCKS = (256, 512)   # (bq, bk)
 _NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, lsum, *,
-            n_k: int, causal: bool, scale: float, bq: int, bk: int,
-            kv_len: int):
-    """One (bh, qi, ki) grid step.
+def _attn_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, acc, m, lsum, *,
+                 n_k: int, causal: bool, scale: float, bq: int, bk: int,
+                 sq: int):
+    """One (b, h, qi, ki) grid step.
 
-    q_ref: (1, bq, hd);  k_ref/v_ref: (1, bk, hd);  o_ref: (1, bq, hd).
+    kvlen_ref: (B,) int32 in SMEM;  q_ref: (1, bq, 1, hd);
+    k_ref/v_ref: (1, bk, 1, hd) — the KV head was selected by the BlockSpec
+    index map;  o_ref: (1, bq, 1, hd).
     acc: (bq, hd) f32 scratch;  m, lsum: (bq, 1) f32 scratch.
     """
-    ki = pl.program_id(2)
+    b = pl.program_id(0)
+    ki = pl.program_id(3)
 
     @pl.when(ki == 0)
     def _init():
@@ -50,85 +77,191 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, lsum, *,
         lsum[...] = jnp.zeros_like(lsum)
         acc[...] = jnp.zeros_like(acc)
 
-    qb = q_ref[0]                                    # (bq, hd)
-    kb = k_ref[0]                                    # (bk, hd)
+    kv_len = kvlen_ref[b]
+    q_rows = pl.program_id(2) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, 1), 0)
+    k_rows = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+    # sanitize padded tails: OOB tiles hold NaN (interpret) or clamped reads
+    # (Mosaic); zeroed rows keep the matmuls finite and are masked below
+    qb = jnp.where(q_rows < sq, q_ref[0, :, 0, :], 0.0)
+    kb = jnp.where(k_rows < kv_len, k_ref[0, :, 0, :], 0.0)
+    vb = jnp.where(k_rows < kv_len, v_ref[0, :, 0, :], 0.0)
+
     s = jax.lax.dot_general(
         qb, kb, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        preferred_element_type=jnp.float32) * scale      # (bq, bk)
 
-    q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
-        jnp.int32, (bq, bk), 0)
-    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = k_pos < kv_len                            # padded KV tail
+    mask = k_rows.T < kv_len                             # (1, bk)
     if causal:
-        mask = mask & (k_pos <= q_pos)
-    s = jnp.where(mask, s, _NEG_INF)
+        mask = mask & (k_rows.T <= q_rows)               # (bq, bk)
+    mask = jnp.broadcast_to(mask, (bq, bk))
 
-    m_prev = m[...]                                  # (bq, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
-    p = jnp.exp(s - m_new)                           # (bq, bk)
+    m_prev = m[...]                                      # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(jnp.where(mask, s, _NEG_INF),
+                                        axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)                      # (bq, 1)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)         # (bq, bk)
     lsum[...] = lsum[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
     pv = jax.lax.dot_general(
-        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)          # (bq, hd)
+        p.astype(vb.dtype), vb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bq, hd)
     acc[...] = acc[...] * alpha + pv
     m[...] = m_new
 
     @pl.when(ki == n_k - 1)
     def _final():
-        o_ref[0] = (acc[...] / jnp.maximum(lsum[...], 1e-30)).astype(
+        o_ref[0, :, 0, :] = (acc[...] / jnp.maximum(lsum[...], 1e-30)).astype(
             o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
-                                             "kv_len", "interpret"))
+                                             "interpret"))
 def flash_attention_pallas(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
+    kv_len: jax.Array | None = None,
     *,
     causal: bool = True,
-    kv_len: int | None = None,
     bq: int = DEFAULT_BLOCKS[0],
     bk: int = DEFAULT_BLOCKS[1],
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Exact attention without materialized scores.
+    """Exact attention without materialized scores, GQA-native.
 
     Args:
-      q: (BH, Sq, hd);  k, v: (BH, Skv, hd) — heads pre-merged into the
-        batch dim (ops.py reshapes / pads).  Sq % bq == 0, Skv % bk == 0.
-      kv_len: number of *valid* KV positions (<= Skv; rest is padding).
+      q: (B, Sq, H, hd);  k, v: (B, T, Kv, hd) with H % Kv == 0 — the
+        model/cache layouts, heads ungrouped.
+      kv_len: (B,) int32 *runtime* count of valid KV positions per batch row
+        (<= T; the padded tail is masked).  ``None`` means all T are valid.
     Returns:
-      (BH, Sq, hd) in q's dtype.
+      (B, Sq, H, hd) in q's dtype.
     """
     interpret = compat.resolve_interpret(interpret)
-    BH, Sq, hd = q.shape
-    _, Skv, _ = k.shape
-    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
-    n_k = Skv // bk
-    scale = 1.0 / (hd ** 0.5)
-    kv_len = Skv if kv_len is None else kv_len
+    B, Sq, H, hd = q.shape
+    _, T, Kv, _ = k.shape
+    assert H % Kv == 0, (H, Kv)
+    g = H // Kv
+    if kv_len is None:
+        kv_len = jnp.full((B,), T, jnp.int32)
+    else:
+        kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    n_q = -(-Sq // bq)
+    n_k = -(-T // bk)
 
-    grid = (BH, Sq // bq, n_k)
+    grid = (B, H, n_q, n_k)
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, causal=causal, scale=scale,
-                          bq=bq, bk=bk, kv_len=kv_len),
+        functools.partial(_attn_kernel, n_k=n_k, causal=causal,
+                          scale=1.0 / (hd ** 0.5), bq=bq, bk=bk, sq=Sq),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, i, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, i, j: (b, j, h // g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, hd), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
         compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
-    )(q, k, v)
+    )(kv_len, q, k, v)
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                   bk: int, scale: float):
+    """One (b, h, ki) grid step of the split-KV decode schedule.
+
+    Each KV chunk is independent (*parallel* grid axis — no scratch carry):
+    it emits its own online-softmax partial (o, m, l) and the merge pass
+    combines them.  kvlen_ref: (B,) int32 in SMEM;  q_ref: (1, 1, hd);
+    k_ref/v_ref: (1, bk, 1, hd);  o_ref: (1, 1, hd, 1);  m_ref/l_ref:
+    (1, 1, 1).
+    """
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    kv_len = kvlen_ref[b]
+    k_rows = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+    valid = k_rows < kv_len
+    kb = jnp.where(valid, k_ref[0, :, 0, :], 0.0)
+    vb = jnp.where(valid, v_ref[0, :, 0, :], 0.0)
+    qb = q_ref[0]                                        # (1, hd)
+    s = jax.lax.dot_general(
+        qb, kb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (1, bk)
+    s = jnp.where(valid.T, s, _NEG_INF)
+    m_c = jnp.max(s, axis=-1, keepdims=True)             # (1, 1)
+    # all-masked chunk: m_c = -inf and p = 0 everywhere -> l = 0, o = 0;
+    # the merge pass weighs it out (its exp(m_c - m_max) underflows to 0)
+    p = jnp.where(valid.T, jnp.exp(s - m_c), 0.0)
+    l_c = jnp.sum(p, axis=-1, keepdims=True)
+    o_c = jax.lax.dot_general(
+        p.astype(vb.dtype), vb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (1, hd)
+    o_ref[0, 0, :, 0] = o_c[0]
+    m_ref[0, 0, 0] = m_c[0, 0]
+    l_ref[0, 0, 0] = l_c[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_len: jax.Array,
+    *,
+    bk: int = DEFAULT_BLOCKS[1],
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Split-KV decode partials: per-chunk online-softmax (o, m, l).
+
+    Args:
+      q: (B, H, hd) — the single decode token's queries;
+      k, v: (B, T, Kv, hd) — the KV cache, heads ungrouped;
+      kv_len: (B,) int32 runtime valid-prefix length (<= T).
+    Returns:
+      ``(o_part (B, H, hd, n_chunks) f32, m_part (B, H, n_chunks) f32,
+      l_part (B, H, n_chunks) f32)`` — merge with
+      :func:`repro.numerics.attention.merge_decode_partials`.
+    """
+    interpret = compat.resolve_interpret(interpret)
+    B, H, hd = q.shape
+    _, T, Kv, _ = k.shape
+    assert H % Kv == 0, (H, Kv)
+    g = H // Kv
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    n_k = -(-T // bk)
+
+    grid = (B, H, n_k)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bk=bk, scale=1.0 / (hd ** 0.5)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, hd), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, j: (b, j, h // g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, hd, 1), lambda b, h, j: (b, h, 0, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, j: (b, h, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, j: (b, h, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, hd, n_k), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_k), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_k), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(kv_len, q, k, v)

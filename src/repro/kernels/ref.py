@@ -8,7 +8,7 @@ from repro.core import sdrns
 from repro.core.moduli import ModuliSet
 
 __all__ = ["rns_matmul_ref", "int_matmul_ref", "sd_add_ref",
-           "sdrns_matmul_ref", "flash_attention_ref"]
+           "sdrns_matmul_ref", "flash_attention_ref", "gqa_attention_ref"]
 
 
 def rns_matmul_ref(a_res: jax.Array, b_res: jax.Array,
@@ -89,3 +89,38 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(
         q.dtype)
+
+
+def gqa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      kv_len: jax.Array | None = None, *,
+                      causal: bool = True) -> jax.Array:
+    """Oracle for the GQA-native flash kernels: materialized-score softmax
+    over the model/cache layouts.
+
+    q: (B, Sq, H, hd); k, v: (B, T, Kv, hd) with H % Kv == 0 (KV heads are
+    broadcast over the H // Kv query groups — semantics of ``jnp.repeat``
+    without this oracle caring about the materialization).  ``kv_len``:
+    (B,) int32 valid-prefix length (None = all T valid).  Returns
+    (B, Sq, H, hd) in q's dtype.
+    """
+    B, Sq, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg,
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    kpos = jnp.arange(T)
+    if kv_len is None:
+        mask = jnp.ones((B, 1, 1, 1, T), bool)
+    else:
+        kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+        mask = kpos[None, :] < kv_len[:, None]
+        mask = mask[:, None, None, None, :]
+    if causal:
+        qpos = jnp.arange(Sq)
+        mask = mask & (kpos[None, None, None, None, :]
+                       <= qpos[None, None, None, :, None])
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

@@ -1,6 +1,9 @@
 """Grouped-query attention with qk-norm, chunked long-context path, KV-cache
 prefill/decode — parameterized over the arithmetic backend via
-``models.linear.dense`` and over the mesh via ``parallel.sharding.constrain``.
+``models.linear.dense``, over the mesh via ``parallel.sharding.constrain``,
+and over the *attention kernel implementation* via the numerics registry
+(``repro.numerics.attention``: flash / split-KV Pallas kernels vs the
+materialized-score reference).
 
 All four projection weights (wq/wk/wv/wo) may arrive residue-resident
 (repro/quant/residency.py): ``linear.dense`` detects the prepared form, so
@@ -8,16 +11,34 @@ the decode step's projections run conversion-free against precomputed digit
 planes — nothing here changes shape-wise, the prepared leaves just carry
 the extra channel/digit axes behind the same dict keys.
 
+Kernel dispatch (see DESIGN.md §10):
+* ``prefill_attention`` / ``decode_attention`` route through the flash
+  kernels by default — prefill through the GQA-native tiled online-softmax
+  kernel (no (B, H, Sq, T) score buffer in HBM), decode through the
+  flash-decoding split-KV schedule with ``kv_len = pos + 1`` as a *runtime*
+  operand (one compiled kernel for every decode position).
+* Under an installed :class:`~repro.parallel.sharding.ShardCtx` both fall
+  back to the materialized path below: its ``constrain`` annotations encode
+  the TP/split-KV mesh layouts (a ``pallas_call`` would not partition), so
+  the dry-run cells lower exactly as before.
+* ``set_attn_impl`` pins the implementation globally ("ref" forces the
+  materialized path everywhere; "pallas"/"interpret" additionally opt the
+  full-sequence ``attention()`` entry point into the kernel — inference
+  only, the kernels define no VJP).
+
 Layout decisions (see DESIGN.md §5):
-* KV is stored *ungrouped* in the cache ((B, T, n_kv, hd)) and repeated to the
-  full head count at compute time — scores then carry a single merged head dim
-  that shards cleanly over the tensor axis for every assigned kv_heads value
-  (the per-(kv, group) factored layout would need kv % 16 == 0).
-* Long sequences use an exact scan over query chunks so peak score memory is
-  (B, H, Q_CHUNK, T).
-* Decode supports sequence-sharded caches: the softmax reductions over the T
-  axis become all-reduces under SPMD, which is the TPU analogue of
-  flash-decoding's split-KV scheme.
+* KV is stored *ungrouped* in the cache ((B, T, n_kv, hd)).  The flash
+  kernels map query head h onto KV head h // (H // n_kv) in their BlockSpec
+  index maps; the materialized fallback computes a grouped einsum over a
+  reshaped (n_kv, group) head axis — the repeated-to-H KV copy that used to
+  be materialized every decode step no longer exists on either path.
+* Long sequences on the fallback use an exact scan over query chunks so
+  peak score memory is (B, H, Q_CHUNK, T); the flash path needs no chunking
+  (score tiles live in VMEM).
+* Decode on the fallback supports sequence-sharded caches: the softmax
+  reductions over the T axis become all-reduces under SPMD, which is the
+  TPU analogue of flash-decoding's split-KV scheme — single-device decode
+  runs the actual split-KV kernel.
 """
 from __future__ import annotations
 
@@ -28,13 +49,60 @@ import jax.numpy as jnp
 
 from repro.models import linear
 from repro.models.layers import rmsnorm, rope
-from repro.parallel.sharding import constrain, constrain_any
+from repro.numerics import attention as nxattn
+from repro.numerics.registry import resolve_backend
+from repro.parallel.sharding import constrain, constrain_any, get_shard_ctx
 
 __all__ = ["init_attention", "attention", "prefill_attention",
-           "decode_attention", "KVCache", "init_kv_cache"]
+           "decode_attention", "KVCache", "init_kv_cache", "set_attn_impl"]
 
 CHUNK_THRESHOLD = 8192   # switch to scan-over-query-chunks above this S
 Q_CHUNK = 1024
+
+# Attention-impl override: None = auto (flash via the platform-selected
+# registry backend on prefill/decode; materialized path under a mesh and
+# for full-sequence attention()).  "ref" pins the materialized path
+# everywhere; "pallas"/"interpret" force the kernels (attention() included).
+_IMPL_OVERRIDE: str | None = None
+
+# Interpret-mode emulation executes the kernel body per grid step — tiny
+# test shapes are fine, but oversized auto-dispatched grids would crawl on
+# CPU, so they fall back to the materialized path unless forced.
+_INTERPRET_GRID_CAP = 4096
+
+
+def set_attn_impl(impl: str | None) -> str | None:
+    """Pin the attention kernel implementation; returns the previous value.
+
+    ``None`` = auto (flash on the serving paths, registry backend by
+    platform); ``"ref"`` = materialized-score path everywhere;
+    ``"pallas"`` / ``"interpret"`` = force the flash kernels, including for
+    full-sequence ``attention()`` (inference only — no VJP).
+    """
+    global _IMPL_OVERRIDE
+    if impl not in (None, "pallas", "interpret", "ref", "cost"):
+        raise ValueError(f"unknown attention impl {impl!r}")
+    prev = _IMPL_OVERRIDE
+    _IMPL_OVERRIDE = impl
+    return prev
+
+
+def _flash_backend(B: int, H: int, Sq: int, T: int) -> str | None:
+    """Registry backend for the flash path, or None -> materialized path.
+
+    Mesh traces always materialize (their ``constrain`` annotations encode
+    the TP/split-KV layouts); "ref"/"cost" impls mean materialized; auto
+    interpret dispatch respects :data:`_INTERPRET_GRID_CAP`.
+    """
+    if get_shard_ctx() is not None:
+        return None
+    backend = resolve_backend(_IMPL_OVERRIDE)
+    if backend in ("ref", "cost"):
+        return None
+    if (backend == "interpret" and _IMPL_OVERRIDE is None
+            and nxattn.grid_size(B, H, Sq, T) > _INTERPRET_GRID_CAP):
+        return None
+    return backend
 
 
 def init_attention(key: jax.Array, d_model: int, n_heads: int, n_kv: int,
@@ -83,8 +151,15 @@ def _project_qkv(params, x, *, n_heads, n_kv, head_dim, qk_norm, positions,
 
 def _core(q, k, v, *, causal: bool, q_pos, kv_pos, kv_mask=None,
           cache_mode: bool = False):
-    """q: (B, Sq, H, hd); k, v: (B, T, n_kv, hd).  Exact softmax attention;
-    KV repeated to H heads (merged head dim -> clean TP sharding).
+    """q: (B, Sq, H, hd); k, v: (B, T, n_kv, hd).  Exact softmax attention
+    with *materialized* scores — the mesh/ref fallback of the flash path.
+
+    Grouped-query heads run as a grouped einsum over a reshaped
+    (n_kv, group) head axis — the KV tensors are never repeated to H heads
+    (the old ``jnp.repeat`` materialized a full H-headed copy of the KV
+    cache on every decode step).  Scores still carry a single merged head
+    dim (reshape, not copy) so they shard cleanly over the tensor axis for
+    every assigned kv_heads value.
 
     ``cache_mode``: k/v come from a *sequence-sharded* KV cache (decode) —
     keep T sharded over tp and let the softmax reductions all-reduce (the
@@ -93,9 +168,7 @@ def _core(q, k, v, *, causal: bool, q_pos, kv_pos, kv_mask=None,
     """
     B, Sq, H, hd = q.shape
     T, Kv = k.shape[1], k.shape[2]
-    if Kv != H:
-        k = jnp.repeat(k, H // Kv, axis=2)
-        v = jnp.repeat(v, H // Kv, axis=2)
+    G = H // Kv
     if cache_mode:
         k = constrain(k, "dp", "tp", None, None)
         v = constrain(v, "dp", "tp", None, None)
@@ -104,8 +177,10 @@ def _core(q, k, v, *, causal: bool, q_pos, kv_pos, kv_mask=None,
                           ("dp", "tp", None, None))
         v = constrain_any(v, ("dp", None, "tp", None),
                           ("dp", "tp", None, None))
-    scores = jnp.einsum("bqhd,bthd->bhqt", q, k.astype(q.dtype),
+    qg = q.reshape(B, Sq, Kv, G, hd)
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", qg, k.astype(q.dtype),
                         preferred_element_type=jnp.float32)
+    scores = scores.reshape(B, H, Sq, T)
     if cache_mode:
         scores = constrain(scores, "dp", None, None, "tp")
     else:
@@ -124,7 +199,9 @@ def _core(q, k, v, *, causal: bool, q_pos, kv_pos, kv_mask=None,
     if mask is not None:
         scores = jnp.where(mask, scores, jnp.float32(-1e30))
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhqt,bthd->bqhd", probs.astype(v.dtype), v)
+    pg = probs.reshape(B, Kv, G, Sq, T).astype(v.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", pg, v)
+    out = out.reshape(B, Sq, H, hd)
     if not cache_mode:
         out = constrain_any(out, ("dp", None, "tp", None),
                             ("dp", "tp", None, None))
@@ -147,6 +224,27 @@ def _chunked(q, k, v, *, causal, pos1d, n_heads, head_dim):
     return outs.swapaxes(0, 1).reshape(B, S, n_heads * head_dim)
 
 
+def _full_seq(q, k, v, *, causal, pos1d, n_heads, head_dim,
+              flash_ok: bool = True):
+    """Full-sequence attention: flash kernel when eligible, else the
+    materialized `_core`/`_chunked` fallback.  q rows are assumed to sit at
+    positions 0..Sq-1 against KV rows 0..T-1 on the flash path (true for
+    every in-repo caller; callers with exotic position maps pass
+    ``flash_ok=False``)."""
+    B, S = q.shape[0], q.shape[1]
+    T = k.shape[1]
+    backend = _flash_backend(B, n_heads, S, T) if flash_ok else None
+    if backend is not None:
+        out = nxattn.flash_attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                                     causal=causal, backend=backend)
+        return out.reshape(B, S, n_heads * head_dim)
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    if S <= CHUNK_THRESHOLD or S % Q_CHUNK != 0:
+        return _core(q, k, v, causal=causal, q_pos=pos1d, kv_pos=kv_pos)
+    return _chunked(q, k, v, causal=causal, pos1d=pos1d,
+                    n_heads=n_heads, head_dim=head_dim)
+
+
 def attention(
     params: dict[str, Any],
     x: jax.Array,
@@ -166,6 +264,9 @@ def attention(
 
     ``kv_override`` supplies external (k, v) for cross-attention — projections
     for them are the caller's job (see models/encdec.py).
+
+    Differentiable by default: the flash kernels (no VJP) are used here only
+    under an explicit ``set_attn_impl("pallas"/"interpret")`` opt-in.
     """
     dense_kw = dense_kw or {}
     B, S, _ = x.shape
@@ -178,12 +279,10 @@ def attention(
     if kv_override is not None:
         k, v = kv_override
     pos1d = positions if positions.ndim == 1 else positions[0]
-    kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
-    if S <= CHUNK_THRESHOLD or S % Q_CHUNK != 0:
-        out = _core(q, k, v, causal=causal, q_pos=pos1d, kv_pos=kv_pos)
-    else:
-        out = _chunked(q, k, v, causal=causal, pos1d=pos1d,
-                       n_heads=n_heads, head_dim=head_dim)
+    # training path: kernels only on explicit opt-in (they define no VJP)
+    flash_ok = _IMPL_OVERRIDE in ("pallas", "interpret")
+    out = _full_seq(q, k, v, causal=causal, pos1d=pos1d, n_heads=n_heads,
+                    head_dim=head_dim, flash_ok=flash_ok)
     return linear.dense(params["wo"], out, **dense_kw)
 
 
@@ -193,7 +292,12 @@ def prefill_attention(params, x, s_max: int, *, cache_dtype=jnp.bfloat16,
     zero-padded to ``s_max`` positions.  Building the cache from the scan
     outputs (rather than updating a zero-initialized argument) keeps exactly
     one cache buffer live — the xs/ys double-buffer was the dominant memory
-    term of the 32k prefill cells."""
+    term of the 32k prefill cells.
+
+    Inference-only, so the flash kernel is the default compute path (no
+    (B, H, S, S) score buffer); the materialized fallback runs under a mesh
+    or a ``set_attn_impl("ref")`` pin.
+    """
     dense_kw = kw.get("dense_kw") or {}
     B, S, _ = x.shape
     positions = jnp.arange(S, dtype=jnp.int32)
@@ -208,12 +312,8 @@ def prefill_attention(params, x, s_max: int, *, cache_dtype=jnp.bfloat16,
     cache = KVCache(jnp.pad(k.astype(cache_dtype), pad),
                     jnp.pad(v.astype(cache_dtype), pad))
     causal = kw.get("causal", True)
-    if S <= CHUNK_THRESHOLD or S % Q_CHUNK != 0:
-        out = _core(q, k, v, causal=causal, q_pos=positions,
-                    kv_pos=positions)
-    else:
-        out = _chunked(q, k, v, causal=causal, pos1d=positions,
-                       n_heads=n_heads, head_dim=head_dim)
+    out = _full_seq(q, k, v, causal=causal, pos1d=positions,
+                    n_heads=n_heads, head_dim=head_dim)
     return linear.dense(params["wo"], out, **dense_kw), cache
 
 
@@ -231,7 +331,14 @@ def decode_attention(
     dense_kw: dict[str, Any] | None = None,
     apply_rope: bool = True,
 ) -> tuple[jax.Array, KVCache]:
-    """One decode step.  x: (B, 1, D); pos: scalar int32 (uniform batch)."""
+    """One decode step.  x: (B, 1, D); pos: scalar int32 (uniform batch).
+
+    Single-device decode runs the flash-decoding split-KV kernel over the
+    ungrouped cache with ``kv_len = pos + 1`` as a runtime operand — no
+    repeated KV copy, no (B, H, 1, T) score buffer, no recompile per
+    position.  Under a mesh the materialized ``cache_mode`` path keeps the
+    sequence-sharded layout (softmax reductions all-reduce over tp).
+    """
     dense_kw = dense_kw or {}
     B = x.shape[0]
     positions = jnp.full((B, 1), pos, jnp.int32)
@@ -246,10 +353,16 @@ def decode_attention(
                                      (0, pos, 0, 0)),
     )
     T = cache.k.shape[1]
-    kv_pos = jnp.arange(T, dtype=jnp.int32)
-    kv_mask = (kv_pos <= pos)[None, :].astype(bool)
-    kv_mask = jnp.broadcast_to(kv_mask, (B, T))
-    out = _core(q, cache.k, cache.v, causal=False,
-                q_pos=jnp.full((1,), pos, jnp.int32), kv_pos=kv_pos,
-                kv_mask=kv_mask, cache_mode=True)
+    backend = _flash_backend(B, n_heads, 1, T)
+    if backend is not None:
+        o = nxattn.flash_decode(q[:, 0], cache.k, cache.v, kv_len=pos + 1,
+                                backend=backend)
+        out = o.astype(q.dtype).reshape(B, 1, n_heads * head_dim)
+    else:
+        kv_pos = jnp.arange(T, dtype=jnp.int32)
+        kv_mask = (kv_pos <= pos)[None, :].astype(bool)
+        kv_mask = jnp.broadcast_to(kv_mask, (B, T))
+        out = _core(q, cache.k, cache.v, causal=False,
+                    q_pos=jnp.full((1,), pos, jnp.int32), kv_pos=kv_pos,
+                    kv_mask=kv_mask, cache_mode=True)
     return linear.dense(params["wo"], out, **dense_kw), cache

@@ -23,6 +23,7 @@ parameter dicts of PR 2 and the legacy ``kernels/ops.py`` entry-point zoo
 separate ``system=`` argument of ``models/api.py::build_model``.
 """
 from repro.numerics.api import EncodeSpec, add, decode, einsum, encode, matmul
+from repro.numerics.attention import flash_attention, flash_decode
 from repro.numerics.registry import (
     BACKENDS,
     get_impl,
@@ -41,6 +42,8 @@ __all__ = [
     "matmul",
     "einsum",
     "add",
+    "flash_attention",
+    "flash_decode",
     "BACKENDS",
     "resolve_backend",
     "register_impl",

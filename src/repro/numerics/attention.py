@@ -1,0 +1,172 @@
+"""Float attention ops behind the numerics backend registry.
+
+The flash kernels join the matmul runners on the registry axis
+(``pallas`` / ``interpret`` / ``ref`` / ``cost`` — see
+``numerics/registry.py``): models dispatch by *op name* and the platform
+(or an explicit override) picks the implementation.  Two ops:
+
+* ``flash_attention`` — GQA-native tiled online-softmax over the model
+  layouts ``q (B, Sq, H, hd)`` / ``k, v (B, T, Kv, hd)``; the ``ref``
+  backend is the materialized-score oracle (``kernels/ref.py``).
+* ``flash_decode`` — the split-KV decode schedule: KV chunks run as
+  *parallel* grid steps emitting online-softmax partials, merged here by
+  :func:`merge_decode_partials` (a tiny (B, H, n_chunks)-sized jnp pass).
+
+``kv_len`` is a runtime ``(B,)`` operand on both ops — decode positions and
+ragged prompts share one compiled kernel (no per-position recompiles).
+
+Block sizes are picked here (:func:`pick_block`): the preferred MXU tiles,
+shrunk to the problem so tiny test shapes do not pay for padded grids.
+:func:`grid_size` is exported for the dispatch guard in
+``models/attention.py`` — interpret-mode emulation pays per grid step, so
+oversized grids fall back to the materialized path off-TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import (
+    DEFAULT_BLOCKS,
+    flash_attention_pallas,
+    flash_decode_pallas,
+)
+from repro.kernels.ref import gqa_attention_ref
+from repro.numerics.registry import get_impl, register_impl, resolve_backend
+
+__all__ = [
+    "flash_attention",
+    "flash_decode",
+    "merge_decode_partials",
+    "pick_block",
+    "grid_size",
+]
+
+
+def _round_up(v: int, k: int) -> int:
+    return (v + k - 1) // k * k
+
+
+def pick_block(n: int, pref: int) -> int:
+    """Preferred tile size, shrunk (8-aligned) when the dim is smaller."""
+    return min(pref, _round_up(max(n, 1), 8))
+
+
+def grid_size(B: int, H: int, Sq: int, T: int, *,
+              bq: int | None = None, bk: int | None = None) -> int:
+    """Grid steps the flash call would run (the interpret-cost guard)."""
+    bq = bq or pick_block(Sq, DEFAULT_BLOCKS[0])
+    bk = bk or pick_block(T, DEFAULT_BLOCKS[1])
+    return B * H * (-(-Sq // bq)) * (-(-T // bk))
+
+
+def merge_decode_partials(o_p: jax.Array, m_p: jax.Array,
+                          l_p: jax.Array) -> jax.Array:
+    """Log-sum-exp merge of split-KV partials.
+
+    o_p: (B, H, hd, n_chunks) f32;  m_p, l_p: (B, H, n_chunks) f32.
+    Returns (B, H, hd) f32.  All-masked chunks carry (o=0, m=-inf, l=0)
+    and weigh out naturally (their exp(m - m_max) underflows to zero).
+    """
+    m_max = jnp.max(m_p, axis=-1, keepdims=True)         # (B, H, 1)
+    w = jnp.exp(m_p - m_max)                             # (B, H, n_chunks)
+    l_tot = jnp.sum(l_p * w, axis=-1)                    # (B, H)
+    o = jnp.einsum("bhdc,bhc->bhd", o_p, w)
+    return o / jnp.maximum(l_tot, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Registry impls.  Shared signatures:
+#   flash_attention: (q, k, v, kv_len, causal, bq, bk) -> (B, Sq, H, hd)
+#   flash_decode:    (q, k, v, kv_len, bk)             -> (B, H, hd) f32
+# ---------------------------------------------------------------------------
+
+
+def _attn_kernel_impl(interpret: bool):
+    def run(q, k, v, kv_len, causal, bq, bk):
+        return flash_attention_pallas(q, k, v, kv_len, causal=causal,
+                                      bq=bq, bk=bk, interpret=interpret)
+    return run
+
+
+def _attn_ref_impl(q, k, v, kv_len, causal, bq, bk):
+    return gqa_attention_ref(q, k, v, kv_len, causal=causal)
+
+
+register_impl("flash_attention", "pallas", _attn_kernel_impl(False))
+register_impl("flash_attention", "interpret", _attn_kernel_impl(True))
+register_impl("flash_attention", "ref", _attn_ref_impl)
+register_impl("flash_attention", "cost", _attn_ref_impl)
+
+
+def _decode_kernel_impl(interpret: bool):
+    def run(q, k, v, kv_len, bk):
+        o_p, m_p, l_p = flash_decode_pallas(q, k, v, kv_len, bk=bk,
+                                            interpret=interpret)
+        return merge_decode_partials(o_p, m_p, l_p)
+    return run
+
+
+def _decode_ref_impl(q, k, v, kv_len, bk):
+    out = gqa_attention_ref(q[:, None], k, v, kv_len, causal=False)
+    return out[:, 0].astype(jnp.float32)
+
+
+register_impl("flash_decode", "pallas", _decode_kernel_impl(False))
+register_impl("flash_decode", "interpret", _decode_kernel_impl(True))
+register_impl("flash_decode", "ref", _decode_ref_impl)
+register_impl("flash_decode", "cost", _decode_ref_impl)
+
+
+# ---------------------------------------------------------------------------
+# Public dispatchers.
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    kv_len: jax.Array | int | None = None,
+    backend: str | None = None,
+    bq: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """Exact attention, no materialized scores.  See module docstring.
+
+    q: (B, Sq, H, hd);  k, v: (B, T, Kv, hd), H % Kv == 0.
+    kv_len: runtime valid-prefix length — scalar or (B,) int32 (None = T).
+    Returns (B, Sq, H, hd) in q's dtype.
+    """
+    B, Sq, H, hd = q.shape
+    T = k.shape[1]
+    bq = bq or pick_block(Sq, DEFAULT_BLOCKS[0])
+    bk = bk or pick_block(T, DEFAULT_BLOCKS[1])
+    if kv_len is not None:
+        kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    impl = get_impl("flash_attention", resolve_backend(backend))
+    return impl(q, k, v, kv_len, causal, bq, bk)
+
+
+def flash_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kv_len: jax.Array | int,
+    backend: str | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """One-token split-KV attention over a (possibly padded) KV cache.
+
+    q: (B, H, hd);  k, v: (B, T, Kv, hd);  kv_len: scalar or (B,) int32.
+    Returns (B, H, hd) f32 (callers cast at the boundary).
+    """
+    B, H, hd = q.shape
+    T = k.shape[1]
+    bk = bk or pick_block(T, DEFAULT_BLOCKS[1])
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    impl = get_impl("flash_decode", resolve_backend(backend))
+    return impl(q, k, v, kv_len, bk)

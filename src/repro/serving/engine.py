@@ -2,10 +2,20 @@
 
 ``ServingEngine`` owns the jitted prefill/decode steps for one model and
 drives request batches: right-padded prompts prefill in one pass, then tokens
-decode one step at a time with the stacked-layer KV/SSM caches updated in
-place (functionally).  Static batching with slot reuse — the engine refills
-finished slots between generate() calls; positions are uniform per batch
-(the decode-step contract), which matches throughput-oriented TPU serving.
+decode with the stacked-layer KV/SSM caches updated in place (functionally).
+Static batching with slot reuse — the engine refills finished slots between
+generate() calls; positions are uniform per batch (the decode-step contract),
+which matches throughput-oriented TPU serving.
+
+Decode loop (DESIGN.md §10): by default the whole loop is **one device
+dispatch** — a jitted ``lax.while_loop`` carrying the cache, a
+device-resident ``(B, max_new)`` token buffer, and per-slot EOS masks, so
+the host synchronizes once per ``generate()`` instead of once per token
+(the per-token round-trip dominated small-step decode latency).
+``fused_loop=False`` keeps the original host-driven loop as the measured
+baseline; both loops are bit-identical by construction (same jitted decode
+step, same sampling fold-in, same EOS/step accounting — pinned by
+tests/test_serving.py).
 
 Under the (SD-)RNS systems the engine makes weights *residue-resident* at
 construction (``prepare=True``, the default): ``model.prepare_params`` runs
@@ -40,24 +50,35 @@ class GenerateResult:
     tokens: np.ndarray          # (B, n_emitted) generated ids
     prefill_logits: np.ndarray  # (B, vocab) — logits of the *prefill* pass
     steps: int                  # decode steps actually executed
+    decode_dispatches: int = 0  # device dispatches issued for the decode loop
 
 
 class ServingEngine:
     def __init__(self, model: Model, params: Any, *, batch: int,
-                 s_max: int, cache_dtype=jnp.bfloat16, prepare: bool = True):
+                 s_max: int, cache_dtype=jnp.bfloat16, prepare: bool = True,
+                 fused_loop: bool = True):
         """``prepare=True`` makes quantized weights residue-resident up
         front (identity under the bns backend); ``prepare=False`` keeps the
         convert-per-call path — useful only as a baseline to measure the
-        conversion overhead against (benchmarks/serving_bench.py)."""
+        conversion overhead against (benchmarks/serving_bench.py).
+
+        ``fused_loop=True`` (default) runs the whole decode loop as one
+        jitted ``lax.while_loop`` dispatch; ``fused_loop=False`` keeps the
+        per-token host loop as the measured baseline."""
         self.model = model
         self.params = model.prepare_params(params) if prepare else params
         self.prepared = prepare
         self.batch = batch
         self.s_max = s_max
         self.cache_dtype = cache_dtype
+        self.fused_loop = fused_loop
         self._prefill = jax.jit(model.prefill, static_argnames=("s_max",))
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
-        self.decode_steps = 0   # cumulative decode-step count (telemetry)
+        self._fused = jax.jit(self._fused_loop_fn,
+                              static_argnames=("max_new_cap", "greedy"),
+                              donate_argnums=(2,))
+        self.decode_steps = 0       # cumulative decode-step count (telemetry)
+        self.decode_dispatches = 0  # cumulative decode dispatches (telemetry)
 
     def generate(self, batch_inputs: dict[str, Any], *, max_new: int,
                  prompt_len: int | None = None,
@@ -89,6 +110,10 @@ class ServingEngine:
                 prompt_len = 0
         tok = self._sample(logits, temperature, key, 0)
         B = tok.shape[0]
+        if self.fused_loop:
+            return self._generate_fused(tok, cache, prompt_len, max_new,
+                                        temperature, key, eos, active,
+                                        prefill_logits)
         done = None
         if eos is not None:
             eos = np.broadcast_to(np.asarray(eos, np.int64), (B,))
@@ -110,9 +135,103 @@ class ServingEngine:
             steps += 1
             tok = self._sample(logits, temperature, key, i + 1)
         self.decode_steps += steps
+        self.decode_dispatches += steps
         return GenerateResult(tokens=np.stack(outs, axis=1),
                               prefill_logits=prefill_logits,
-                              steps=steps)
+                              steps=steps, decode_dispatches=steps)
+
+    # -- fused decode loop ---------------------------------------------------
+
+    def _generate_fused(self, tok, cache, prompt_len, max_new, temperature,
+                        key, eos, active, prefill_logits) -> GenerateResult:
+        """One device dispatch for the whole decode loop."""
+        B = tok.shape[0]
+        if eos is not None:
+            eos_vec = np.broadcast_to(np.asarray(eos, np.int64), (B,))
+            done0 = np.zeros(B, bool) if active is None else \
+                ~np.asarray(active, bool)
+        else:
+            # no EOS: the done mask stays all-False, matching the host
+            # loop's "run the full max_new tokens" contract
+            eos_vec = np.full(B, -1, np.int64)
+            done0 = np.zeros(B, bool)
+        greedy = temperature <= 0.0 or key is None
+        # the token buffer is sized by a power-of-two bucket and the actual
+        # max_new rides as a runtime operand — scheduler rounds with varying
+        # max_new (max over the packed requests) retrace per *bucket*, not
+        # per value (the host loop compiled model.decode exactly once; a
+        # per-value retrace of the whole fused graph would dwarf the
+        # per-token dispatch overhead this loop exists to eliminate)
+        cap = max(8, 1 << (max_new - 1).bit_length())
+        buf, n, steps, _ = self._fused(
+            self.params, tok, cache, jnp.int32(prompt_len),
+            jnp.asarray(np.clip(eos_vec, -1, 2**31 - 1), jnp.int32),
+            jnp.asarray(done0),
+            jnp.float32(temperature),
+            key if key is not None else jax.random.PRNGKey(0),
+            jnp.int32(max_new),
+            max_new_cap=cap, greedy=greedy)
+        n = int(n)          # the single host sync of the whole decode loop
+        steps = int(steps)
+        self.decode_steps += steps
+        self.decode_dispatches += 1
+        return GenerateResult(tokens=np.asarray(buf)[:, :n],
+                              prefill_logits=prefill_logits,
+                              steps=steps, decode_dispatches=1)
+
+    def _fused_loop_fn(self, params, tok0, cache, start_pos, eos, done0,
+                       temperature, key, max_new, *, max_new_cap: int,
+                       greedy: bool):
+        """Device-resident decode loop (jitted; cache donated).
+
+        Carry: (i, halt, tok, cache, done, buf, steps).  Iteration i
+        records token i into the on-device buffer, updates the EOS mask,
+        and — unless every live slot is done or this was the last token —
+        runs one decode step and samples token i+1.  Mirrors the host loop
+        statement for statement so the two are bit-identical.
+
+        ``max_new`` is a runtime scalar (<= the static ``max_new_cap``
+        sizing the buffer), so varying request budgets reuse one trace
+        per bucket.
+        """
+        B = tok0.shape[0]
+        buf0 = jnp.zeros((B, max_new_cap), jnp.int32)
+
+        def sample(logits, step):
+            if greedy:
+                t = jnp.argmax(logits, axis=-1)
+            else:
+                k = jax.random.fold_in(key, step)
+                t = jax.random.categorical(k, logits / temperature, axis=-1)
+            return t[:, None].astype(jnp.int32)
+
+        def cond(st):
+            _, halt = st[0], st[1]
+            return jnp.logical_not(halt)
+
+        def body(st):
+            i, _, tok, cache, done, buf, steps = st
+            buf = jax.lax.dynamic_update_slice(buf, tok, (0, i))
+            done = done | ((eos >= 0) & (tok[:, 0] == eos))
+            halt = jnp.all(done) | (i + 1 >= max_new)
+
+            def step_fn(op):
+                tok, cache, steps = op
+                logits, cache2 = self.model.decode(params, tok, cache,
+                                                   start_pos + i)
+                return sample(logits, i + 1), cache2, steps + 1
+
+            tok, cache, steps = jax.lax.cond(
+                halt, lambda op: op, step_fn, (tok, cache, steps))
+            return (i + 1, halt, tok, cache, done, buf, steps)
+
+        init = (jnp.int32(0), jnp.bool_(False), tok0, cache, done0, buf0,
+                jnp.int32(0))
+        i, _, _, cache, _, buf, steps = jax.lax.while_loop(cond, body, init)
+        # the final cache is returned (and discarded by the caller) so the
+        # donated input cache can alias an output — without it XLA must
+        # keep a second KV-cache copy live for the whole loop
+        return buf, i, steps, cache
 
     @staticmethod
     def _sample(logits: jax.Array, temperature: float,

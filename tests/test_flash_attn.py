@@ -1,7 +1,9 @@
-"""Flash-attention Pallas kernel vs the materialized-softmax oracle.
+"""Flash-attention Pallas kernels vs the materialized-softmax oracle.
 
-Shape/dtype/causality sweeps in interpret mode (the kernel body executes in
-Python on CPU; on TPU the same code JITs to Mosaic)."""
+GQA ratios / causality / ragged runtime kv_len sweeps in interpret mode
+(the kernel body executes via the Pallas interpreter on CPU; on TPU the
+same code JITs to Mosaic), plus the split-KV decode schedule and the
+no-recompile pin for the runtime ``kv_len`` operand."""
 from __future__ import annotations
 
 import jax
@@ -9,58 +11,171 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attn import flash_attention_pallas
-from repro.kernels.ref import flash_attention_ref
+from repro.kernels.flash_attn import (
+    flash_attention_pallas,
+    flash_decode_pallas,
+)
+from repro.kernels.ref import gqa_attention_ref
+from repro.numerics.attention import merge_decode_partials
 
 
 def _rand(key, shape, dtype):
     return (jax.random.normal(key, shape) * 0.5).astype(dtype)
 
 
+def _qkv(seed, B, Sq, H, Kv, hd, T, dtype=jnp.float32):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (_rand(kq, (B, Sq, H, hd), dtype),
+            _rand(kk, (B, T, Kv, hd), dtype),
+            _rand(kv, (B, T, Kv, hd), dtype))
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("group", [1, 2, 4])
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_flash_matches_reference(causal, dtype):
-    key = jax.random.PRNGKey(0)
-    kq, kk, kv = jax.random.split(key, 3)
-    BH, Sq, Skv, hd = 4, 256, 512, 64
-    q = _rand(kq, (BH, Sq, hd), dtype)
-    k = _rand(kk, (BH, Skv, hd), dtype)
-    v = _rand(kv, (BH, Skv, hd), dtype)
-    out = flash_attention_pallas(q, k, v, causal=causal, bq=128, bk=128,
+def test_flash_matches_reference_gqa(group, causal, dtype):
+    B, Sq, T, H, hd = 2, 64, 96, 4, 32
+    Kv = H // group
+    q, k, v = _qkv(0, B, Sq, H, Kv, hd, T, dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=32, bk=32,
                                  interpret=True)
-    ref = flash_attention_ref(q, k, v, causal=causal)
-    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    ref = gqa_attention_ref(q, k, v, causal=causal)
+    tol = _tol(dtype)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
                                rtol=tol, atol=tol)
 
 
-def test_flash_kv_padding_masked():
-    """Zero-padded KV tail beyond kv_len must not affect the output."""
-    key = jax.random.PRNGKey(1)
-    kq, kk, kv = jax.random.split(key, 3)
-    BH, Sq, hd = 2, 128, 64
-    q = _rand(kq, (BH, Sq, hd), jnp.float32)
-    k = _rand(kk, (BH, 256, hd), jnp.float32)
-    v = _rand(kv, (BH, 256, hd), jnp.float32)
-    kv_len = 200
-    k_pad = k.at[:, kv_len:].set(123.0)   # garbage in the padded tail
-    v_pad = v.at[:, kv_len:].set(-55.0)
-    out = flash_attention_pallas(q, k_pad, v_pad, causal=False,
-                                 kv_len=kv_len, bq=128, bk=128,
-                                 interpret=True)
-    ref = flash_attention_ref(q, k, v, causal=False, kv_len=kv_len)
+def test_flash_ragged_kv_len_per_batch():
+    """Per-batch runtime kv_len masks each row's own padded tail."""
+    B, Sq, T, H, Kv, hd = 3, 32, 80, 4, 2, 16
+    q, k, v = _qkv(1, B, Sq, H, Kv, hd, T)
+    kv_len = jnp.array([17, 80, 1], jnp.int32)
+    # garbage in each row's padded tail must not affect the output
+    tails = jnp.arange(T)[None, :, None, None] >= kv_len[:, None, None, None]
+    k_g = jnp.where(tails, 123.0, k)
+    v_g = jnp.where(tails, -55.0, v)
+    out = flash_attention_pallas(q, k_g, v_g, kv_len, causal=False,
+                                 bq=32, bk=32, interpret=True)
+    ref = gqa_attention_ref(q, k, v, kv_len, causal=False)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
 
 
+def test_flash_non_divisible_blocks():
+    """Sq/T need not divide the tiles (OOB tiles are sanitized in-kernel)."""
+    B, Sq, T, H, Kv, hd = 2, 48, 72, 4, 2, 16
+    q, k, v = _qkv(2, B, Sq, H, Kv, hd, T)
+    kv_len = jnp.array([50, 72], jnp.int32)
+    for causal in (True, False):
+        out = flash_attention_pallas(q, k, v, kv_len, causal=causal,
+                                     bq=32, bk=32, interpret=True)
+        ref = gqa_attention_ref(q, k, v, kv_len, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
 def test_flash_block_size_invariance():
-    key = jax.random.PRNGKey(2)
-    kq, kk, kv = jax.random.split(key, 3)
-    q = _rand(kq, (2, 256, 64), jnp.float32)
-    k = _rand(kk, (2, 256, 64), jnp.float32)
-    v = _rand(kv, (2, 256, 64), jnp.float32)
-    o1 = flash_attention_pallas(q, k, v, bq=128, bk=128, interpret=True)
-    o2 = flash_attention_pallas(q, k, v, bq=256, bk=256, interpret=True)
+    q, k, v = _qkv(3, 2, 64, 4, 2, 32, 64)
+    o1 = flash_attention_pallas(q, k, v, bq=32, bk=32, interpret=True)
+    o2 = flash_attention_pallas(q, k, v, bq=64, bk=64, interpret=True)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_flash_kv_len_is_runtime_not_static():
+    """The recompile-per-decode-position regression pin: sweeping kv_len
+    values reuses ONE compiled trace (kv_len is a runtime SMEM operand,
+    not a static)."""
+    q, k, v = _qkv(4, 2, 32, 4, 2, 16, 64)
+    before = flash_attention_pallas._cache_size()
+    outs = [flash_attention_pallas(q, k, v, jnp.full((2,), n, jnp.int32),
+                                   causal=False, bq=32, bk=32,
+                                   interpret=True)
+            for n in (8, 17, 33, 64)]
+    added = flash_attention_pallas._cache_size() - before
+    assert added <= 1, f"kv_len sweep added {added} traces (expected 1)"
+    for n, out in zip((8, 17, 33, 64), outs):
+        ref = gqa_attention_ref(q, k, v, jnp.full((2,), n, jnp.int32),
+                                causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Split-KV decode schedule
+# ---------------------------------------------------------------------------
+
+
+def _decode_ref(q, k, v, kv_len):
+    out = gqa_attention_ref(q[:, None], k, v, kv_len, causal=False)
+    return out[:, 0].astype(jnp.float32)
+
+
+@pytest.mark.parametrize("group", [1, 2, 4])
+@pytest.mark.parametrize("bk", [16, 64, 512])
+def test_flash_decode_matches_reference(group, bk):
+    B, T, H, hd = 3, 100, 4, 32
+    Kv = H // group
+    q, k, v = _qkv(5, B, 1, H, Kv, hd, T)
+    q = q[:, 0]
+    kv_len = jnp.array([5, 64, 100], jnp.int32)
+    o_p, m_p, l_p = flash_decode_pallas(q, k, v, kv_len, bk=bk,
+                                        interpret=True)
+    out = merge_decode_partials(o_p, m_p, l_p)
+    ref = _decode_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_bf16_cache():
+    """Decode reads a bf16 KV cache with f32 queries (the serving mix)."""
+    B, T, H, Kv, hd = 2, 40, 4, 2, 16
+    q, _, _ = _qkv(6, B, 1, H, Kv, hd, T)
+    _, k, v = _qkv(7, B, 1, H, Kv, hd, T, jnp.bfloat16)
+    q = q[:, 0]
+    kv_len = jnp.array([17, 40], jnp.int32)
+    o_p, m_p, l_p = flash_decode_pallas(q, k, v, kv_len, bk=16,
+                                        interpret=True)
+    out = merge_decode_partials(o_p, m_p, l_p)
+    ref = _decode_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_flash_decode_chunk_count_invariance():
+    """Split-KV merge is exact: 1 chunk == many chunks (up to fp assoc)."""
+    B, T, H, Kv, hd = 2, 128, 4, 2, 16
+    q, k, v = _qkv(8, B, 1, H, Kv, hd, T)
+    q = q[:, 0]
+    kv_len = jnp.array([77, 128], jnp.int32)
+    outs = []
+    for bk in (128, 32, 16):
+        o_p, m_p, l_p = flash_decode_pallas(q, k, v, kv_len, bk=bk,
+                                            interpret=True)
+        outs.append(merge_decode_partials(o_p, m_p, l_p))
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_kv_len_is_runtime_not_static():
+    """Every decode position reuses one compiled split-KV kernel."""
+    B, T, H, Kv, hd = 2, 64, 4, 2, 16
+    q, k, v = _qkv(9, B, 1, H, Kv, hd, T)
+    q = q[:, 0]
+    before = flash_decode_pallas._cache_size()
+    for n in (1, 13, 37, 64):
+        flash_decode_pallas(q, k, v, jnp.full((B,), n, jnp.int32), bk=16,
+                            interpret=True)
+    added = flash_decode_pallas._cache_size() - before
+    assert added <= 1, f"kv_len sweep added {added} traces (expected 1)"

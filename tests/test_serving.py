@@ -1,5 +1,6 @@
 """Serving engine behaviours: greedy determinism, batch-row independence,
-temperature sampling validity."""
+temperature sampling validity, and the fused-vs-host decode-loop contract
+(bit-identical tokens/steps, one device dispatch per generate())."""
 from __future__ import annotations
 
 import dataclasses
@@ -21,6 +22,13 @@ def engine():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return ServingEngine(model, params, batch=4, s_max=24), cfg
+
+
+@pytest.fixture(scope="module")
+def host_engine(engine):
+    eng, _ = engine
+    return ServingEngine(eng.model, eng.params, batch=4, s_max=24,
+                         prepare=False, fused_loop=False)
 
 
 def test_greedy_deterministic(engine):
@@ -82,3 +90,119 @@ def test_temperature_sampling_in_range(engine):
     r = eng.generate({"tokens": prompts}, max_new=6, temperature=1.0,
                      key=jax.random.PRNGKey(7))
     assert r.tokens.min() >= 0 and r.tokens.max() < cfg.vocab
+
+
+# ---------------------------------------------------------------------------
+# Fused decode loop: one device dispatch, bit-identical to the host loop.
+# ---------------------------------------------------------------------------
+
+
+def test_fused_loop_is_one_dispatch(engine):
+    """The tentpole pin: generate() issues ONE device dispatch for the
+    whole decode loop, independent of max_new."""
+    eng, cfg = engine
+    assert eng.fused_loop
+    rng = np.random.default_rng(2)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    for max_new in (4, 12):
+        before = eng.decode_dispatches
+        r = eng.generate({"tokens": prompts}, max_new=max_new)
+        assert r.decode_dispatches == 1
+        assert eng.decode_dispatches - before == 1
+        assert r.steps == max_new - 1
+
+
+def test_fused_loop_max_new_is_runtime_within_bucket(engine):
+    """max_new rides as a runtime operand: values sharing a power-of-two
+    buffer bucket reuse ONE compiled trace (scheduler rounds vary max_new
+    every round — a per-value retrace of the decode graph would dwarf the
+    dispatch overhead the fused loop eliminates)."""
+    eng, cfg = engine
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    eng.generate({"tokens": prompts}, max_new=9)    # bucket 16
+    before = eng._fused._cache_size()
+    r12 = eng.generate({"tokens": prompts}, max_new=12)
+    r16 = eng.generate({"tokens": prompts}, max_new=16)
+    assert eng._fused._cache_size() == before       # same bucket, no retrace
+    assert r12.tokens.shape[1] == 12 and r16.tokens.shape[1] == 16
+
+
+def test_fused_loop_matches_host_loop(engine, host_engine):
+    eng, cfg = engine
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    r_f = eng.generate({"tokens": prompts}, max_new=10)
+    r_h = host_engine.generate({"tokens": prompts}, max_new=10)
+    np.testing.assert_array_equal(r_f.tokens, r_h.tokens)
+    np.testing.assert_array_equal(r_f.prefill_logits, r_h.prefill_logits)
+    assert r_f.steps == r_h.steps
+    assert r_h.decode_dispatches == r_h.steps   # the measured baseline
+
+
+def test_fused_loop_eos_parity_with_inactive_slots(engine, host_engine):
+    """Per-slot EOS early stop + inactive padding slots: identical tokens,
+    identical step counters, on both loops."""
+    eng, cfg = engine
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    probe = eng.generate({"tokens": prompts}, max_new=3)
+    eos = probe.tokens[:, 1].astype(np.int64)
+    active = np.array([True, False, True, True])
+    r_f = eng.generate({"tokens": prompts}, max_new=32, eos=eos,
+                       active=active)
+    r_h = host_engine.generate({"tokens": prompts}, max_new=32, eos=eos,
+                               active=active)
+    np.testing.assert_array_equal(r_f.tokens, r_h.tokens)
+    assert r_f.steps == r_h.steps < 31          # early stop actually fired
+    assert r_f.tokens.shape[1] == r_f.steps + 1
+
+
+def test_fused_loop_zero_step_round(engine, host_engine):
+    """All slots inactive -> the prefill token is emitted, zero decodes."""
+    eng, cfg = engine
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    eos = np.zeros(4, np.int64)
+    kw = dict(max_new=16, eos=eos, active=np.zeros(4, bool))
+    r_f = eng.generate({"tokens": prompts}, **kw)
+    r_h = host_engine.generate({"tokens": prompts}, **kw)
+    np.testing.assert_array_equal(r_f.tokens, r_h.tokens)
+    assert r_f.steps == r_h.steps == 0
+    assert r_f.tokens.shape[1] == 1
+
+
+def test_fused_loop_temperature_parity(engine, host_engine):
+    eng, cfg = engine
+    rng = np.random.default_rng(6)
+    prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+    key = jax.random.PRNGKey(11)
+    r_f = eng.generate({"tokens": prompts}, max_new=6, temperature=0.8,
+                       key=key)
+    r_h = host_engine.generate({"tokens": prompts}, max_new=6,
+                               temperature=0.8, key=key)
+    np.testing.assert_array_equal(r_f.tokens, r_h.tokens)
+
+
+def test_residue_resident_decode_identical_under_both_loops():
+    """PR-4 acceptance carry-over: residue-resident decode is bit-identical
+    to per-call conversion, under the fused AND the host loop."""
+    cfg = dataclasses.replace(
+        get_config("yi-6b").reduced(),
+        n_layers=1, d_model=32, d_ff=64, n_heads=2, n_kv=1, head_dim=16,
+        vocab=64, compute_dtype="float32")
+    model = build_model(cfg, system="rns", rns_impl="interpret")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(0, cfg.vocab, (2, 4)).astype(np.int32)
+    results = {}
+    for fused in (True, False):
+        for prepare in (True, False):
+            eng = ServingEngine(model, params, batch=2, s_max=12,
+                                prepare=prepare, fused_loop=fused)
+            results[(fused, prepare)] = eng.generate(
+                {"tokens": prompts}, max_new=6)
+    base = results[(True, True)]
+    for key_, r in results.items():
+        np.testing.assert_array_equal(base.tokens, r.tokens, err_msg=str(key_))
+        assert base.steps == r.steps

@@ -35,12 +35,18 @@ __all__ = [
     "mod_pow2_minus1",
     "mod_pow2",
     "mod_pow2_plus1",
+    "packed_spec",
+    "packed_spec_raw",
+    "encode_packed",
+    "decode_packed",
     "P16",
     "P21",
     "P24",
     "P33",
     "P64",
     "CRT40",
+    "KV8",
+    "KV4",
 ]
 
 
@@ -388,6 +394,104 @@ def special_set(n: int) -> ModuliSet:
     return ModuliSet.make(((1 << n) - 1, 1 << n, (1 << n) + 1))
 
 
+# ---------------------------------------------------------------------------
+# Bit-packed 2-channel residue storage (the residue-domain KV-page format).
+#
+# A 2-channel set {m0 odd, m1 = 2^k} stores each value as two centered
+# residues in adjacent two's-complement bit fields of one byte lane — the
+# storage-side dual of the paper's forward conversion: the residues *are*
+# the stored code, so a load + CRT fold reconstructs the value with shifts,
+# masks and one small multiply (no division).  With the KV4 set the whole
+# pair fits a nibble, so two values pack per byte: 4x fewer bytes at rest
+# than a bf16 lane before the dequant scale is even counted.
+# ---------------------------------------------------------------------------
+
+
+def packed_spec_raw(moduli: Sequence[int]) -> tuple[tuple[int, int], int]:
+    """:func:`packed_spec` for a raw ``(m0, m1)`` pair.
+
+    For kernel code that carries the moduli as a static tuple rather than a
+    ``ModuliSet`` (Pallas wrappers hash their static args).
+    """
+    if len(moduli) != 2:
+        raise ValueError(f"packed layout needs 2 moduli, got {tuple(moduli)}")
+    m0, m1 = moduli
+    if m0 % 2 == 0 or m1 & (m1 - 1) != 0:
+        raise ValueError(
+            f"packed layout needs (odd, power-of-two) moduli, "
+            f"got {tuple(moduli)}")
+    b0, b1 = (m0 - 1).bit_length(), (m1 - 1).bit_length()
+    w = b0 + b1
+    if w not in (1, 2, 4, 8):
+        raise ValueError(
+            f"packed field widths {b0}+{b1} must sum to a divisor of 8")
+    return (b0, b1), 8 // w
+
+
+def packed_spec(mset: ModuliSet) -> tuple[tuple[int, int], int]:
+    """((b0, b1) field widths, values-per-byte) for a packable 2-channel set.
+
+    Requires exactly two moduli — the first odd, the second a power of two —
+    whose two's-complement field widths sum to a divisor of 8 (so packed
+    lanes tile bytes exactly).  Raises ValueError otherwise.
+    """
+    return packed_spec_raw(mset.moduli)
+
+
+def encode_packed(x: jax.Array, mset: ModuliSet) -> jax.Array:
+    """Forward-convert int32 values (..., N) to packed residue bytes.
+
+    Each value's centered residues land in two's-complement bit fields
+    (``packed_spec`` widths); ``8 // (b0 + b1)`` values share a byte along
+    the last axis (N must divide evenly).  Returns (..., N / vpb) uint8.
+    """
+    (b0, b1), vpb = packed_spec(mset)
+    r = mset.to_residues(x.astype(jnp.int32), centered=True)   # (2, ..., N)
+    # two's-complement masking: centered residues fit the fields by
+    # construction (+m1/2 wraps to -m1/2, the same residue class mod 2^b1)
+    lane = (r[0] & ((1 << b0) - 1)) | ((r[1] & ((1 << b1) - 1)) << b0)
+    if vpb == 1:
+        return lane.astype(jnp.uint8)
+    n = lane.shape[-1]
+    if n % vpb:
+        raise ValueError(f"last axis {n} must divide values-per-byte {vpb}")
+    lanes = lane.reshape(*lane.shape[:-1], n // vpb, vpb)
+    w = b0 + b1
+    byte = jnp.zeros(lanes.shape[:-1], jnp.int32)
+    for i in range(vpb):
+        byte = byte | (lanes[..., i] << (i * w))
+    return byte.astype(jnp.uint8)
+
+
+def decode_packed(packed: jax.Array, mset: ModuliSet) -> jax.Array:
+    """Reverse conversion of :func:`encode_packed` bytes to int32 values.
+
+    Pure vector ops (shifts, masks, one small multiply) — usable inside a
+    Pallas kernel body as the fused dequant load.  Exact for every value in
+    the centered range ``[-M/2, M/2)``.
+    """
+    (b0, b1), vpb = packed_spec(mset)
+    m0, m1 = mset.moduli
+    w = b0 + b1
+    byte = packed.astype(jnp.int32)
+    if vpb > 1:
+        lanes = jnp.stack([(byte >> (i * w)) & ((1 << w) - 1)
+                           for i in range(vpb)], axis=-1)
+        lane = lanes.reshape(*packed.shape[:-1], packed.shape[-1] * vpb)
+    else:
+        lane = byte
+    f0 = lane & ((1 << b0) - 1)
+    f1 = (lane >> b0) & ((1 << b1) - 1)
+    # sign-extend the fields; any representative of the residue class works
+    # (the CRT fold below reduces mod m0 / is exact mod the power of two)
+    r0 = f0 - ((f0 >> (b0 - 1)) << b0)
+    r1 = f1 - ((f1 >> (b1 - 1)) << b1)
+    inv = modinv(m1 % m0, m0)
+    t = jnp.remainder((r0 - r1) * inv, m0)          # canonical [0, m0)
+    t = jnp.where(t > (m0 - 1) // 2, t - m0, t)     # centered
+    return r1 + m1 * t
+
+
 # The paper's Table-I precision rows (P=16/24/32/64 <-> n=5/8/11/21) plus the
 # TPU-native sweet spot P21 (n=7: every centered residue fits int8 -> MXU) and
 # a 6-channel int8-friendly wide set (~2^42 dynamic range).
@@ -397,3 +501,9 @@ P24 = special_set(8)
 P33 = special_set(11)
 P64 = special_set(21)
 CRT40 = ModuliSet.make((121, 125, 127, 128, 129, 131))
+
+# Packable 2-channel sets for residue-domain KV pages (numerics/kv_pages.py):
+# KV8 = {15, 16} — one byte per value (4+4-bit fields), range ±120 (int7 codes);
+# KV4 = {3, 4}   — one nibble per value (2+2-bit fields), range ±6 (int3 codes).
+KV8 = ModuliSet.make((15, 16))
+KV4 = ModuliSet.make((3, 4))

@@ -50,9 +50,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.moduli import modinv, packed_spec_raw
 from repro.kernels import compat
 
-__all__ = ["flash_attention_pallas", "flash_decode_pallas", "DEFAULT_BLOCKS"]
+__all__ = ["flash_attention_pallas", "flash_decode_pallas",
+           "flash_paged_decode_pallas", "DEFAULT_BLOCKS"]
 
 DEFAULT_BLOCKS = (256, 512)   # (bq, bk)
 _NEG_INF = -1e30
@@ -265,3 +267,166 @@ def flash_decode_pallas(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(kv_len, q, k, v)
+
+
+def _unpack_crt(byte: jax.Array, moduli: tuple[int, int]) -> jax.Array:
+    """Bit-packed centered 2-channel residues -> int32 values, in-register.
+
+    ``byte`` is int32-widened uint8 of shape (rows, hd/vpb).  Each byte holds
+    ``vpb`` lanes of ``b0+b1`` bits: channel-0 residue in the low ``b0`` bits,
+    channel-1 in the next ``b1``, both two's-complement.  CRT fold with the
+    power-of-two modulus as the anchor: X = r1 + m1 * center((r0 - r1) *
+    inv(m1 mod m0, m0) mod m0).  Exact over [-M/2, M/2).
+    """
+    (b0, b1), vpb = packed_spec_raw(moduli)
+    m0, m1 = moduli
+    w = b0 + b1
+    if vpb > 1:
+        lanes = jnp.stack(
+            [(byte >> (i * w)) & ((1 << w) - 1) for i in range(vpb)], axis=-1)
+        lane = lanes.reshape(byte.shape[0], byte.shape[1] * vpb)
+    else:
+        lane = byte
+    f0 = lane & ((1 << b0) - 1)
+    f1 = (lane >> b0) & ((1 << b1) - 1)
+    r0 = f0 - ((f0 >> (b0 - 1)) << b0)           # sign-extend both fields
+    r1 = f1 - ((f1 >> (b1 - 1)) << b1)
+    inv = modinv(m1 % m0, m0)
+    t = jax.lax.rem((r0 - r1) * inv, jnp.int32(m0))
+    t = jnp.where(t < 0, t + m0, t)              # canonical residue mod m0
+    t = jnp.where(t > (m0 - 1) // 2, t - m0, t)  # centered
+    return r1 + m1 * t
+
+
+def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, *rest, ps: int,
+                         scale: float, moduli: tuple[int, int] | None):
+    """One (b, h, j) grid step: page ``tab[b, j]`` of the split-KV schedule.
+
+    The scalar-prefetched block table already steered the BlockSpec index
+    maps at page ``tab[b, j]``, so the kernel body only sees this request's
+    j-th page; masking is against the *logical* row ``j*ps + slot`` exactly
+    like the dense chunk kernel.  With ``moduli`` set, k/v arrive as packed
+    uint8 residue planes plus an f32 per-(slot, head... ) scale block and are
+    dequantized in-register before the dot products.
+    """
+    if moduli is None:
+        k_ref, v_ref, o_ref, m_ref, l_ref = rest
+    else:
+        k_ref, v_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    kv_len = kvlen_ref[b]
+    k_rows = j * ps + jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)
+    valid = k_rows < kv_len
+    if moduli is None:
+        kb = k_ref[0, :, 0, :]
+        vb = v_ref[0, :, 0, :]
+    else:
+        kb = _unpack_crt(k_ref[0, :, 0, :].astype(jnp.int32), moduli)
+        vb = _unpack_crt(v_ref[0, :, 0, :].astype(jnp.int32), moduli)
+        kb = kb.astype(jnp.float32) * ks_ref[0, :, 0, :]   # (ps, 1) scale
+        vb = vb.astype(jnp.float32) * vs_ref[0, :, 0, :]
+    kb = jnp.where(valid, kb, 0.0)
+    vb = jnp.where(valid, vb, 0.0)
+    qb = q_ref[0]                                        # (1, hd)
+    s = jax.lax.dot_general(
+        qb, kb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (1, ps)
+    s = jnp.where(valid.T, s, _NEG_INF)
+    m_c = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid.T, jnp.exp(s - m_c), 0.0)
+    l_c = jnp.sum(p, axis=-1, keepdims=True)
+    o_c = jax.lax.dot_general(
+        p.astype(vb.dtype), vb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (1, hd)
+    o_ref[0, 0, :, 0] = o_c[0].astype(jnp.float32)
+    m_ref[0, 0, 0] = m_c[0, 0]
+    l_ref[0, 0, 0] = l_c[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "moduli",
+                                             "interpret"))
+def flash_paged_decode_pallas(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tab: jax.Array,
+    kv_len: jax.Array,
+    *,
+    page_size: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    moduli: tuple[int, int] | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Split-KV decode over a *paged* cache: chunk boundary == page boundary.
+
+    The per-request page list is a **scalar-prefetch** operand: the grid's
+    chunk axis walks ``block_tab[b]`` and the BlockSpec index map fetches
+    page ``tab[b, j]`` of the pool, so the dense ``T`` axis never exists on
+    device.  With ``moduli`` the pages are bit-packed residue planes and
+    dequantization fuses into the KV load.
+
+    Args:
+      q: (B, H, hd) decode-token queries.
+      k_pages, v_pages: (P, ps, Kv, hd) pool (cache dtype), or with
+        ``moduli`` set the packed planes (P, ps, Kv, hd/vpb) uint8 plus
+        ``k_scale``/``v_scale`` (P, ps, Kv, 1) f32.
+      block_tab: (B, n_pmax) int32 page ids per request; entries past the
+        live prefix may point anywhere (masked by ``kv_len``).
+      kv_len: (B,) int32 valid-prefix length (<= n_pmax * page_size).
+    Returns:
+      ``(o (B, H, hd, n_pmax), m (B, H, n_pmax), l (B, H, n_pmax))`` f32
+      partials for :func:`repro.numerics.attention.merge_decode_partials`.
+    """
+    interpret = compat.resolve_interpret(interpret)
+    B, H, hd = q.shape
+    _, ps, Kv, _ = k_pages.shape
+    assert ps == page_size, (ps, page_size)
+    assert H % Kv == 0, (H, Kv)
+    g = H // Kv
+    block_tab = jnp.asarray(block_tab, jnp.int32)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    n_pmax = block_tab.shape[1]
+    hd_store = k_pages.shape[-1]
+
+    # all index maps receive the scalar-prefetch refs after the grid coords
+    in_specs = [
+        pl.BlockSpec((1, 1, hd), lambda b, h, j, tab, kvl: (b, h, 0)),
+        pl.BlockSpec((1, ps, 1, hd_store),
+                     lambda b, h, j, tab, kvl: (tab[b, j], 0, h // g, 0)),
+        pl.BlockSpec((1, ps, 1, hd_store),
+                     lambda b, h, j, tab, kvl: (tab[b, j], 0, h // g, 0)),
+    ]
+    operands = [q, k_pages, v_pages]
+    if moduli is not None:
+        assert k_scale is not None and v_scale is not None
+        for _ in range(2):
+            in_specs.append(pl.BlockSpec(
+                (1, ps, 1, 1),
+                lambda b, h, j, tab, kvl: (tab[b, j], 0, h // g, 0)))
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, n_pmax),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, hd, 1), lambda b, h, j, tab, kvl: (b, h, 0, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, j, tab, kvl: (b, h, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, j, tab, kvl: (b, h, j)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, ps=ps,
+                          scale=1.0 / (hd ** 0.5), moduli=moduli),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, hd, n_pmax), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_pmax), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_pmax), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(block_tab, kv_len, *operands)

@@ -67,6 +67,9 @@ class Model:
     input_specs: Callable[[ShapeConfig], dict[str, Any]]
     cache_roles: Callable[[Any], Any]
     prepare_params: Callable[[Any], Any]
+    # paged serving (block-table KV pool); None for families without a
+    # paged decode path (encdec / ssm / hybrid)
+    decode_paged: Callable[..., tuple[jax.Array, Any]] | None = None
 
 
 MOE_AUX_WEIGHT = 0.01
@@ -179,9 +182,12 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
             return encdec_mod.init_encdec_cache(cfg, batch, s_max, dtype)
         return tf_mod.init_lm_cache(cfg, batch, s_max, dtype)
 
-    def prefill(params, batch, s_max=None):
+    def prefill(params, batch, s_max=None, logits_at=None):
         """Prompt -> (last logits, cache).  ``s_max`` (static) sizes the
-        produced KV cache; defaults to the prompt length."""
+        produced KV cache; defaults to the prompt length.  ``logits_at``
+        ((B,) int32 runtime, decoder-only families) reads each row's logits
+        at that position instead of the last — the paged serving path
+        right-pads ragged prompts and gathers at ``plen - 1``."""
         if is_encdec:
             return encdec_mod.encdec_prefill(
                 params, cfg, batch["frames"], batch["tokens"], s_max=s_max,
@@ -189,9 +195,9 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
         if cfg.family == "vlm":
             return tf_mod.lm_prefill(params, cfg, batch["tokens"],
                                      s_max=s_max, patches=batch["patches"],
-                                     dense_kw=dense_kw)
+                                     dense_kw=dense_kw, logits_at=logits_at)
         return tf_mod.lm_prefill(params, cfg, batch["tokens"], s_max=s_max,
-                                 dense_kw=dense_kw)
+                                 dense_kw=dense_kw, logits_at=logits_at)
 
     def decode(params, token, cache, pos):
         if is_encdec:
@@ -199,6 +205,15 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
                                             dense_kw=dense_kw)
         return tf_mod.lm_decode(params, cfg, token, cache, pos,
                                 dense_kw=dense_kw)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def decode_paged(params, token, kv, block_tab, pos, *, page_size,
+                         cache_dtype=jnp.bfloat16):
+            return tf_mod.lm_decode_paged(
+                params, cfg, token, kv, block_tab, pos, page_size=page_size,
+                dense_kw=dense_kw, cache_dtype=cache_dtype)
+    else:
+        decode_paged = None
 
     # -- dry-run input specs ---------------------------------------------------
     def input_specs(shape: ShapeConfig) -> dict[str, Any]:
@@ -267,4 +282,4 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
     return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
                  decode=decode, init_cache=init_cache,
                  input_specs=input_specs, cache_roles=cache_roles,
-                 prepare_params=prepare_params)
+                 prepare_params=prepare_params, decode_paged=decode_paged)

@@ -50,11 +50,13 @@ import jax.numpy as jnp
 from repro.models import linear
 from repro.models.layers import rmsnorm, rope
 from repro.numerics import attention as nxattn
+from repro.numerics import kv_pages as nxkv
 from repro.numerics.registry import resolve_backend
 from repro.parallel.sharding import constrain, constrain_any, get_shard_ctx
 
 __all__ = ["init_attention", "attention", "prefill_attention",
-           "decode_attention", "KVCache", "init_kv_cache", "set_attn_impl"]
+           "decode_attention", "paged_decode_attention", "KVCache",
+           "init_kv_cache", "set_attn_impl"]
 
 CHUNK_THRESHOLD = 8192   # switch to scan-over-query-chunks above this S
 Q_CHUNK = 1024
@@ -366,3 +368,67 @@ def decode_attention(
                     q_pos=jnp.full((1,), pos, jnp.int32), kv_pos=kv_pos,
                     kv_mask=kv_mask, cache_mode=True)
     return linear.dense(params["wo"], out, **dense_kw), cache
+
+
+def _paged_backend(B: int, H: int, n_pmax: int) -> str:
+    """Registry backend for the paged decode op (always the registry — the
+    "ref" impl gathers the page list into a dense cache and materializes, so
+    there is no separate `_core` fallback to route to)."""
+    if get_shard_ctx() is not None:
+        return "ref"   # engines gate paged off under a mesh; be safe anyway
+    backend = resolve_backend(_IMPL_OVERRIDE)
+    if (backend == "interpret" and _IMPL_OVERRIDE is None
+            and nxattn.paged_grid_size(B, H, n_pmax) > _INTERPRET_GRID_CAP):
+        return "ref"
+    return backend
+
+
+def paged_decode_attention(
+    params: dict[str, Any],
+    x: jax.Array,
+    kv_layer: "nxkv.PagedKV",
+    block_tab: jax.Array,
+    pos: jax.Array,
+    *,
+    page_size: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    qk_norm: bool = False,
+    rope_theta: float = 1e4,
+    dense_kw: dict[str, Any] | None = None,
+    apply_rope: bool = True,
+    cache_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, "nxkv.PagedKV"]:
+    """One decode step over one layer's *paged* KV pool.
+
+    x: (B, 1, D);  pos: **(B,) int32 per-slot positions** — under continuous
+    batching each slot sits at its own depth, so positions, the append
+    target, and ``kv_len`` are all per-slot runtime vectors (the dense path's
+    scalar ``pos`` is the uniform special case).  The new token's K/V are
+    quantized/cast into page ``block_tab[b, pos // ps]`` offset ``pos % ps``;
+    attention walks the slot's page list inside the kernel.  ``cache_dtype``
+    matches the dense prefill cache so decode-appended residue pages hold
+    byte-identical content to prefill-scattered ones (prefix reuse relies on
+    page bytes being a pure function of the token prefix).
+    """
+    dense_kw = dense_kw or {}
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]
+    q, k, v = _project_qkv(params, x, n_heads=n_heads, n_kv=n_kv,
+                           head_dim=head_dim, qk_norm=qk_norm,
+                           positions=positions, rope_theta=rope_theta,
+                           dense_kw=dense_kw, apply_rope=apply_rope)
+    n_pmax = block_tab.shape[1]
+    page_idx = jnp.clip(pos // page_size, 0, n_pmax - 1)
+    pages = jnp.take_along_axis(block_tab, page_idx[:, None], axis=1)[:, 0]
+    offs = pos % page_size
+    kv_layer = nxkv.append_token(kv_layer,
+                                 k[:, 0].astype(cache_dtype),
+                                 v[:, 0].astype(cache_dtype), pages, offs)
+    backend = _paged_backend(B, n_heads, n_pmax)
+    o = nxattn.paged_decode(q[:, 0], kv_layer, block_tab, kv_len=pos + 1,
+                            page_size=page_size, backend=backend)
+    out = o.astype(q.dtype).reshape(B, 1, n_heads * head_dim)
+    return linear.dense(params["wo"], out, **dense_kw), kv_layer

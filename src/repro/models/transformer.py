@@ -58,7 +58,7 @@ def _sp(x, *roles):
     return constrain(x, *roles)
 
 __all__ = ["init_lm", "lm_forward", "lm_prefill", "lm_decode",
-           "init_lm_cache", "ssm_dims", "hybrid_groups"]
+           "lm_decode_paged", "init_lm_cache", "ssm_dims", "hybrid_groups"]
 
 
 def ssm_dims(cfg: ArchConfig) -> Mamba2Dims:
@@ -332,12 +332,19 @@ def lm_prefill(
     patches: jax.Array | None = None,
     dense_kw: dict[str, Any] | None = None,
     cache_dtype=jnp.bfloat16,
+    logits_at: jax.Array | None = None,
 ) -> tuple[jax.Array, Any]:
     """Process the prompt and *produce* the cache (padded to ``s_max``).
 
     The cache is built from the layer scan's stacked outputs — no
     zero-initialized cache argument, so exactly one cache buffer is ever
     live (the xs/ys double-buffer dominated the 32k/500k cells' memory).
+
+    ``logits_at``: optional (B,) int32 *runtime* positions to read logits
+    from instead of the last row — the paged serving path right-pads ragged
+    prompts (causal attention keeps prefix rows exact regardless of the
+    padded tail, so page contents stay a pure function of the token prefix)
+    and gathers each request's logits at ``plen - 1``.
     """
     dense_kw = dense_kw or {}
     compute_dtype = jnp.dtype(cfg.compute_dtype)
@@ -418,7 +425,12 @@ def lm_prefill(
     else:
         raise ValueError(cfg.family)
 
-    logits = _logits(params, cfg, x[:, -1:], dense_kw)
+    if logits_at is not None:
+        B = x.shape[0]
+        xg = x[jnp.arange(B), jnp.asarray(logits_at, jnp.int32)][:, None]
+        logits = _logits(params, cfg, xg, dense_kw)
+    else:
+        logits = _logits(params, cfg, x[:, -1:], dense_kw)
     return logits[:, 0], new_cache
 
 
@@ -550,3 +562,66 @@ def lm_decode(
 
     logits = _logits(params, cfg, x, dense_kw)
     return logits[:, 0], new_cache
+
+
+def lm_decode_paged(
+    params: dict[str, Any],
+    cfg: ArchConfig,
+    token: jax.Array,
+    kv,
+    block_tab: jax.Array,
+    pos: jax.Array,
+    *,
+    page_size: int,
+    dense_kw: dict[str, Any] | None = None,
+    cache_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Any]:
+    """One decode step against the *paged* KV pool (dense/moe/vlm families).
+
+    token: (B, 1) int32;  kv: :class:`~repro.numerics.kv_pages.PagedKV` with
+    leaves stacked over layers;  block_tab: (B, n_pmax) int32 page lists;
+    pos: **(B,) int32 per-slot positions** — continuous batching decodes
+    every slot at its own depth in one dispatch.  Returns
+    ``(logits (B, vocab), kv)``.  The pool rides the layer scan as carry
+    exactly like the dense cache (in-place update on the donated buffer);
+    ResidueTensor pools carry their planes+scale leaves through the same
+    scan untouched.
+    """
+    from repro.numerics import kv_pages as kvp
+
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged decode supports dense/moe/vlm, not {cfg.family!r}")
+    dense_kw = dense_kw or {}
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"]["table"].astype(compute_dtype)[token]  # (B, 1, d)
+    x = constrain(x, "dp", None, None)
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+               qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+               dense_kw=dense_kw, apply_rope=not cfg.is_encdec)
+    L = cfg.n_layers
+
+    def body(carry, inp):
+        x, kv = carry
+        i, lp = inp
+        lay = kvp.layer_slice(kv, i)
+        h, lay2 = attn_mod.paged_decode_attention(
+            lp["attn"], rmsnorm(lp["attn_norm"], x), lay, block_tab, pos,
+            page_size=page_size, cache_dtype=cache_dtype, **akw)
+        kv = kvp.layer_update(kv, i, lay2)
+        x = x + h
+        h = rmsnorm(lp["mlp_norm"], x)
+        if cfg.family == "moe":
+            h, _ = moe_mod.moe(lp["moe"], h, n_experts=cfg.n_experts,
+                               top_k=cfg.top_k, capacity_factor=cfg.moe_cf,
+                               dense_kw=dense_kw)
+        else:
+            fn = (mlp_mod.gelu_mlp if cfg.mlp_type == "gelu"
+                  else mlp_mod.swiglu)
+            h = fn(lp["mlp"], h, dense_kw)
+        return (x + h, kv), None
+
+    (x, kv), _ = jax.lax.scan(
+        body, (x, kv), (jnp.arange(L, dtype=jnp.int32), params["layers"]))
+    logits = _logits(params, cfg, x, dense_kw)
+    return logits[:, 0], kv

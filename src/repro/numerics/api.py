@@ -35,8 +35,11 @@ class EncodeSpec:
     """Static recipe for a forward conversion (hashable — a jit static).
 
     layout: "rns" | "sd" | "sd_matvec" — which kernel family the planes
-      target ("sd_matvec" pins the decode-shaped matvec schedule).
-    mset: the moduli set (sd layouts need a special 2^n-1/2^n/2^n+1 set).
+      target ("sd_matvec" pins the decode-shaped matvec schedule) — or
+      "rns_pack", the bit-packed 2-channel *storage* layout of the
+      residue-domain KV pages (decode-only; no matmul kernels).
+    mset: the moduli set (sd layouts need a special 2^n-1/2^n/2^n+1 set;
+      rns_pack needs a packable (odd, power-of-two) pair).
     qbits: quantization bit width.  Float inputs to :func:`encode` are
       quantized to this width; integer inputs use it only as the magnitude
       bound provenance.
@@ -92,6 +95,8 @@ def encode(w: jax.Array, spec: EncodeSpec | None = None, *,
         w, scale = quantize_symmetric(w, spec.qbits, axis=spec.quant_axis)
     if spec.layout == "rns":
         planes = runners.encode_rns_planes(w, spec.mset)
+    elif spec.layout == "rns_pack":
+        planes = runners.encode_packed_planes(w, spec.mset)
     else:
         planes = runners.encode_sd_planes(w, spec.mset)
     return ResidueTensor(planes=planes, scale=scale, mset=spec.mset,

@@ -30,16 +30,21 @@ from repro.kernels.flash_attn import (
     DEFAULT_BLOCKS,
     flash_attention_pallas,
     flash_decode_pallas,
+    flash_paged_decode_pallas,
 )
 from repro.kernels.ref import gqa_attention_ref
+from repro.numerics import kv_pages as _kv
 from repro.numerics.registry import get_impl, register_impl, resolve_backend
 
 __all__ = [
     "flash_attention",
     "flash_decode",
+    "paged_decode",
     "merge_decode_partials",
     "pick_block",
     "grid_size",
+    "paged_grid_size",
+    "set_decode_block",
 ]
 
 
@@ -58,6 +63,29 @@ def grid_size(B: int, H: int, Sq: int, T: int, *,
     bq = bq or pick_block(Sq, DEFAULT_BLOCKS[0])
     bk = bk or pick_block(T, DEFAULT_BLOCKS[1])
     return B * H * (-(-Sq // bq)) * (-(-T // bk))
+
+
+def paged_grid_size(B: int, H: int, n_pmax: int) -> int:
+    """Grid steps of the paged decode kernel (one per block-table entry)."""
+    return B * H * n_pmax
+
+
+_DECODE_BLOCK_OVERRIDE: int | None = None
+
+
+def set_decode_block(bk: int | None) -> int | None:
+    """Override the dense split-KV decode chunk size (None restores auto).
+
+    Aligning the dense chunk boundary with the paged page boundary makes
+    paged-vs-dense decode *bit*-identical even when the KV prefix spans
+    multiple chunks: both schedules then emit the same set of per-chunk
+    partials and run the same merge.  Returns the previous override so
+    callers can restore it.
+    """
+    global _DECODE_BLOCK_OVERRIDE
+    prev = _DECODE_BLOCK_OVERRIDE
+    _DECODE_BLOCK_OVERRIDE = bk
+    return prev
 
 
 def merge_decode_partials(o_p: jax.Array, m_p: jax.Array,
@@ -118,6 +146,48 @@ register_impl("flash_decode", "ref", _decode_ref_impl)
 register_impl("flash_decode", "cost", _decode_ref_impl)
 
 
+# flash_paged_decode: (q, k_raw, v_raw, k_scale, v_scale, fmt, tab, kv_len,
+#                      page_size) -> (B, H, hd) f32
+# k_raw/v_raw are the unwrapped pool leaves: (P, ps, Kv, hd) cache dtype for
+# dense pages, (P, ps, Kv, hd/vpb) uint8 planes (+ (P, ps, Kv, 1) f32
+# scales) for residue pages.  fmt is the static KVFormat.
+
+def _paged_kernel_impl(interpret: bool):
+    def run(q, k_raw, v_raw, k_scale, v_scale, fmt, tab, kv_len, page_size):
+        moduli = fmt.mset.moduli if fmt.is_residue else None
+        o_p, m_p, l_p = flash_paged_decode_pallas(
+            q, k_raw, v_raw, tab, kv_len, page_size=page_size,
+            k_scale=k_scale, v_scale=v_scale, moduli=moduli,
+            interpret=interpret)
+        return merge_decode_partials(o_p, m_p, l_p)
+    return run
+
+
+def _paged_ref_impl(q, k_raw, v_raw, k_scale, v_scale, fmt, tab, kv_len,
+                    page_size):
+    """Oracle: gather the page list into a dense cache, dequantize, attend."""
+    B, n_pmax = tab.shape
+
+    def dense_of(raw, scale):
+        pages = raw[tab]                       # (B, n_pmax, ps, Kv, hd?)
+        if fmt.is_residue:
+            from repro.core.moduli import decode_packed
+            vals = decode_packed(pages.astype(jnp.int32), fmt.mset)
+            pages = vals.astype(jnp.float32) * scale[tab]
+        return pages.reshape(B, n_pmax * page_size, *pages.shape[3:])
+
+    k = dense_of(k_raw, k_scale)
+    v = dense_of(v_raw, v_scale)
+    out = gqa_attention_ref(q[:, None], k, v, kv_len, causal=False)
+    return out[:, 0].astype(jnp.float32)
+
+
+register_impl("flash_paged_decode", "pallas", _paged_kernel_impl(False))
+register_impl("flash_paged_decode", "interpret", _paged_kernel_impl(True))
+register_impl("flash_paged_decode", "ref", _paged_ref_impl)
+register_impl("flash_paged_decode", "cost", _paged_ref_impl)
+
+
 # ---------------------------------------------------------------------------
 # Public dispatchers.
 # ---------------------------------------------------------------------------
@@ -166,7 +236,42 @@ def flash_decode(
     """
     B, H, hd = q.shape
     T = k.shape[1]
-    bk = bk or pick_block(T, DEFAULT_BLOCKS[1])
+    bk = bk or _DECODE_BLOCK_OVERRIDE or pick_block(T, DEFAULT_BLOCKS[1])
     kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
     impl = get_impl("flash_decode", resolve_backend(backend))
     return impl(q, k, v, kv_len, bk)
+
+
+def paged_decode(
+    q: jax.Array,
+    kv_layer: "_kv.PagedKV",
+    block_tab: jax.Array,
+    kv_len: jax.Array,
+    *,
+    page_size: int,
+    backend: str | None = None,
+) -> jax.Array:
+    """One-token split-KV attention over one layer's *paged* cache.
+
+    The request's page list (``block_tab`` row) is walked by the kernel's
+    scalar-prefetch index map — the chunk boundary IS the page boundary, and
+    residue pages dequantize inside the KV load.
+
+    q: (B, H, hd);  kv_layer: per-layer :class:`~repro.numerics.kv_pages.
+    PagedKV` (no leading L axis);  block_tab: (B, n_pmax) int32;  kv_len:
+    scalar or (B,) int32 logical prefix length.  Returns (B, H, hd) f32.
+    """
+    B = q.shape[0]
+    fmt = _kv.kv_format_of(kv_layer)
+    if fmt.is_residue:
+        k_raw = jnp.squeeze(kv_layer.k.planes, axis=-3)
+        v_raw = jnp.squeeze(kv_layer.v.planes, axis=-3)
+        k_scale, v_scale = kv_layer.k.scale, kv_layer.v.scale
+    else:
+        k_raw, v_raw = kv_layer.k, kv_layer.v
+        k_scale = v_scale = None
+    block_tab = jnp.asarray(block_tab, jnp.int32)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    impl = get_impl("flash_paged_decode", resolve_backend(backend))
+    return impl(q, k_raw, v_raw, k_scale, v_scale, fmt, block_tab, kv_len,
+                page_size)

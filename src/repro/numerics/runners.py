@@ -177,6 +177,18 @@ def encode_rns_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
     return jnp.moveaxis(res, 0, -3).astype(_res_dtype(mset))
 
 
+def encode_packed_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
+    """Integer values (..., K, N) -> bit-packed planes (..., 1, K, N/vpb).
+
+    The ``rns_pack`` storage layout (KV pages): both centered residues of a
+    packable 2-channel set share byte lanes (``core/moduli.encode_packed``);
+    the size-1 channel axis keeps the scan-sliceable ResidueTensor contract.
+    """
+    from repro.core.moduli import encode_packed
+
+    return encode_packed(w, mset)[..., None, :, :]
+
+
 def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend, shard=None):
     """Shared runner: activation conversion + segmentation + kernel dispatch.
 

@@ -10,8 +10,12 @@ Everything the dispatch surface needs to pick a kernel rides on the tensor:
   friendly).  Layout ``"rns"``: ``(*stack, C, K, N)`` centered residue
   planes (int8 when the moduli allow).  Layouts ``"sd"``/``"sd_matvec"``:
   ``(*stack, C, K, N, n)`` int8 signed-digit planes, digit axis LSB-first.
-  The channel axis lands *after* any leading stack axes so prepared
-  parameter trees slice cleanly under ``jax.lax.scan``.
+  Layout ``"rns_pack"``: ``(*stack, 1, K, N/vpb)`` uint8 — both centered
+  residues of a packable 2-channel set bit-packed into byte lanes
+  (``core/moduli.packed_spec``), the storage format of the residue-domain
+  KV pages (``numerics/kv_pages.py``); a storage-only layout (decode
+  before arithmetic).  The channel axis lands *after* any leading stack
+  axes so prepared parameter trees slice cleanly under ``jax.lax.scan``.
 * ``scale``   — optional dequantization scale (a second leaf), broadcastable
   against the decoded ``(*stack, K, N)`` value; carried by quantized
   weights so the float epilogue travels with the planes.
@@ -36,11 +40,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.moduli import ModuliSet
+from repro.core.moduli import ModuliSet, decode_packed, packed_spec
 
 __all__ = ["LAYOUTS", "ResidueTensor"]
 
-LAYOUTS = ("rns", "sd", "sd_matvec")
+LAYOUTS = ("rns", "sd", "sd_matvec", "rns_pack")
 
 
 def _digit_width(mset: ModuliSet) -> int:
@@ -74,19 +78,26 @@ class ResidueTensor:
                 f"unknown layout {self.layout!r}; expected one of {LAYOUTS}")
         if self.mset is None:
             raise ValueError("ResidueTensor needs a ModuliSet")
-        need = 3 if self.layout == "rns" else 4
+        need = 4 if self.is_sd else 3
         if self.planes.ndim < need:
             raise ValueError(
                 f"{self.layout} planes need >= {need} dims "
                 f"(*stack, C, K, N{', n' if need == 4 else ''}), "
                 f"got shape {self.planes.shape}")
+        if self.layout == "rns_pack":
+            packed_spec(self.mset)   # raises unless the set is packable
+            if self.planes.shape[self.channel_axis] != 1:
+                raise ValueError(
+                    "rns_pack planes pack both residue channels into one "
+                    f"byte axis (size-1 channel dim), got {self.planes.shape}")
+            return
         C = self.mset.num_channels
         if self.planes.shape[self.channel_axis] != C:
             raise ValueError(
                 f"planes carry {self.planes.shape[self.channel_axis]} "
                 f"channels at axis {self.channel_axis} but mset "
                 f"{self.mset.moduli} has {C}")
-        if self.layout != "rns":
+        if self.is_sd:
             n = _digit_width(self.mset)
             if self.planes.shape[-1] != n:
                 raise ValueError(
@@ -112,11 +123,11 @@ class ResidueTensor:
     @property
     def channel_axis(self) -> int:
         """Axis of the moduli-channel dimension (after any stack axes)."""
-        return self.planes.ndim - (3 if self.layout == "rns" else 4)
+        return self.planes.ndim - (4 if self.is_sd else 3)
 
     @property
     def is_sd(self) -> bool:
-        return self.layout != "rns"
+        return self.layout in ("sd", "sd_matvec")
 
     @property
     def digit_width(self) -> int:
@@ -129,6 +140,8 @@ class ResidueTensor:
         if self.is_sd:
             del s[-1]
         del s[self.channel_axis]
+        if self.layout == "rns_pack":
+            s[-1] *= packed_spec(self.mset)[1]   # values per byte
         return tuple(s)
 
     @property
@@ -230,6 +243,10 @@ class ResidueTensor:
     def _check_ring_op(self, other: "ResidueTensor") -> None:
         if not isinstance(other, ResidueTensor):
             raise TypeError(f"expected ResidueTensor, got {type(other)}")
+        if "rns_pack" in (self.layout, other.layout):
+            raise ValueError(
+                "rns_pack is a storage layout (bit-packed KV pages); "
+                "decode before arithmetic")
         if self.mset.moduli != other.mset.moduli:
             raise ValueError(
                 f"moduli mismatch: {self.mset.moduli} vs {other.mset.moduli}")
@@ -256,6 +273,9 @@ class ResidueTensor:
         """
         from repro.core import sdrns
 
+        if self.layout == "rns_pack":
+            packed = jnp.squeeze(self.planes, axis=self.channel_axis)
+            return decode_packed(packed, self.mset)
         cf = self._channel_first()
         if self.is_sd:
             return sdrns.sdrns_decode(cf, self.mset)
@@ -292,11 +312,13 @@ class ResidueTensor:
         # digit-wise / plane-wise in both layouts — no carry chain at all
         if self.scale is not None:
             raise ValueError("negation of scaled tensors is ill-defined")
+        if self.layout == "rns_pack":
+            raise ValueError("rns_pack is a storage layout; decode first")
         return self._with_planes((-self.planes).astype(self.planes.dtype))
 
     def flush(self) -> "ResidueTensor":
         """Reduce rns planes to centered canonical form (sd digits are
         already closed over {-1, 0, 1}; no-op there)."""
-        if self.is_sd:
+        if self.is_sd or self.layout == "rns_pack":
             return self
         return self._with_planes(self._center(self.planes))

@@ -34,6 +34,7 @@ launch/dryrun.py compiles exactly these for the decode_32k / long_500k cells.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any
 
 import jax
@@ -41,8 +42,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.numerics import kv_pages as kvp
+from repro.parallel.sharding import get_shard_ctx
+from repro.serving.kv_pool import KVPagePool
 
-__all__ = ["ServingEngine", "GenerateResult"]
+__all__ = ["ServingEngine", "GenerateResult", "SegmentResult"]
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -51,12 +57,24 @@ class GenerateResult:
     prefill_logits: np.ndarray  # (B, vocab) — logits of the *prefill* pass
     steps: int                  # decode steps actually executed
     decode_dispatches: int = 0  # device dispatches issued for the decode loop
+    pages_allocated: int = 0    # KV pages taken from the pool (paged path)
+    pages_freed: int = 0        # KV pages returned (paged path)
+
+
+@dataclasses.dataclass
+class SegmentResult:
+    """One continuous-batching decode segment (one fused dispatch)."""
+    tokens: np.ndarray   # (B, n) tokens emitted this segment, all slots
+    steps: int           # decode steps executed (== n)
+    done: np.ndarray     # (B,) bool — per-slot finished mask at exit
 
 
 class ServingEngine:
     def __init__(self, model: Model, params: Any, *, batch: int,
                  s_max: int, cache_dtype=jnp.bfloat16, prepare: bool = True,
-                 fused_loop: bool = True):
+                 fused_loop: bool = True, paged: bool | None = None,
+                 page_size: int = 64, kv_format: str = "bf16",
+                 num_pages: int | None = None, prefix_cache: bool = True):
         """``prepare=True`` makes quantized weights residue-resident up
         front (identity under the bns backend); ``prepare=False`` keeps the
         convert-per-call path — useful only as a baseline to measure the
@@ -64,7 +82,19 @@ class ServingEngine:
 
         ``fused_loop=True`` (default) runs the whole decode loop as one
         jitted ``lax.while_loop`` dispatch; ``fused_loop=False`` keeps the
-        per-token host loop as the measured baseline."""
+        per-token host loop as the measured baseline.
+
+        Paged KV serving (the default where supported): ``paged=None``
+        enables the block-table page pool whenever the family has a paged
+        decode path, the fused loop is on, and no mesh is installed;
+        ``paged=False`` pins the dense contiguous cache.  ``page_size``
+        is the page length in tokens (== the split-KV flash-decode chunk);
+        ``kv_format`` picks the page storage — ``"bf16"`` (bit-identical
+        to the dense cache), ``"rns8"`` or ``"rns4"`` (packed residue
+        planes, ~1.9x / ~3.6x fewer cache bytes, tolerance-pinned);
+        ``num_pages`` sizes the pool (default: full capacity for ``batch``
+        slots plus one dump page); ``prefix_cache`` enables shared-prefix
+        page reuse on the scheduler's admission path."""
         self.model = model
         self.params = model.prepare_params(params) if prepare else params
         self.prepared = prepare
@@ -79,6 +109,64 @@ class ServingEngine:
                               donate_argnums=(2,))
         self.decode_steps = 0       # cumulative decode-step count (telemetry)
         self.decode_dispatches = 0  # cumulative decode dispatches (telemetry)
+        self.fused_retraces = 0     # fused-loop traces beyond the first
+        self._trace_count = 0
+
+        supported = (fused_loop and model.decode_paged is not None
+                     and get_shard_ctx() is None)
+        if paged is None:
+            paged = supported
+        elif paged and not supported:
+            logger.info("paged serving unsupported here (fused_loop=%s, "
+                        "family=%s, mesh=%s) — falling back to dense",
+                        fused_loop, model.cfg.family,
+                        get_shard_ctx() is not None)
+            paged = False
+        self.paged = paged
+        self.page_size = page_size
+        self.kv_format = kv_format
+        if paged:
+            self.n_pmax = -(-s_max // page_size)
+            if num_pages is None:
+                num_pages = 1 + batch * self.n_pmax
+            cfg = model.cfg
+            self.pool = KVPagePool(cfg.n_layers, num_pages, page_size,
+                                   cfg.n_kv, cfg.hd, fmt=kv_format,
+                                   dtype=cache_dtype,
+                                   prefix_cache=prefix_cache)
+            self._scatter = jax.jit(kvp.scatter_prefill,
+                                    static_argnames=("page_size",),
+                                    donate_argnums=(0,))
+            self._fused_paged = jax.jit(self._fused_paged_fn,
+                                        static_argnames=("seg_cap", "greedy"),
+                                        donate_argnums=(2,))
+        else:
+            self.pool = None
+
+    # -- trace accounting (satellite: silent per-bucket retraces) ------------
+
+    def fused_cache_size(self) -> int:
+        """Compiled-trace count of the active fused decode loop."""
+        fn = self._fused_paged if self.paged else self._fused
+        try:
+            return fn._cache_size()
+        except AttributeError:      # pragma: no cover - older jax
+            return -1
+
+    def _note_fused_dispatch(self, bucket: int) -> None:
+        cur = self.fused_cache_size()
+        if cur > self._trace_count:
+            if self._trace_count > 0:
+                self.fused_retraces += cur - self._trace_count
+            logger.info(
+                "fused decode loop traced for bucket cap=%d (%d trace(s) "
+                "total, %d retrace(s))", bucket, cur, self.fused_retraces)
+            self._trace_count = cur
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Power-of-two trace bucket for decode-loop lengths."""
+        return max(8, 1 << (max(n, 1) - 1).bit_length())
 
     def generate(self, batch_inputs: dict[str, Any], *, max_new: int,
                  prompt_len: int | None = None,
@@ -110,6 +198,10 @@ class ServingEngine:
                 prompt_len = 0
         tok = self._sample(logits, temperature, key, 0)
         B = tok.shape[0]
+        if self.paged:
+            return self._generate_paged(tok, cache, prompt_len, max_new,
+                                        temperature, key, eos, active,
+                                        prefill_logits)
         if self.fused_loop:
             return self._generate_fused(tok, cache, prompt_len, max_new,
                                         temperature, key, eos, active,
@@ -162,7 +254,7 @@ class ServingEngine:
         # per value (the host loop compiled model.decode exactly once; a
         # per-value retrace of the whole fused graph would dwarf the
         # per-token dispatch overhead this loop exists to eliminate)
-        cap = max(8, 1 << (max_new - 1).bit_length())
+        cap = self._bucket(max_new)
         buf, n, steps, _ = self._fused(
             self.params, tok, cache, jnp.int32(prompt_len),
             jnp.asarray(np.clip(eos_vec, -1, 2**31 - 1), jnp.int32),
@@ -171,6 +263,7 @@ class ServingEngine:
             key if key is not None else jax.random.PRNGKey(0),
             jnp.int32(max_new),
             max_new_cap=cap, greedy=greedy)
+        self._note_fused_dispatch(cap)
         n = int(n)          # the single host sync of the whole decode loop
         steps = int(steps)
         self.decode_steps += steps
@@ -232,6 +325,197 @@ class ServingEngine:
         # donated input cache can alias an output — without it XLA must
         # keep a second KV-cache copy live for the whole loop
         return buf, i, steps, cache
+
+    # -- paged decode loop ---------------------------------------------------
+
+    def _fused_paged_fn(self, params, tok0, kv, tab, pos0, eos, done_in,
+                        remaining, temperature, key, seg, key_base,
+                        stop_flag, *, seg_cap: int, greedy: bool):
+        """Device-resident paged decode *segment* (jitted; pool donated).
+
+        The caller has already recorded ``tok0`` (the prefill sample, or
+        the last token of the previous segment); iteration i feeds the
+        current token through the paged decode step at per-slot position
+        ``pos0 + i`` and records the *next* token into ``buf[:, i]``.
+
+        Per-slot ``remaining`` budgets (tokens left after ``tok0``) feed
+        the done mask, so ragged request budgets coexist in one segment;
+        ``seg`` (<= the static ``seg_cap`` sizing the buffer) bounds the
+        segment length, and ``stop_flag`` halts the segment as soon as any
+        slot *newly* finishes — the continuous scheduler's signal to admit
+        a queued request into the freed slot.  Finished slots keep decoding
+        harmlessly until the segment ends: their writes land in their own
+        (already exclusive) pages or the dump page, and the scheduler
+        truncates their rows on the host — this keeps the loop's sampled
+        token stream bit-identical to the dense fused loop.
+        """
+        B = tok0.shape[0]
+        buf0 = jnp.zeros((B, seg_cap), jnp.int32)
+        done0 = (done_in | ((eos >= 0) & (tok0[:, 0] == eos))
+                 | (remaining <= 0))
+        fin0 = done0
+
+        def sample(logits, step):
+            if greedy:
+                t = jnp.argmax(logits, axis=-1)
+            else:
+                k = jax.random.fold_in(key, step)
+                t = jax.random.categorical(k, logits / temperature, axis=-1)
+            return t[:, None].astype(jnp.int32)
+
+        def cond(st):
+            return jnp.logical_not(st[1])
+
+        def body(st):
+            i, _, tok, kv, done, buf, steps = st
+            logits, kv2 = self.model.decode_paged(
+                params, tok, kv, tab, pos0 + i,
+                page_size=self.page_size, cache_dtype=self.cache_dtype)
+            tok2 = sample(logits, key_base + i + 1)
+            buf = jax.lax.dynamic_update_slice(buf, tok2, (0, i))
+            done = (done | ((eos >= 0) & (tok2[:, 0] == eos))
+                    | (i + 1 >= remaining))
+            halt = (jnp.all(done) | (i + 1 >= seg)
+                    | (stop_flag & jnp.any(done & ~fin0)))
+            return (i + 1, halt, tok2, kv2, done, buf, steps + 1)
+
+        init = (jnp.int32(0), jnp.all(done0) | (seg <= 0), tok0, kv,
+                done0, buf0, jnp.int32(0))
+        i, _, _, kv, done, buf, steps = jax.lax.while_loop(cond, body, init)
+        return buf, i, steps, kv, done
+
+    def _dispatch_segment(self, tok0, pos0, eos_vec, done0, remaining,
+                          tabs, seg, temperature, key, key_base,
+                          stop_on_finish, greedy):
+        """Shared fused-paged dispatch: generate() and the continuous
+        scheduler both funnel through here.  Returns (tokens, steps, done)
+        with tokens already truncated to the emitted count."""
+        cap = self._bucket(seg)
+        buf, n, steps, kv, done = self._fused_paged(
+            self.params, tok0, self.pool.kv,
+            jnp.asarray(tabs, jnp.int32),
+            jnp.asarray(pos0, jnp.int32),
+            jnp.asarray(np.clip(eos_vec, -1, 2**31 - 1), jnp.int32),
+            jnp.asarray(done0),
+            jnp.asarray(remaining, jnp.int32),
+            jnp.float32(temperature),
+            key if key is not None else jax.random.PRNGKey(0),
+            jnp.int32(seg), jnp.int32(key_base),
+            jnp.bool_(stop_on_finish),
+            seg_cap=cap, greedy=greedy)
+        self.pool.kv = kv      # donated in, aliased out
+        self._note_fused_dispatch(cap)
+        n = int(n)             # the single host sync of the segment
+        steps = int(steps)
+        self.decode_steps += steps
+        self.decode_dispatches += 1
+        return np.asarray(buf)[:, :n], steps, np.asarray(done)
+
+    def _generate_paged(self, tok, cache, prompt_len, max_new, temperature,
+                        key, eos, active, prefill_logits) -> GenerateResult:
+        """generate() over the paged pool — same contract (and, for bf16
+        pages, the same bits) as the dense fused loop."""
+        B = tok.shape[0]
+        if eos is not None:
+            eos_vec = np.broadcast_to(np.asarray(eos, np.int64), (B,))
+            done0 = np.zeros(B, bool) if active is None else \
+                ~np.asarray(active, bool)
+        else:
+            eos_vec = np.full(B, -1, np.int64)
+            done0 = np.zeros(B, bool)
+        greedy = temperature <= 0.0 or key is None
+        pool = self.pool
+        pool.reset()    # generate() owns the whole pool for this call
+        a0 = pool.stats.snapshot()
+        n_pages = min(-(-(prompt_len + max_new) // self.page_size),
+                      self.n_pmax)
+        slot_pages = [pool.alloc(n_pages) for _ in range(B)]
+        tabs = np.stack([pool.tab_row(p, self.n_pmax) for p in slot_pages])
+        tab_dev = jnp.asarray(tabs)
+        pool.kv = self._scatter(pool.kv, cache.k, cache.v, tab_dev,
+                                page_size=self.page_size)
+        # tok0 is recorded on the host; the device segment emits the rest.
+        # remaining = max_new - 1 further tokens; seg bounds the segment at
+        # the same count, so steps/halting match the dense loop exactly.
+        buf, steps, _ = self._dispatch_segment(
+            tok, np.full(B, prompt_len, np.int32), eos_vec, done0,
+            np.full(B, max_new - 1, np.int32), tab_dev,
+            max_new - 1, temperature, key, 0, False, greedy)
+        tokens = np.concatenate([np.asarray(tok), buf], axis=1)
+        for p in slot_pages:
+            pool.release(p)
+        return GenerateResult(
+            tokens=tokens, prefill_logits=prefill_logits, steps=steps,
+            decode_dispatches=1,
+            pages_allocated=pool.stats.pages_allocated - a0.pages_allocated,
+            pages_freed=pool.stats.pages_freed - a0.pages_freed)
+
+    # -- continuous-batching admission / segment API -------------------------
+
+    def admit_prefill(self, slot_tokens: dict[int, np.ndarray],
+                      slot_total: dict[int, int]):
+        """Admit requests into slots: allocate pages (sharing prompt-prefix
+        pages), prefill the slots that need it in one right-padded batch,
+        and scatter the fresh KV into the pool.
+
+        ``slot_tokens`` maps slot index -> prompt tokens; ``slot_total``
+        bounds each request's final KV length (prompt + budget).  Returns
+        ``{slot: (prefill_logits_row, AdmitInfo)}`` — rows come from the
+        prefill dispatch or, when the whole prompt was page-aligned and
+        prefix-cached, from the logits cache (the prefill is skipped).
+        """
+        pool = self.pool
+        infos = {s: pool.admit(np.asarray(slot_tokens[s]), slot_total[s])
+                 for s in sorted(slot_tokens)}
+        need = [s for s, inf in infos.items() if inf.cached_logits is None]
+        out = {s: (infos[s].cached_logits, infos[s]) for s in infos
+               if infos[s].cached_logits is not None}
+        if not need:
+            return out
+        s_buck = min(self._bucket(max(len(slot_tokens[s]) for s in need)),
+                     self.n_pmax * self.page_size)
+        prompts = np.zeros((self.batch, s_buck), np.int64)
+        logits_at = np.zeros(self.batch, np.int32)
+        tabs = np.zeros((self.batch, self.n_pmax), np.int32)
+        for s in need:
+            toks = np.asarray(slot_tokens[s])
+            prompts[s, : len(toks)] = toks
+            logits_at[s] = len(toks) - 1
+            tabs[s] = pool.tab_row(infos[s].pages, self.n_pmax)
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompts)}, s_max=s_buck,
+            logits_at=jnp.asarray(logits_at))
+        logits = np.asarray(logits)
+        # non-admitted rows keep all-dump tab rows, so their padding
+        # garbage scatters into the dump page; prefix-shared pages are
+        # rewritten with identical bytes (page contents are a pure
+        # function of the token prefix)
+        pool.kv = self._scatter(pool.kv, cache.k, cache.v,
+                                jnp.asarray(tabs),
+                                page_size=self.page_size)
+        for s in need:
+            pool.remember_logits(slot_tokens[s], logits[s])
+            out[s] = (logits[s], infos[s])
+        return out
+
+    def paged_segment(self, tok0, pos0, remaining, eos_vec, done0, tabs, *,
+                      seg: int, stop_on_finish: bool,
+                      temperature: float = 0.0,
+                      key: jax.Array | None = None,
+                      key_base: int = 0) -> SegmentResult:
+        """Run one continuous-batching decode segment (one fused dispatch).
+
+        ``tok0 (B, 1)``: each slot's current last token (already emitted);
+        ``pos0 (B,)``: the position its KV row lands at; ``remaining``:
+        per-slot token budgets after ``tok0``.  ``stop_on_finish=True``
+        ends the segment early when a slot newly finishes, so the
+        scheduler can retire it and admit from the queue.
+        """
+        greedy = temperature <= 0.0 or key is None
+        buf, steps, done = self._dispatch_segment(
+            jnp.asarray(tok0, jnp.int32), pos0, eos_vec, done0, remaining,
+            tabs, seg, temperature, key, key_base, stop_on_finish, greedy)
+        return SegmentResult(tokens=buf, steps=steps, done=done)
 
     @staticmethod
     def _sample(logits: jax.Array, temperature: float,

@@ -1,0 +1,211 @@
+"""Block-table page pool: host-side allocator for the paged KV cache.
+
+The device side (page pools, quantized residue planes, scatter/append) lives
+in :mod:`repro.numerics.kv_pages`; this module owns everything the host
+tracks about those pages:
+
+* a **free list** over pages ``1..P-1`` — page 0 is the reserved *dump*
+  page: every block-table entry defaults to it, so writes from inactive
+  slots, finished slots overrunning their budget, or the padded tail of a
+  prompt scatter all land somewhere harmless that no live slot ever attends
+  to (``kv_len`` masks it out of live reads).
+* **refcounts** per page, because prefix sharing lets several requests hold
+  the same prompt page.
+* the **prefix cache**: ``tokens[:j*ps] -> page id`` for every *full* page
+  of an admitted prompt.  K/V rows are per-position functions of (token,
+  position) only, and quantization is deterministic, so a page's bytes are
+  a pure function of the token prefix — two requests with the same first
+  ``j*ps`` tokens can share the physical page.  A re-admission that hits
+  rewrites the page with identical bytes (harmless) and skips paying for
+  new capacity; when the *whole* prompt is page-aligned and previously
+  seen, the cached prefill logits let admission skip the prefill dispatch
+  entirely.
+* pages whose refcount drops to zero but that back a prefix-cache entry
+  stay *cached-free*: not on the free list, but reclaimable (evicted
+  oldest-entry-first) when the free list runs dry.
+
+State machine per page:  free -> active(ref>0) -> [cached-free -> active]*
+-> free (on release of an uncached page, or eviction of a cached one).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.numerics import kv_pages as kvp
+
+__all__ = ["KVPagePool", "AdmitInfo", "PoolStats"]
+
+_LOGITS_CACHE_CAP = 512
+
+
+@dataclasses.dataclass
+class PoolStats:
+    pages_allocated: int = 0
+    pages_freed: int = 0
+    prefix_hits: int = 0
+    prefill_skips: int = 0
+    evictions: int = 0
+
+    def snapshot(self) -> "PoolStats":
+        return dataclasses.replace(self)
+
+
+@dataclasses.dataclass
+class AdmitInfo:
+    pages: list[int]              # full page list (prompt + decode region)
+    prefix_hits: int              # prompt pages reused from the prefix cache
+    pages_allocated: int          # newly allocated pages
+    cached_logits: np.ndarray | None  # set iff prefill can be skipped
+
+
+class KVPagePool:
+    def __init__(self, n_layers: int, num_pages: int, page_size: int,
+                 n_kv: int, head_dim: int, *, fmt: str = "bf16",
+                 dtype=jnp.bfloat16, prefix_cache: bool = True):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the dump page)")
+        self.n_layers = n_layers
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.n_kv = n_kv
+        self.head_dim = head_dim
+        self.fmt = kvp.KV_FORMATS[fmt] if isinstance(fmt, str) else fmt
+        self.dtype = dtype
+        self.prefix_enabled = prefix_cache
+        self.kv = kvp.make_paged_kv(n_layers, num_pages, page_size, n_kv,
+                                    head_dim, fmt=self.fmt, dtype=dtype)
+        self.stats = PoolStats()
+        self._init_host_state()
+
+    def _init_host_state(self) -> None:
+        self._free: list[int] = list(range(self.num_pages - 1, 0, -1))
+        self._ref = np.zeros(self.num_pages, np.int64)
+        self._prefix: dict[tuple, int] = {}        # token-prefix -> page
+        self._page_key: dict[int, tuple] = {}      # page -> its prefix key
+        self._logits: dict[tuple, np.ndarray] = {}  # full prompt -> logits
+
+    def reset(self) -> None:
+        """Drop all host allocator state (device bytes just go stale)."""
+        self._init_host_state()
+
+    # -- allocation ----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        """Immediately free pages (cached-free pages are on top of this)."""
+        return len(self._free)
+
+    def _alloc_one(self) -> int:
+        if self._free:
+            pid = self._free.pop()
+        else:
+            pid = next((p for p in self._page_key if self._ref[p] == 0),
+                       None)
+            if pid is None:
+                raise RuntimeError("KV page pool exhausted")
+            self._evict(pid)
+        self._ref[pid] = 1
+        self.stats.pages_allocated += 1
+        return pid
+
+    def _evict(self, pid: int) -> None:
+        key = self._page_key.pop(pid)
+        self._prefix.pop(key, None)
+        self.stats.evictions += 1
+
+    def alloc(self, n: int) -> list[int]:
+        """n exclusive pages (no prefix sharing) — the generate() path."""
+        return [self._alloc_one() for _ in range(n)]
+
+    def release(self, pages: list[int]) -> None:
+        """Drop one reference per page; uncached pages return to the free
+        list, prefix-cached ones become cached-free (reclaimable)."""
+        for pid in pages:
+            if pid == 0:
+                continue
+            self._ref[pid] -= 1
+            if self._ref[pid] > 0:
+                continue
+            self.stats.pages_freed += 1
+            if pid not in self._page_key:
+                self._free.append(pid)
+
+    # -- admission -----------------------------------------------------------
+
+    def admit(self, tokens: np.ndarray, total_positions: int) -> AdmitInfo:
+        """Page list for a request: shared full prompt pages + exclusive
+        rest (partial prompt page and decode region).
+
+        ``total_positions`` bounds the request's final KV length (prompt +
+        token budget); the returned list covers ``ceil(total / ps)`` pages.
+        """
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int64)
+        plen = len(tokens)
+        n_need = -(-max(total_positions, plen) // ps)
+        n_full = plen // ps
+        pages: list[int] = []
+        hits = fresh = 0
+        for j in range(n_full):
+            key = tuple(tokens[: (j + 1) * ps])
+            pid = self._prefix.get(key) if self.prefix_enabled else None
+            if pid is not None:
+                if self._ref[pid] == 0:
+                    # cached-free page comes back into service
+                    self.stats.pages_allocated += 1
+                self._ref[pid] += 1
+                hits += 1
+            else:
+                pid = self._alloc_one()
+                fresh += 1
+                if self.prefix_enabled:
+                    if pid in self._page_key:
+                        self._evict(pid)
+                    self._prefix[key] = pid
+                    self._page_key[pid] = key
+            pages.append(pid)
+        for _ in range(n_need - n_full):
+            pages.append(self._alloc_one())
+            fresh += 1
+        self.stats.prefix_hits += hits
+
+        cached = None
+        if (self.prefix_enabled and plen and plen % ps == 0
+                and hits == n_full):
+            cached = self._logits.get(tuple(tokens))
+            if cached is not None:
+                self.stats.prefill_skips += 1
+        return AdmitInfo(pages=pages, prefix_hits=hits,
+                         pages_allocated=fresh, cached_logits=cached)
+
+    def remember_logits(self, tokens: np.ndarray, logits: np.ndarray) -> None:
+        """Cache a prompt's prefill logits for future prefill skips."""
+        if not self.prefix_enabled:
+            return
+        if len(self._logits) >= _LOGITS_CACHE_CAP:
+            self._logits.pop(next(iter(self._logits)))
+        self._logits[tuple(np.asarray(tokens, np.int64))] = \
+            np.asarray(logits)
+
+    # -- accounting ----------------------------------------------------------
+
+    def tab_row(self, pages: list[int], n_pmax: int) -> np.ndarray:
+        """(n_pmax,) block-table row: the page list, dump-padded."""
+        row = np.zeros(n_pmax, np.int32)
+        row[: len(pages)] = pages
+        return row
+
+    def bytes_per_resident_token(self) -> int:
+        """KV bytes one resident token occupies across all layers."""
+        return self.n_layers * kvp.bytes_per_token(
+            self.fmt, self.n_kv, self.head_dim, self.dtype)
+
+    def pool_bytes(self) -> int:
+        return kvp.kv_pool_bytes(self.kv)
+
+    def stats_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self.stats)

@@ -1,17 +1,30 @@
-"""Request scheduler: packs a request queue into fixed-size engine batches.
+"""Request scheduler: continuous batching over the paged engine.
 
-Slot-reuse ("continuous batching lite"): the engine's decode step is
-uniform-position static batching (the TPU-throughput layout the dry-run
-compiles), so admission happens at batch boundaries — the scheduler packs
-up to ``batch`` requests per round, pads short prompts to the round's
-maximum with a pad token, decodes until every member hits EOS or
-``max_new``, then refills freed slots from the queue.  Per-request results
-keep their own lengths; padded positions are masked out of the returned
-token streams.
+Two scheduling modes, picked by the engine's configuration:
+
+* **Continuous batching** (``engine.paged``, the default): requests admit
+  into any free slot *mid-decode* — the engine decodes in fused segments
+  that halt as soon as a slot finishes (``stop_on_finish``), the scheduler
+  retires it immediately (freeing its KV pages back to the pool) and
+  admits the next queued request into the freed slot with one batched
+  right-padded prefill.  Ragged prompt lengths and token budgets coexist
+  in one batch: each slot carries its own position and remaining budget
+  into the segment, so no request waits for the round's stragglers.
+  Identical prompt prefixes share KV pages (and page-aligned repeat
+  prompts skip prefill entirely) via the engine's pool.
+
+* **Fixed rounds** (dense engines, ``fused_loop=False`` baselines): the
+  original batch-boundary admission — pack up to ``batch`` requests,
+  right-align prompts to the round's maximum, decode until every member
+  hits EOS or ``max_new``, then refill all slots from the queue.
+
+Per-request results keep their own lengths; both modes fill the same
+telemetry fields on the returned :class:`Request`.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Sequence
 
 import numpy as np
@@ -29,6 +42,23 @@ class Request:
     eos: int | None = None
 
     result: np.ndarray | None = None   # filled by the scheduler
+    # -- per-request telemetry (filled by the scheduler) ---------------------
+    decode_steps: int = 0         # fused decode steps this request rode in
+    decode_dispatches: int = 0    # decode segments it participated in
+    pages_allocated: int = 0      # KV pages newly allocated at admission
+    pages_freed: int = 0          # KV pages released at retirement
+    prefix_hits: int = 0          # prompt pages reused from the prefix cache
+    prefill_skipped: bool = False  # whole prompt cached -> no prefill pass
+    latency_s: float = 0.0        # serve() entry -> this request completed
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one live request slot (continuous mode)."""
+    req: Request
+    emitted: list[int]            # tokens emitted so far (incl. tok0)
+    tab: np.ndarray               # (n_pmax,) block-table row
+    pages: list[int]              # pages to release at retirement
 
 
 class RequestScheduler:
@@ -40,12 +70,113 @@ class RequestScheduler:
         """Serve all requests; returns them with ``result`` filled."""
         queue = list(requests)
         done: list[Request] = []
-        B = self.engine.batch
-        while queue:
-            round_reqs = queue[:B]
-            queue = queue[B:]
-            done += self._run_round(round_reqs)
+        self._t0 = time.perf_counter()
+        if self.engine.paged:
+            done = self._serve_continuous(queue)
+        else:
+            B = self.engine.batch
+            while queue:
+                round_reqs = queue[:B]
+                queue = queue[B:]
+                done += self._run_round(round_reqs)
         return sorted(done, key=lambda r: r.rid)
+
+    # -- continuous batching (paged engine) ----------------------------------
+
+    def _serve_continuous(self, queue: list[Request]) -> list[Request]:
+        eng = self.engine
+        B = eng.batch
+        cap = eng.n_pmax * eng.page_size      # per-request KV capacity
+        slots: dict[int, _Slot] = {}
+        finished: list[Request] = []
+
+        def admit(free: list[int]) -> None:
+            batch_toks: dict[int, np.ndarray] = {}
+            batch_total: dict[int, int] = {}
+            pend: dict[int, Request] = {}
+            for s in free:
+                if not queue:
+                    break
+                r = queue.pop(0)
+                pend[s] = r
+                batch_toks[s] = np.asarray(r.tokens, np.int32)
+                batch_total[s] = min(len(r.tokens) + r.max_new, cap)
+            if not pend:
+                return
+            admitted = eng.admit_prefill(batch_toks, batch_total)
+            for s, r in pend.items():
+                logits, info = admitted[s]
+                r.pages_allocated = info.pages_allocated
+                r.prefix_hits = info.prefix_hits
+                r.prefill_skipped = info.cached_logits is not None
+                tok0 = int(np.argmax(logits))
+                slot = _Slot(req=r, emitted=[tok0],
+                             tab=eng.pool.tab_row(info.pages, eng.n_pmax),
+                             pages=info.pages)
+                if (r.eos is not None and tok0 == r.eos) \
+                        or r.max_new <= 1:
+                    retire(slot)          # finished on the prefill token
+                else:
+                    slots[s] = slot
+
+        def retire(slot: _Slot) -> None:
+            r = slot.req
+            toks = np.asarray(slot.emitted[: r.max_new], np.int32)
+            if r.eos is not None:
+                hits = np.nonzero(toks == r.eos)[0]
+                if hits.size:
+                    toks = toks[: hits[0] + 1]
+            r.result = toks
+            freed_before = eng.pool.stats.pages_freed
+            eng.pool.release(slot.pages)
+            r.pages_freed = eng.pool.stats.pages_freed - freed_before
+            r.latency_s = time.perf_counter() - self._t0
+            finished.append(r)
+
+        while queue or slots:
+            free = [s for s in range(B) if s not in slots]
+            if queue and free:
+                admit(free)
+            if not slots:
+                continue    # admitted requests all finished on prefill
+            tok0 = np.zeros((B, 1), np.int32)
+            pos0 = np.zeros(B, np.int32)
+            remaining = np.zeros(B, np.int32)
+            eos_vec = np.full(B, -1, np.int64)
+            done0 = np.ones(B, bool)
+            tabs = np.zeros((B, eng.n_pmax), np.int32)
+            for s, sl in slots.items():
+                r = sl.req
+                tok0[s, 0] = sl.emitted[-1]
+                pos0[s] = len(r.tokens) + len(sl.emitted) - 1
+                remaining[s] = r.max_new - len(sl.emitted)
+                if r.eos is not None:
+                    eos_vec[s] = r.eos
+                done0[s] = False
+                tabs[s] = sl.tab
+            seg = int(remaining.max())
+            res = eng.paged_segment(
+                tok0, pos0, remaining, eos_vec, done0, tabs,
+                seg=seg, stop_on_finish=bool(queue))
+            for s, sl in list(slots.items()):
+                r = sl.req
+                take = min(res.steps, r.max_new - len(sl.emitted))
+                row = res.tokens[s, :take]
+                stop = None
+                if r.eos is not None:
+                    hits = np.nonzero(row == r.eos)[0]
+                    if hits.size:
+                        stop = int(hits[0]) + 1
+                sl.emitted += [int(t) for t in row[:stop]]
+                r.decode_steps += res.steps
+                r.decode_dispatches += 1
+                if (stop is not None
+                        or len(sl.emitted) >= r.max_new):
+                    del slots[s]
+                    retire(sl)
+        return finished
+
+    # -- fixed rounds (dense / baseline engines) -----------------------------
 
     def _run_round(self, reqs: list[Request]) -> list[Request]:
         B = self.engine.batch
@@ -77,4 +208,11 @@ class RequestScheduler:
                 if hits.size:
                     toks = toks[: hits[0] + 1]
             r.result = toks
+            r.decode_steps = out.steps
+            r.decode_dispatches = out.decode_dispatches
+            r.pages_allocated = out.pages_allocated
+            r.pages_freed = out.pages_freed
+            # every round member returns at the round boundary — the short
+            # requests' latency is pinned to the round's straggler
+            r.latency_s = time.perf_counter() - self._t0
         return reqs

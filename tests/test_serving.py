@@ -120,11 +120,12 @@ def test_fused_loop_max_new_is_runtime_within_bucket(engine):
     eng, cfg = engine
     rng = np.random.default_rng(7)
     prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
-    eng.generate({"tokens": prompts}, max_new=9)    # bucket 16
-    before = eng._fused._cache_size()
+    eng.generate({"tokens": prompts}, max_new=10)   # bucket 16
+    before = eng.fused_cache_size()
     r12 = eng.generate({"tokens": prompts}, max_new=12)
     r16 = eng.generate({"tokens": prompts}, max_new=16)
-    assert eng._fused._cache_size() == before       # same bucket, no retrace
+    assert eng.fused_cache_size() == before         # same bucket, no retrace
+    assert eng.fused_retraces == eng.fused_cache_size() - 1
     assert r12.tokens.shape[1] == 12 and r16.tokens.shape[1] == 16
 
 

@@ -1,0 +1,152 @@
+"""Redundant-residue fault tolerance: what the protection costs.
+
+Three cells over decode-shaped rns matmuls on the P21R2 set (3 information
+moduli + 2 redundant witnesses — single-fault correcting):
+
+* **check_overhead** (asserted in --smoke): the fused consistency check on
+  the decode path — ``matmul(..., verify=True)`` vs ``verify=False`` on
+  the *same* redundant tensor.  The check is a base-extension compare plus
+  a ``lax.cond``-guarded projection, all element-wise against an O(K)
+  matmul, so its cost must stay marginal: the smoke gate bounds the
+  verified/unverified time ratio at 1.10 on the CPU interpret cell.
+
+* **redundancy_carry** (reported): P21R2 vs plain P21 matmul, both
+  unverified — the cost of carrying the two witness channels through the
+  kernel (2 extra modular planes over 3: the arithmetic upper bound is
+  5/3x; measured to show the realized carry).
+
+* **correction** (asserted): a bit flip in one stored residue plane, then
+  the verified matmul — output must be bit-identical to the fault-free
+  product, and ``nx.scrub`` must count the corrupted elements and return a
+  plane-exact repair.
+
+Run:  PYTHONPATH=src python benchmarks/fault_bench.py [--smoke]
+Writes BENCH_fault[_smoke].json for the CI artifact trail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import numerics as nx
+from repro.core.moduli import P21, P21R2
+
+
+def _time_ms(fn, *, reps: int) -> float:
+    """Min-of-reps wall time in ms; one throwaway pass warms the jit."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def _setup(mset, *, k: int, n: int, m: int = 4):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 1, (k, n)).astype(np.float32))
+    a = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int32))
+    t = nx.encode(w, nx.EncodeSpec(layout="rns", mset=mset, qbits=8))
+    return a, t
+
+
+def bench_check_overhead(*, k: int, n: int, reps: int) -> dict:
+    a, t = _setup(P21R2, k=k, n=n)
+    f_off = jax.jit(lambda x: nx.matmul(x, t, verify=False))
+    f_on = jax.jit(lambda x: nx.matmul(x, t, verify=True))
+    ms_off = _time_ms(lambda: f_off(a), reps=reps)
+    ms_on = _time_ms(lambda: f_on(a), reps=reps)
+    np.testing.assert_array_equal(np.asarray(f_off(a)), np.asarray(f_on(a)))
+    return {"cell": "check_overhead", "k": k, "n": n,
+            "unverified_ms": ms_off, "verified_ms": ms_on,
+            "overhead_ratio": ms_on / ms_off}
+
+
+def bench_redundancy_carry(*, k: int, n: int, reps: int) -> dict:
+    a_i, t_i = _setup(P21, k=k, n=n)
+    a_r, t_r = _setup(P21R2, k=k, n=n)
+    f_i = jax.jit(lambda x: nx.matmul(x, t_i))
+    f_r = jax.jit(lambda x: nx.matmul(x, t_r, verify=False))
+    ms_i = _time_ms(lambda: f_i(a_i), reps=reps)
+    ms_r = _time_ms(lambda: f_r(a_r), reps=reps)
+    np.testing.assert_array_equal(np.asarray(f_i(a_i)),
+                                  np.asarray(f_r(a_r)))
+    return {"cell": "redundancy_carry", "k": k, "n": n,
+            "info_only_ms": ms_i, "redundant_ms": ms_r,
+            "carry_ratio": ms_r / ms_i,
+            "plane_ratio_bound": P21R2.num_channels / P21.num_channels}
+
+
+def bench_correction(*, k: int, n: int) -> dict:
+    a, t = _setup(P21R2, k=k, n=n)
+    clean = np.asarray(nx.matmul(a, t, verify=True))
+    planes = np.asarray(t.planes).copy()
+    m = P21R2.moduli[1]
+    bad = (int(planes[1, 7, 3]) + 5) % m       # changed class mod m
+    planes[1, 7, 3] = bad - m if bad >= m // 2 else bad   # re-center
+    t_bad = t._with_planes(jnp.asarray(planes))
+    faulty = np.asarray(nx.matmul(a, t_bad, verify=True))
+    exact = bool((clean == faulty).all())
+    fixed, detected, corrected = nx.scrub(t_bad)
+    repaired = bool((np.asarray(fixed.planes)
+                     == np.asarray(t.planes)).all())
+    return {"cell": "correction", "k": k, "n": n,
+            "output_bit_identical": exact,
+            "faults_detected": int(detected),
+            "faults_corrected": int(corrected),
+            "plane_repaired_exactly": repaired}
+
+
+def run(*, smoke: bool = False, verbose: bool = True) -> dict:
+    # the check is O(M*N) element-wise vs the O(M*K*N) matmul — K must be
+    # deep enough for the gate to measure amortized cost, not dispatch noise
+    k, n = (1024, 256) if smoke else (2048, 512)
+    reps = 3 if smoke else 8
+    cells = [
+        bench_check_overhead(k=k, n=n, reps=reps),
+        bench_redundancy_carry(k=k, n=n, reps=reps),
+        bench_correction(k=k, n=n),
+    ]
+    if verbose:
+        for c in cells:
+            print(f"[fault_bench] {json.dumps(c)}")
+    return {"smoke": smoke, "cells": cells}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + gate the consistency-check "
+                         "overhead and the correction cell (CI gate)")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke)
+    path = args.json or ("BENCH_fault_smoke.json" if args.smoke
+                         else "BENCH_fault.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[fault_bench] wrote {path}")
+    cells = {c["cell"]: c for c in out["cells"]}
+    corr = cells["correction"]
+    if not (corr["output_bit_identical"] and corr["faults_detected"] > 0
+            and corr["faults_corrected"] > 0
+            and corr["plane_repaired_exactly"]):
+        print("[fault_bench] FAIL: injected fault was not corrected to a "
+              "bit-identical product")
+        return 1
+    if args.smoke and cells["check_overhead"]["overhead_ratio"] > 1.10:
+        print("[fault_bench] FAIL: fused consistency check cost "
+              f"{cells['check_overhead']['overhead_ratio']:.3f}x "
+              "(gate: <= 1.10)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -170,7 +170,7 @@ def bench_loops(*, steps: int, reps: int) -> dict:
         ms = ms_per_generate(eng)
         r = eng.generate({"tokens": prompts}, max_new=steps)
         out[f"{name}_ms_per_generate"] = ms
-        out[f"{name}_decode_dispatches_per_generate"] = r.decode_dispatches
+        out[f"{name}_decode_dispatches_per_generate"] = r.stats.decode_dispatches
     out["speedup"] = out["host_ms_per_generate"] / out["fused_ms_per_generate"]
     return out
 
@@ -218,14 +218,14 @@ def bench_paged(*, steps_hint: int, reps: int,
         sched = RequestScheduler(eng)
         sched.serve(make_requests())        # warmup: compile everything
         best = None
-        steps0 = eng.decode_steps
+        steps0 = eng.stats.decode_steps
         for _ in range(reps):
             t0 = time.perf_counter()
             out = sched.serve(make_requests())
             span = time.perf_counter() - t0
             if best is None or span < best[0]:
                 best = (span, out)
-        steps = (eng.decode_steps - steps0) // reps
+        steps = (eng.stats.decode_steps - steps0) // reps
         return best[0] * 1e3, best[1], steps
 
     # the SLO anchor: one short request, alone, on the dense engine
@@ -235,7 +235,7 @@ def bench_paged(*, steps_hint: int, reps: int,
     solo_ms = min(
         RequestScheduler(eng0).serve(
             [Request(rid=0, tokens=prompts[0], max_new=short)]
-        )[0].latency_s
+        )[0].stats.latency_s
         for _ in range(reps)) * 1e3
     target_ms = target_slack * solo_ms
 
@@ -254,7 +254,7 @@ def bench_paged(*, steps_hint: int, reps: int,
         eng = ServingEngine(model, params, batch=B, s_max=s_max,
                             page_size=page_size, **kw)
         ms, served, steps = serve_once(eng)
-        lats = np.array([r.latency_s * 1e3 for r in served])
+        lats = np.array([r.stats.latency_s * 1e3 for r in served])
         if eng.paged:
             bytes_tok = eng.pool.bytes_per_resident_token()
             pool_bytes = eng.pool.pool_bytes()
@@ -273,8 +273,8 @@ def bench_paged(*, steps_hint: int, reps: int,
             "users_at_target_latency": int((lats <= target_ms).sum()),
             "mean_latency_ms": float(lats.mean()),
             "p95_latency_ms": float(np.percentile(lats, 95)),
-            "decode_dispatches": eng.decode_dispatches,
-            "fused_retraces": eng.fused_retraces,
+            "decode_dispatches": eng.stats.decode_dispatches,
+            "fused_retraces": eng.stats.fused_retraces,
             "kv_bytes_per_resident_token": bytes_tok,
             "kv_pool_bytes": pool_bytes,
             "pool_stats": pstats,

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Sequence
 
 import jax
@@ -31,6 +32,7 @@ import numpy as np
 
 __all__ = [
     "ModuliSet",
+    "PackedFormat",
     "special_set",
     "mod_pow2_minus1",
     "mod_pow2",
@@ -41,11 +43,13 @@ __all__ = [
     "decode_packed",
     "P16",
     "P21",
+    "P21R2",
     "P24",
     "P33",
     "P64",
     "CRT40",
     "KV8",
+    "KV8R2",
     "KV4",
 ]
 
@@ -139,25 +143,66 @@ class ModuliSet:
     """A pairwise-coprime moduli set with conversion machinery.
 
     Attributes:
-      moduli: tuple of pairwise-coprime ints, ascending not required.
+      moduli: tuple of pairwise-coprime ints, ascending not required.  The
+              trailing ``redundant`` entries are *redundant* channels: they
+              carry no dynamic range (``M`` is the product of the leading
+              *information* moduli only) but make any single-channel
+              corruption detectable — and, with ``redundant >= 2``,
+              correctable — at decode time via CRT consistency.
       kinds:  per-modulus tag: ``("pow2m1", n)``, ``("pow2", n)``,
               ``("pow2p1", n)`` or ``("generic", 0)`` — drives the fast
               forward-conversion path.
+      redundant: number of trailing redundant channels (0 = plain RNS).
     """
 
     moduli: tuple[int, ...]
     kinds: tuple[tuple[str, int], ...]
+    redundant: int = 0
 
     # ---- constructors -----------------------------------------------------
     @staticmethod
-    def make(moduli: Sequence[int]) -> "ModuliSet":
+    def make(moduli: Sequence[int], *, redundant: int = 0) -> "ModuliSet":
         mods = tuple(int(m) for m in moduli)
+        for m in mods:
+            if m < 2:
+                raise ValueError(
+                    f"modulus {m} is degenerate: every modulus must be >= 2 "
+                    "(a 0/1 modulus carries no residue information and "
+                    "silently corrupts the dynamic range)"
+                )
         for i in range(len(mods)):
             for j in range(i + 1, len(mods)):
                 if math.gcd(mods[i], mods[j]) != 1:
                     raise ValueError(
                         f"moduli must be pairwise coprime, got {mods[i]}, {mods[j]}"
                     )
+        if not 0 <= redundant < len(mods):
+            raise ValueError(
+                f"redundant={redundant} needs 0 <= r < {len(mods)} "
+                "(at least one information channel must remain)"
+            )
+        if redundant >= 2:
+            # Single-fault correction soundness (Mandelbaum-style condition):
+            # a wrong-channel projection differs from the true value by a
+            # multiple of M_total/(m_c * m_d), which must clear the whole
+            # legitimate range so only the faulty channel's projection can
+            # land inside it.
+            m_info = 1
+            for m in mods[: len(mods) - redundant]:
+                m_info *= m
+            m_total = m_info
+            for m in mods[len(mods) - redundant:]:
+                m_total *= m
+            for i in range(len(mods)):
+                for j in range(i + 1, len(mods)):
+                    if m_total // (mods[i] * mods[j]) < m_info:
+                        raise ValueError(
+                            f"redundant moduli {mods[len(mods) - redundant:]} "
+                            f"are too small for single-fault correction: "
+                            f"M_total/({mods[i]}*{mods[j]}) < M_info — a "
+                            "faulty projection could fall inside the "
+                            "legitimate range"
+                        )
         kinds = []
         for m in mods:
             nb = m.bit_length()
@@ -169,16 +214,52 @@ class ModuliSet:
                 kinds.append(("pow2p1", nb - 1))
             else:
                 kinds.append(("generic", 0))
-        return ModuliSet(mods, tuple(kinds))
+        return ModuliSet(mods, tuple(kinds), redundant)
+
+    def with_redundancy(self, extra: Sequence[int]) -> "ModuliSet":
+        """Append ``extra`` as redundant channels to this set's info moduli."""
+        extra = tuple(int(m) for m in extra)
+        return ModuliSet.make(self.info_moduli + extra, redundant=len(extra))
 
     # ---- basic properties --------------------------------------------------
     @property
     def num_channels(self) -> int:
         return len(self.moduli)
 
+    @property
+    def num_info(self) -> int:
+        """Number of information (non-redundant) channels."""
+        return len(self.moduli) - self.redundant
+
+    @property
+    def info_moduli(self) -> tuple[int, ...]:
+        return self.moduli[: self.num_info]
+
+    @property
+    def redundant_moduli(self) -> tuple[int, ...]:
+        return self.moduli[self.num_info:]
+
+    @functools.cached_property
+    def info(self) -> "ModuliSet":
+        """The information-channel-only set (``self`` when ``redundant==0``)."""
+        if self.redundant == 0:
+            return self
+        return ModuliSet(self.info_moduli, self.kinds[: self.num_info], 0)
+
     @functools.cached_property
     def M(self) -> int:
-        """Dynamic range (product of moduli).  Python int — exact at any width."""
+        """Dynamic range: product of the *information* moduli.  Python int —
+        exact at any width.  Redundant channels do not extend the range; the
+        interval ``[-half_range, half_range]`` is the *legitimate range* and
+        values outside it signal a fault."""
+        out = 1
+        for m in self.info_moduli:
+            out *= m
+        return out
+
+    @functools.cached_property
+    def M_total(self) -> int:
+        """Product of all moduli, redundant channels included."""
         out = 1
         for m in self.moduli:
             out *= m
@@ -220,7 +301,13 @@ class ModuliSet:
 
     def from_residues_host(self, residues) -> np.ndarray:
         """Exact MRC reverse conversion on host.  ``residues``: (C, ...) ints.
-        Returns signed values in ``[-M//2, M//2]`` as object array of ints."""
+        Returns signed values in ``[-M//2, M//2]`` as object array of ints.
+
+        For redundant sets only the information channels participate —
+        redundant channels are consistency witnesses, not range."""
+        if self.redundant:
+            return self.info.from_residues_host(
+                np.asarray(residues)[: self.num_info])
         res = np.asarray(residues)
         C = self.num_channels
         digits = []
@@ -331,7 +418,13 @@ class ModuliSet:
         (M-1)/2; reconstruction runs in deliberately *wrapping* int32
         arithmetic mod 2**32 (XLA integer ops wrap), which equals the true
         value because |X| < 2**31.
+
+        Redundant sets decode from the information channels only (channels
+        are independent — redundant planes ride along and are checked by
+        :meth:`syndromes` / :meth:`corrected_decode`).
         """
+        if self.redundant:
+            return self.info.from_residues(residues[: self.num_info])
         if max(self.moduli) > 46340:
             raise ValueError(
                 "jit reverse conversion needs moduli <= 46340 (use "
@@ -388,9 +481,150 @@ class ModuliSet:
         worst = max((m // 2) ** 2 for m in self.moduli)
         return (1 << 31) // (2 * worst)
 
+    # ---- redundancy: syndrome check and single-fault correction ------------
+
+    @functools.cached_property
+    def _info_drop_sets(self) -> tuple["ModuliSet", ...]:
+        """For each information channel c: the set of every *other* channel
+        (info minus c, plus all redundant channels) — the projection base for
+        locating a faulty information channel."""
+        out = []
+        for c in range(self.num_info):
+            out.append(ModuliSet.make(self.moduli[:c] + self.moduli[c + 1:]))
+        return tuple(out)
+
+    def syndromes(self, residues: jax.Array) -> jax.Array:
+        """Per-redundant-channel consistency syndromes, shape ``(r, ...)``.
+
+        Zero everywhere <=> the carried redundant residues agree with the
+        CRT base extension of the information-channel decode.  Any
+        single-channel corruption — information or redundant — produces a
+        nonzero syndrome (guaranteed by the ``make()`` range condition).
+        """
+        if self.redundant == 0:
+            raise ValueError("syndromes() needs a redundant ModuliSet")
+        res = self.canon(residues).astype(jnp.int32)
+        x = self.info.from_residues(res[: self.num_info])
+        syn = [jnp.remainder(res[self.num_info + j] - jnp.remainder(x, m), m)
+               for j, m in enumerate(self.redundant_moduli)]
+        return jnp.stack(syn, axis=0)
+
+    def _project_info(self, res: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Leave-one-info-channel-out projections.  Returns ``(best,
+        n_legit)``: the sum of projections inside the legitimate range (== the
+        unique one when ``n_legit == 1``) and how many landed inside it."""
+        projs, legit = [], []
+        for c, mset_c in enumerate(self._info_drop_sets):
+            sub = jnp.concatenate([res[:c], res[c + 1:]], axis=0)
+            p = mset_c.from_residues(sub)
+            projs.append(p)
+            legit.append(jnp.abs(p) <= self.half_range)
+        n_legit = functools.reduce(
+            jnp.add, [m.astype(jnp.int32) for m in legit])
+        best = functools.reduce(
+            jnp.add, [jnp.where(m, p, 0) for p, m in zip(projs, legit)])
+        return best, n_legit
+
+    def corrected_decode(self, residues: jax.Array) -> jax.Array:
+        """Reverse conversion with in-line single-fault correction.
+
+        Equals :meth:`from_residues` when the residues are consistent.  When
+        an information channel is corrupted (every syndrome nonzero) and
+        ``redundant >= 2``, the value is reconstructed from the unique
+        projection inside the legitimate range.  Redundant-channel faults
+        never perturb the decoded value.  The projection scan runs under
+        ``lax.cond``, so the fault-free fast path pays only the
+        base-extension compare.
+        """
+        if self.redundant == 0:
+            return self.from_residues(residues)
+        res = self.canon(residues).astype(jnp.int32)
+        x = self.info.from_residues(res[: self.num_info])
+        if self.redundant < 2:
+            return x
+        nz = [jnp.remainder(res[self.num_info + j] - jnp.remainder(x, m), m)
+              != 0 for j, m in enumerate(self.redundant_moduli)]
+        info_fault = functools.reduce(jnp.logical_and, nz)
+
+        def _fix(args):
+            res, x = args
+            best, n_legit = self._project_info(res)
+            return jnp.where(info_fault & (n_legit == 1), best, x)
+
+        return jax.lax.cond(jnp.any(info_fault), _fix,
+                            lambda args: args[1], (res, x))
+
+    def correct(self, residues: jax.Array):
+        """Detect and repair single-channel faults in ``residues``.
+
+        Returns ``(fixed, detected, corrected)``: *fixed* is ``(C, ...)``
+        **centered** residues; *detected* / *corrected* are elementwise bool
+        masks over the value shape.  Decision rule (the syndrome table of
+        DESIGN.md §12):
+
+        * all syndromes zero — consistent, nothing to do;
+        * exactly one nonzero syndrome — that redundant channel is faulty;
+          rewrite it from the (trusted) information decode;
+        * two or more nonzero syndromes — an information channel is faulty;
+          the unique projection inside the legitimate range identifies it
+          and the whole vector is re-encoded from the recovered value.  No
+          unique legitimate projection (multi-channel corruption): detected
+          but left untouched.
+
+        With ``redundant == 1`` a single nonzero syndrome cannot
+        distinguish a witness fault from an information fault, so ``r=1``
+        sets are strictly detect-only: nothing is rewritten and
+        ``corrected`` stays all-False.
+        """
+        if self.redundant == 0:
+            raise ValueError("correct() needs a redundant ModuliSet")
+        res = self.canon(residues).astype(jnp.int32)
+        ni = self.num_info
+        x = self.info.from_residues(res[:ni])
+        syn = [jnp.remainder(res[ni + j] - jnp.remainder(x, m), m) != 0
+               for j, m in enumerate(self.redundant_moduli)]
+        n_nz = functools.reduce(jnp.add, [s.astype(jnp.int32) for s in syn])
+        detected = n_nz > 0
+        rows = list(res)
+        corrected = jnp.zeros_like(detected)
+        if self.redundant >= 2:
+            # one nonzero syndrome isolates a witness: a single info fault
+            # provably flips *all* syndromes under the make() condition
+            red_fault = n_nz == 1
+            for j, m in enumerate(self.redundant_moduli):
+                good = jnp.remainder(x, m)
+                rows[ni + j] = jnp.where(red_fault & syn[j], good,
+                                         res[ni + j])
+            corrected = red_fault
+            best, n_legit = self._project_info(res)
+            fix = (n_nz >= 2) & (n_legit == 1)
+            full = [jnp.remainder(best, m) for m in self.moduli]
+            rows = [jnp.where(fix, f, r) for f, r in zip(full, rows)]
+            corrected = corrected | fix
+        fixed = self.center(jnp.stack(rows, axis=0))
+        return fixed, detected, corrected
+
+    # ---- packed 2-channel storage format -----------------------------------
+
+    def packed(self) -> "PackedFormat":
+        """The byte-packed storage format for this set's information pair
+        (requires exactly two information moduli — see :class:`PackedFormat`)."""
+        return PackedFormat.for_moduli(self.info_moduli)
+
 
 def special_set(n: int) -> ModuliSet:
-    """The paper's ``{2^n - 1, 2^n, 2^n + 1}`` set."""
+    """The paper's ``{2^n - 1, 2^n, 2^n + 1}`` set.
+
+    Requires ``n >= 2``: for ``n < 2`` the set degenerates (``n=1`` yields a
+    modulus-1 channel that carries no information; ``n <= 0`` is
+    meaningless), silently corrupting the advertised dynamic range.
+    """
+    if n < 2:
+        raise ValueError(
+            f"special_set needs n >= 2, got n={n}: {{2^n-1, 2^n, 2^n+1}} "
+            "degenerates to a modulus < 2 and the dynamic range would be "
+            "silently wrong"
+        )
     return ModuliSet.make(((1 << n) - 1, 1 << n, (1 << n) + 1))
 
 
@@ -407,89 +641,136 @@ def special_set(n: int) -> ModuliSet:
 # ---------------------------------------------------------------------------
 
 
-def packed_spec_raw(moduli: Sequence[int]) -> tuple[tuple[int, int], int]:
-    """:func:`packed_spec` for a raw ``(m0, m1)`` pair.
+@dataclasses.dataclass(frozen=True)
+class PackedFormat:
+    """Byte-packed storage codec for a 2-channel ``(odd, power-of-two)`` pair.
 
-    For kernel code that carries the moduli as a static tuple rather than a
-    ``ModuliSet`` (Pallas wrappers hash their static args).
+    One object owns all pack parameters — field widths, values-per-byte and
+    the encode/decode transforms — replacing the old ``packed_spec_raw`` /
+    ``packed_spec`` / ``encode_packed`` / ``decode_packed`` function zoo so
+    call sites stop re-deriving them.  Obtain one via
+    :meth:`ModuliSet.packed` (information pair of a ``ModuliSet``) or
+    :meth:`PackedFormat.for_moduli` (kernel code carrying a static tuple).
     """
-    if len(moduli) != 2:
-        raise ValueError(f"packed layout needs 2 moduli, got {tuple(moduli)}")
-    m0, m1 = moduli
-    if m0 % 2 == 0 or m1 & (m1 - 1) != 0:
-        raise ValueError(
-            f"packed layout needs (odd, power-of-two) moduli, "
-            f"got {tuple(moduli)}")
-    b0, b1 = (m0 - 1).bit_length(), (m1 - 1).bit_length()
-    w = b0 + b1
-    if w not in (1, 2, 4, 8):
-        raise ValueError(
-            f"packed field widths {b0}+{b1} must sum to a divisor of 8")
-    return (b0, b1), 8 // w
+
+    moduli: tuple[int, int]
+    widths: tuple[int, int]
+    values_per_byte: int
+
+    @staticmethod
+    def for_moduli(moduli: Sequence[int]) -> "PackedFormat":
+        if len(moduli) != 2:
+            raise ValueError(
+                f"packed layout needs 2 moduli, got {tuple(moduli)}")
+        m0, m1 = (int(m) for m in moduli)
+        if m0 % 2 == 0 or m1 & (m1 - 1) != 0:
+            raise ValueError(
+                f"packed layout needs (odd, power-of-two) moduli, "
+                f"got {tuple(moduli)}")
+        b0, b1 = (m0 - 1).bit_length(), (m1 - 1).bit_length()
+        w = b0 + b1
+        if w not in (1, 2, 4, 8):
+            raise ValueError(
+                f"packed field widths {b0}+{b1} must sum to a divisor of 8")
+        return PackedFormat((m0, m1), (b0, b1), 8 // w)
+
+    @property
+    def bits(self) -> int:
+        """Packed bits per value."""
+        return self.widths[0] + self.widths[1]
+
+    @functools.cached_property
+    def _mset(self) -> ModuliSet:
+        return ModuliSet.make(self.moduli)
+
+    def encode(self, x: jax.Array) -> jax.Array:
+        """Forward-convert int32 values (..., N) to packed residue bytes.
+
+        Each value's centered residues land in two's-complement bit fields
+        of ``widths``; ``values_per_byte`` values share a byte along the
+        last axis (N must divide evenly).  Returns (..., N / vpb) uint8.
+        """
+        b0, b1 = self.widths
+        vpb = self.values_per_byte
+        r = self._mset.to_residues(x.astype(jnp.int32), centered=True)
+        # two's-complement masking: centered residues fit the fields by
+        # construction (+m1/2 wraps to -m1/2, the same class mod 2^b1)
+        lane = (r[0] & ((1 << b0) - 1)) | ((r[1] & ((1 << b1) - 1)) << b0)
+        if vpb == 1:
+            return lane.astype(jnp.uint8)
+        n = lane.shape[-1]
+        if n % vpb:
+            raise ValueError(f"last axis {n} must divide values-per-byte {vpb}")
+        lanes = lane.reshape(*lane.shape[:-1], n // vpb, vpb)
+        w = b0 + b1
+        byte = jnp.zeros(lanes.shape[:-1], jnp.int32)
+        for i in range(vpb):
+            byte = byte | (lanes[..., i] << (i * w))
+        return byte.astype(jnp.uint8)
+
+    def decode(self, packed: jax.Array) -> jax.Array:
+        """Reverse conversion of :meth:`encode` bytes to int32 values.
+
+        Pure vector ops (shifts, masks, one small multiply) — usable inside
+        a Pallas kernel body as the fused dequant load.  Exact for every
+        value in the centered range ``[-M/2, M/2)``.
+        """
+        b0, b1 = self.widths
+        vpb = self.values_per_byte
+        m0, m1 = self.moduli
+        w = b0 + b1
+        byte = packed.astype(jnp.int32)
+        if vpb > 1:
+            lanes = jnp.stack([(byte >> (i * w)) & ((1 << w) - 1)
+                               for i in range(vpb)], axis=-1)
+            lane = lanes.reshape(*packed.shape[:-1], packed.shape[-1] * vpb)
+        else:
+            lane = byte
+        f0 = lane & ((1 << b0) - 1)
+        f1 = (lane >> b0) & ((1 << b1) - 1)
+        # sign-extend the fields; any representative of the residue class
+        # works (the CRT fold reduces mod m0 / is exact mod the power of two)
+        r0 = f0 - ((f0 >> (b0 - 1)) << b0)
+        r1 = f1 - ((f1 >> (b1 - 1)) << b1)
+        inv = modinv(m1 % m0, m0)
+        t = jnp.remainder((r0 - r1) * inv, m0)          # canonical [0, m0)
+        t = jnp.where(t > (m0 - 1) // 2, t - m0, t)     # centered
+        return r1 + m1 * t
+
+
+# -- deprecated function-style codec entry points (use PackedFormat) ---------
+
+
+def _packed_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new}",
+        DeprecationWarning, stacklevel=3)
+
+
+def packed_spec_raw(moduli: Sequence[int]) -> tuple[tuple[int, int], int]:
+    """Deprecated: use :meth:`PackedFormat.for_moduli`."""
+    _packed_deprecated("packed_spec_raw()", "PackedFormat.for_moduli()")
+    fmt = PackedFormat.for_moduli(moduli)
+    return fmt.widths, fmt.values_per_byte
 
 
 def packed_spec(mset: ModuliSet) -> tuple[tuple[int, int], int]:
-    """((b0, b1) field widths, values-per-byte) for a packable 2-channel set.
-
-    Requires exactly two moduli — the first odd, the second a power of two —
-    whose two's-complement field widths sum to a divisor of 8 (so packed
-    lanes tile bytes exactly).  Raises ValueError otherwise.
-    """
-    return packed_spec_raw(mset.moduli)
+    """Deprecated: use :meth:`ModuliSet.packed`."""
+    _packed_deprecated("packed_spec()", "ModuliSet.packed()")
+    fmt = mset.packed()
+    return fmt.widths, fmt.values_per_byte
 
 
 def encode_packed(x: jax.Array, mset: ModuliSet) -> jax.Array:
-    """Forward-convert int32 values (..., N) to packed residue bytes.
-
-    Each value's centered residues land in two's-complement bit fields
-    (``packed_spec`` widths); ``8 // (b0 + b1)`` values share a byte along
-    the last axis (N must divide evenly).  Returns (..., N / vpb) uint8.
-    """
-    (b0, b1), vpb = packed_spec(mset)
-    r = mset.to_residues(x.astype(jnp.int32), centered=True)   # (2, ..., N)
-    # two's-complement masking: centered residues fit the fields by
-    # construction (+m1/2 wraps to -m1/2, the same residue class mod 2^b1)
-    lane = (r[0] & ((1 << b0) - 1)) | ((r[1] & ((1 << b1) - 1)) << b0)
-    if vpb == 1:
-        return lane.astype(jnp.uint8)
-    n = lane.shape[-1]
-    if n % vpb:
-        raise ValueError(f"last axis {n} must divide values-per-byte {vpb}")
-    lanes = lane.reshape(*lane.shape[:-1], n // vpb, vpb)
-    w = b0 + b1
-    byte = jnp.zeros(lanes.shape[:-1], jnp.int32)
-    for i in range(vpb):
-        byte = byte | (lanes[..., i] << (i * w))
-    return byte.astype(jnp.uint8)
+    """Deprecated: use ``mset.packed().encode(x)``."""
+    _packed_deprecated("encode_packed()", "ModuliSet.packed().encode()")
+    return mset.packed().encode(x)
 
 
 def decode_packed(packed: jax.Array, mset: ModuliSet) -> jax.Array:
-    """Reverse conversion of :func:`encode_packed` bytes to int32 values.
-
-    Pure vector ops (shifts, masks, one small multiply) — usable inside a
-    Pallas kernel body as the fused dequant load.  Exact for every value in
-    the centered range ``[-M/2, M/2)``.
-    """
-    (b0, b1), vpb = packed_spec(mset)
-    m0, m1 = mset.moduli
-    w = b0 + b1
-    byte = packed.astype(jnp.int32)
-    if vpb > 1:
-        lanes = jnp.stack([(byte >> (i * w)) & ((1 << w) - 1)
-                           for i in range(vpb)], axis=-1)
-        lane = lanes.reshape(*packed.shape[:-1], packed.shape[-1] * vpb)
-    else:
-        lane = byte
-    f0 = lane & ((1 << b0) - 1)
-    f1 = (lane >> b0) & ((1 << b1) - 1)
-    # sign-extend the fields; any representative of the residue class works
-    # (the CRT fold below reduces mod m0 / is exact mod the power of two)
-    r0 = f0 - ((f0 >> (b0 - 1)) << b0)
-    r1 = f1 - ((f1 >> (b1 - 1)) << b1)
-    inv = modinv(m1 % m0, m0)
-    t = jnp.remainder((r0 - r1) * inv, m0)          # canonical [0, m0)
-    t = jnp.where(t > (m0 - 1) // 2, t - m0, t)     # centered
-    return r1 + m1 * t
+    """Deprecated: use ``mset.packed().decode(packed)``."""
+    _packed_deprecated("decode_packed()", "ModuliSet.packed().decode()")
+    return mset.packed().decode(packed)
 
 
 # The paper's Table-I precision rows (P=16/24/32/64 <-> n=5/8/11/21) plus the
@@ -502,8 +783,20 @@ P33 = special_set(11)
 P64 = special_set(21)
 CRT40 = ModuliSet.make((121, 125, 127, 128, 129, 131))
 
+# P21 with two redundant channels: same int4-serving dynamic range (the info
+# product is untouched), every centered residue still fits int8, and any
+# single corrupted plane is locatable + reconstructable at decode
+# (131 * 133 = 17423 clears the make() projection condition).
+P21R2 = ModuliSet.make((127, 128, 129, 131, 133), redundant=2)
+
 # Packable 2-channel sets for residue-domain KV pages (numerics/kv_pages.py):
 # KV8 = {15, 16} — one byte per value (4+4-bit fields), range ±120 (int7 codes);
 # KV4 = {3, 4}   — one nibble per value (2+2-bit fields), range ±6 (int3 codes).
 KV8 = ModuliSet.make((15, 16))
 KV4 = ModuliSet.make((3, 4))
+
+# KV8 plus two redundant witness channels (17, 19) — the rns8r page format:
+# lane 0 keeps the packed {15,16} byte, lanes 1..2 carry the redundant
+# residues unpacked, and 17 * 19 = 323 > 240 means the info value is fully
+# recoverable from the witnesses alone when the packed byte itself is hit.
+KV8R2 = ModuliSet.make((15, 16, 17, 19), redundant=2)

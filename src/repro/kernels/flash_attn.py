@@ -50,7 +50,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.moduli import modinv, packed_spec_raw
+from repro.core.moduli import PackedFormat, modinv
 from repro.kernels import compat
 
 __all__ = ["flash_attention_pallas", "flash_decode_pallas",
@@ -278,7 +278,8 @@ def _unpack_crt(byte: jax.Array, moduli: tuple[int, int]) -> jax.Array:
     power-of-two modulus as the anchor: X = r1 + m1 * center((r0 - r1) *
     inv(m1 mod m0, m0) mod m0).  Exact over [-M/2, M/2).
     """
-    (b0, b1), vpb = packed_spec_raw(moduli)
+    fmt = PackedFormat.for_moduli(moduli)
+    (b0, b1), vpb = fmt.widths, fmt.values_per_byte
     m0, m1 = moduli
     w = b0 + b1
     if vpb > 1:

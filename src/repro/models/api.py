@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.moduli import ModuliSet
 from repro.models import encdec as encdec_mod
 from repro.models import frontends
 from repro.models import transformer as tf_mod
@@ -77,6 +78,7 @@ MOE_AUX_WEIGHT = 0.01
 
 def build_model(cfg: ArchConfig, *, system: str = "bns",
                 rns_bits: int = 4, rns_impl: str | None = None,
+                rns_mset: "ModuliSet | None" = None,
                 backend: str | None = None) -> Model:
     if backend is not None:
         warnings.warn(
@@ -85,6 +87,12 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
             "registry backends (pallas/interpret/ref) selected by rns_impl",
             DeprecationWarning, stacklevel=2)
         system = backend
+    if rns_mset is not None and system != "rns":
+        # signed-digit layouts cannot carry redundant channels, and bns
+        # has no residue planes at all — fail loudly instead of ignoring
+        raise ValueError(
+            f"rns_mset= is only meaningful for system='rns', got "
+            f"system={system!r}")
     compute_dtype = jnp.dtype(cfg.compute_dtype)
     dense_kw: dict[str, Any] = {"system": system,
                                 "compute_dtype": compute_dtype}
@@ -92,6 +100,8 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
         dense_kw["out_dtype"] = jnp.float32
     if system in ("rns", "sdrns"):
         dense_kw.update(bits=rns_bits, impl=rns_impl)
+        if rns_mset is not None:
+            dense_kw["mset"] = rns_mset
 
     is_encdec = cfg.is_encdec
 
@@ -151,6 +161,8 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
             return params
 
         kw = dict(system=system, bits=rns_bits, roles=False)
+        if rns_mset is not None:
+            kw["mset"] = rns_mset
 
         def walk(node, name=None):
             if isinstance(node, dict):

@@ -22,7 +22,15 @@ parameter dicts of PR 2 and the legacy ``kernels/ops.py`` entry-point zoo
 :mod:`repro.numerics.registry`; the model-level number-system knob is the
 separate ``system=`` argument of ``models/api.py::build_model``.
 """
-from repro.numerics.api import EncodeSpec, add, decode, einsum, encode, matmul
+from repro.numerics.api import (
+    EncodeSpec,
+    add,
+    decode,
+    einsum,
+    encode,
+    matmul,
+    scrub,
+)
 from repro.numerics.attention import flash_attention, flash_decode
 from repro.numerics.registry import (
     BACKENDS,
@@ -42,6 +50,7 @@ __all__ = [
     "matmul",
     "einsum",
     "add",
+    "scrub",
     "flash_attention",
     "flash_decode",
     "BACKENDS",

@@ -27,7 +27,8 @@ from repro.core.moduli import P21, ModuliSet
 from repro.numerics import runners
 from repro.numerics.tensor import LAYOUTS, ResidueTensor
 
-__all__ = ["EncodeSpec", "encode", "decode", "matmul", "add", "einsum"]
+__all__ = ["EncodeSpec", "encode", "decode", "scrub", "matmul", "add",
+           "einsum"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +60,11 @@ class EncodeSpec:
         if self.layout not in LAYOUTS:
             raise ValueError(
                 f"unknown layout {self.layout!r}; expected one of {LAYOUTS}")
+        if self.layout in ("sd", "sd_matvec") and self.mset.redundant:
+            raise ValueError(
+                "signed-digit layouts cannot carry redundant channels "
+                "(redundant moduli are generic, not special); use "
+                "layout='rns' for fault-tolerant residency")
 
     @property
     def bound(self) -> int | None:
@@ -104,18 +110,61 @@ def encode(w: jax.Array, spec: EncodeSpec | None = None, *,
                          max_abs=spec.bound)
 
 
-def decode(t: ResidueTensor) -> jax.Array:
+def decode(t: ResidueTensor, *, check: bool = False) -> jax.Array:
     """Reverse conversion at the domain boundary.
 
     Returns exact int32 codes, or — when the tensor carries a
     dequantization ``scale`` — the f32 value ``codes * scale``.
+
+    ``check=True`` on a redundant-moduli tensor fuses the CRT consistency
+    check into the decode: the redundant channels are base-extension
+    compared against the info-channel decode, and a single corrupted
+    channel is reconstructed in-line (``ModuliSet.corrected_decode``) —
+    the returned value equals the fault-free decode.  Supported for the
+    ``rns`` layout (redundant ``rns_pack`` pages are checked page-wise by
+    :func:`repro.numerics.kv_pages.verify_pages`); a no-op when the set
+    carries no redundancy.
     """
     if not isinstance(t, ResidueTensor):
         raise TypeError(f"decode expects a ResidueTensor, got {type(t)}")
-    codes = t.to_int()
+    if check and t.mset.redundant and t.layout == "rns":
+        cf = t._channel_first().astype(jnp.int32)
+        codes = t.mset.corrected_decode(cf)
+    else:
+        codes = t.to_int()
     if t.scale is not None:
         return codes.astype(jnp.float32) * t.scale
     return codes
+
+
+@functools.partial(jax.jit, static_argnames=("mset",))
+def _scrub_rns(planes, mset):
+    cf = jnp.moveaxis(planes, -3, 0).astype(jnp.int32)
+    fixed, det, cor = mset.correct(cf)
+    fixed = jnp.moveaxis(fixed, 0, -3).astype(planes.dtype)
+    return fixed, det.sum(), cor.sum()
+
+
+def scrub(t: ResidueTensor) -> tuple[ResidueTensor, int, int]:
+    """Verify and repair a redundant residue-resident tensor.
+
+    Runs the syndrome check over every element of an ``rns``-layout tensor
+    and reconstructs any single faulty channel (``ModuliSet.correct``).
+    Returns ``(fixed, detected, corrected)`` — the repaired tensor plus
+    host-int counts of inconsistent and repaired elements.  Tensors
+    without redundancy return unchanged with zero counts.  This is the
+    weight-plane scrub behind ``ServingEngine(scrub="decode")``.
+    """
+    if not isinstance(t, ResidueTensor):
+        raise TypeError(f"scrub expects a ResidueTensor, got {type(t)}")
+    if t.mset.redundant == 0:
+        return t, 0, 0
+    if t.layout != "rns":
+        raise ValueError(
+            f"scrub supports the 'rns' layout, got {t.layout!r} (redundant "
+            "rns_pack pages go through kv_pages.verify_pages)")
+    fixed, det, cor = _scrub_rns(t.planes, t.mset)
+    return t._with_planes(fixed), int(det), int(cor)
 
 
 def _bounds(t: ResidueTensor, max_abs_a: int | None) -> tuple[int, int]:
@@ -129,11 +178,13 @@ def _bounds(t: ResidueTensor, max_abs_a: int | None) -> tuple[int, int]:
 
 
 def _matmul_planes(a: jax.Array, t: ResidueTensor, max_abs_a: int | None,
-                   backend: str | None, shard=None) -> jax.Array:
+                   backend: str | None, shard=None,
+                   verify: bool | None = None) -> jax.Array:
     maa, mab = _bounds(t, max_abs_a)
     if t.layout == "rns":
         return runners.rns_run(a, t.planes, mset=t.mset, max_abs_a=maa,
-                               max_abs_b=mab, backend=backend, shard=shard)
+                               max_abs_b=mab, backend=backend, shard=shard,
+                               verify=verify)
     return runners.sdrns_run(a, t.planes, mset=t.mset, max_abs_a=maa,
                              max_abs_b=mab, backend=backend,
                              force_matvec=t.layout == "sd_matvec",
@@ -141,13 +192,15 @@ def _matmul_planes(a: jax.Array, t: ResidueTensor, max_abs_a: int | None,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("max_abs_a", "backend", "shard"))
-def _matmul_jit(a, t, max_abs_a, backend, shard):
-    return _matmul_planes(a, t, max_abs_a, backend, shard)
+                   static_argnames=("max_abs_a", "backend", "shard",
+                                    "verify"))
+def _matmul_jit(a, t, max_abs_a, backend, shard, verify):
+    return _matmul_planes(a, t, max_abs_a, backend, shard, verify)
 
 
 def matmul(a: jax.Array, t: ResidueTensor, *, max_abs_a: int | None = None,
-           backend: str | None = None) -> jax.Array:
+           backend: str | None = None,
+           verify: bool | None = None) -> jax.Array:
     """Exact integer matmul of an (M, K) activation against encoded planes.
 
     Dispatches on the tensor's layout tag and the activation shape: rns ->
@@ -170,6 +223,10 @@ def matmul(a: jax.Array, t: ResidueTensor, *, max_abs_a: int | None = None,
         bound (activations quantized to the same width — the co-designed
         quantizer default).
       backend: kernel implementation ("pallas"/"interpret"/"ref"/None=auto).
+      verify: redundant-channel consistency check at the per-segment decode
+        (``None`` = on exactly when ``t.mset.redundant >= 2``; ``False``
+        forces the unchecked decode — the bench baseline).  Ignored by sd
+        layouts (they cannot carry redundancy).
     Returns:
       (M, N) int32, exact A @ B.
     """
@@ -184,7 +241,7 @@ def matmul(a: jax.Array, t: ResidueTensor, *, max_abs_a: int | None = None,
     if a.ndim != 2:
         raise ValueError(f"matmul takes a 2-D activation, got {a.shape}")
     shard = runners.tp_shard_plan(a.shape[0], t.shape[-1])
-    return _matmul_jit(a, t, max_abs_a, backend, shard)
+    return _matmul_jit(a, t, max_abs_a, backend, shard, verify)
 
 
 def _parse_stacked(subscripts: str) -> int:

@@ -154,7 +154,9 @@ register_impl("flash_decode", "cost", _decode_ref_impl)
 
 def _paged_kernel_impl(interpret: bool):
     def run(q, k_raw, v_raw, k_scale, v_scale, fmt, tab, kv_len, page_size):
-        moduli = fmt.mset.moduli if fmt.is_residue else None
+        # kernels read only the packed info byte; redundant witness lanes
+        # are stripped by the dispatcher and scrubbed at segment boundaries
+        moduli = fmt.mset.info_moduli if fmt.is_residue else None
         o_p, m_p, l_p = flash_paged_decode_pallas(
             q, k_raw, v_raw, tab, kv_len, page_size=page_size,
             k_scale=k_scale, v_scale=v_scale, moduli=moduli,
@@ -171,8 +173,7 @@ def _paged_ref_impl(q, k_raw, v_raw, k_scale, v_scale, fmt, tab, kv_len,
     def dense_of(raw, scale):
         pages = raw[tab]                       # (B, n_pmax, ps, Kv, hd?)
         if fmt.is_residue:
-            from repro.core.moduli import decode_packed
-            vals = decode_packed(pages.astype(jnp.int32), fmt.mset)
+            vals = fmt.pack.decode(pages.astype(jnp.int32))
             pages = vals.astype(jnp.float32) * scale[tab]
         return pages.reshape(B, n_pmax * page_size, *pages.shape[3:])
 
@@ -264,8 +265,12 @@ def paged_decode(
     B = q.shape[0]
     fmt = _kv.kv_format_of(kv_layer)
     if fmt.is_residue:
-        k_raw = jnp.squeeze(kv_layer.k.planes, axis=-3)
-        v_raw = jnp.squeeze(kv_layer.v.planes, axis=-3)
+        # lane 0 is always the packed info byte; redundant formats carry
+        # extra witness lanes that the attention kernels never touch
+        k_raw = jax.lax.index_in_dim(kv_layer.k.planes, 0, axis=-3,
+                                     keepdims=False)
+        v_raw = jax.lax.index_in_dim(kv_layer.v.planes, 0, axis=-3,
+                                     keepdims=False)
         k_scale, v_scale = kv_layer.k.scale, kv_layer.v.scale
     else:
         k_raw, v_raw = kv_layer.k, kv_layer.v

@@ -25,12 +25,14 @@ lists, refcounts, prefix sharing) lives in ``repro.serving.kv_pool``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.moduli import KV4, KV8, ModuliSet, encode_packed, packed_spec
+from repro.core.moduli import KV4, KV8, KV8R2, ModuliSet
+from repro.numerics.runners import encode_packed_planes
 from repro.numerics.tensor import ResidueTensor
 
 __all__ = [
@@ -41,6 +43,7 @@ __all__ = [
     "make_paged_kv",
     "quantize_to_format",
     "dequantize_page_values",
+    "verify_pages",
     "append_token",
     "scatter_prefill",
     "layer_slice",
@@ -76,11 +79,26 @@ class KVFormat:
         assert self.mset is not None
         return int(self.qmax).bit_length()
 
+    @property
+    def pack(self):
+        """The :class:`~repro.core.moduli.PackedFormat` of the info pair."""
+        assert self.mset is not None
+        return self.mset.packed()
+
+    @property
+    def redundant(self) -> int:
+        return 0 if self.mset is None else self.mset.redundant
+
 
 KV_FORMATS: dict[str, KVFormat] = {
     "bf16": KVFormat("bf16"),
     "rns8": KVFormat("rns8", KV8),  # (15, 16): one byte per value
     "rns4": KVFormat("rns4", KV4),  # (3, 4):   one nibble per value
+    # (15, 16 | 17, 19): the fault-tolerant page format — lane 0 keeps the
+    # rns8 packed byte (kernels read it unchanged), lanes 1..2 carry
+    # redundant witness residues; any single corrupted lane (the packed
+    # byte included) is detected and reconstructed by verify_pages.
+    "rns8r": KVFormat("rns8r", KV8R2),
 }
 
 
@@ -103,15 +121,16 @@ def kv_format_of(paged: PagedKV) -> KVFormat:
 def _residue_pool(fmt: KVFormat, shape: tuple[int, ...]) -> ResidueTensor:
     """Zero-filled residue page pool for values of logical ``shape``.
 
-    ``shape = (..., Kv, hd)``; planes get a size-1 channel axis before the
-    last two dims (rns_pack convention) and ``hd`` shrinks by the packing
-    factor.  Scales start at 1 so untouched pages decode to exact zeros.
+    ``shape = (..., Kv, hd)``; planes get a ``1 + r`` channel axis before
+    the last two dims (rns_pack convention: the packed byte lane plus any
+    redundant witness lanes) and ``hd`` shrinks by the packing factor.
+    Scales start at 1 so untouched pages decode to exact zeros.
     """
-    (_, _), vpb = packed_spec(fmt.mset)
+    vpb = fmt.pack.values_per_byte
     *lead, kv, hd = shape
     if hd % vpb:
         raise ValueError(f"head_dim {hd} not divisible by packing factor {vpb}")
-    planes = jnp.zeros((*lead, 1, kv, hd // vpb), jnp.uint8)
+    planes = jnp.zeros((*lead, 1 + fmt.redundant, kv, hd // vpb), jnp.uint8)
     scale = jnp.ones((*lead, kv, 1), jnp.float32)
     return ResidueTensor(planes, scale, fmt.mset, layout="rns_pack",
                          qbits=fmt.qbits)
@@ -143,22 +162,79 @@ def quantize_to_format(
 ) -> tuple[jax.Array, jax.Array]:
     """Quantize ``x (..., Kv, hd)`` to packed residue planes + scales.
 
-    Returns ``(planes (..., 1, Kv, hd/vpb) uint8, scale (..., Kv, 1) f32)``.
-    Symmetric per-(token, head) scaling along the last axis; the quantized
-    magnitudes stay within ``fmt.qmax`` so the packed centered residues
-    reconstruct the exact integers.
+    Returns ``(planes (..., 1 + r, Kv, hd/vpb) uint8, scale (..., Kv, 1)
+    f32)``.  Symmetric per-(token, head) scaling along the last axis; the
+    quantized magnitudes stay within ``fmt.qmax`` so the packed centered
+    residues reconstruct the exact integers.  Redundant formats append
+    their witness lanes (``runners.encode_packed_planes``).
     """
     x = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / fmt.qmax
     q = jnp.clip(jnp.round(x / scale), -fmt.qmax, fmt.qmax).astype(jnp.int32)
-    planes = encode_packed(q, fmt.mset)[..., None, :, :]
-    return planes, scale
+    return encode_packed_planes(q, fmt.mset), scale
 
 
 def dequantize_page_values(t: ResidueTensor) -> jax.Array:
     """Reference dequant: packed residue planes -> f32 values."""
     return t.to_int().astype(jnp.float32) * t.scale
+
+
+@functools.partial(jax.jit, static_argnames=("mset",))
+def _verify_packed(planes: jax.Array, mset: ModuliSet):
+    """Syndrome-check and repair redundant ``rns_pack`` planes.
+
+    ``planes``: ``(..., 1 + r, Kv, hd)`` uint8 — lane 0 is the packed info
+    byte, lanes 1..r the witness residues.  A flipped bit in a witness lane
+    perturbs exactly one syndrome (rewrite the witness from the trusted
+    decode); a flipped bit in the packed byte corrupts *both* info channels
+    at once, so every syndrome fires — the value is then reconstructed
+    from the witnesses alone (their product exceeds the info range, the
+    ``make()`` condition) and lane 0 is re-encoded.  Returns
+    ``(fixed_planes, detected_count, corrected_count)``.
+    """
+    fmt = mset.packed()
+    lanes = jnp.moveaxis(planes, -3, 0).astype(jnp.int32)   # (1+r, ..., Kv, hd)
+    x = fmt.decode(lanes[0])
+    red_m = mset.redundant_moduli
+    syn = [jnp.remainder(lanes[1 + j] - jnp.remainder(x, m), m) != 0
+           for j, m in enumerate(red_m)]
+    n_nz = functools.reduce(jnp.add, [s.astype(jnp.int32) for s in syn])
+    detected = n_nz > 0
+    witness_fault = n_nz == 1
+    byte_fault = jnp.zeros_like(detected)
+    x_fixed = x
+    if len(red_m) >= 2:
+        red_set = ModuliSet.make(red_m)
+        x_w = red_set.from_residues(jnp.stack(lanes[1:1 + len(red_m)]))
+        byte_fault = (n_nz >= 2) & (jnp.abs(x_w) <= mset.half_range)
+        x_fixed = jnp.where(byte_fault, x_w, x)
+    out = [jnp.where(byte_fault, fmt.encode(x_fixed).astype(jnp.int32),
+                     lanes[0])]
+    for j, m in enumerate(red_m):
+        good = jnp.remainder(x, m)
+        out.append(jnp.where(witness_fault & syn[j], good, lanes[1 + j]))
+    fixed = jnp.moveaxis(jnp.stack(out, axis=0), 0, -3).astype(jnp.uint8)
+    corrected = witness_fault | byte_fault
+    return fixed, detected.sum(), corrected.sum()
+
+
+def verify_pages(t: ResidueTensor) -> tuple[ResidueTensor, int, int]:
+    """Verify + repair a redundant residue page pool (host-sync counts).
+
+    The page-side half of the scrub-on-decode policy: K or V pools in the
+    ``rns8r`` format are syndrome-checked lane-wise and any single faulty
+    lane per value — witness *or* the packed byte itself — is
+    reconstructed.  Returns ``(fixed, detected, corrected)`` with host-int
+    element counts.  Non-redundant pools return unchanged with zeros.
+    The f32 scale lane is not covered (it is not residue-coded).
+    """
+    if not isinstance(t, ResidueTensor) or t.layout != "rns_pack":
+        raise TypeError("verify_pages expects an rns_pack ResidueTensor")
+    if t.mset.redundant == 0:
+        return t, 0, 0
+    fixed, det, cor = _verify_packed(t.planes, t.mset)
+    return dataclasses.replace(t, planes=fixed), int(det), int(cor)
 
 
 # -- per-token append / prefill scatter ---------------------------------------
@@ -173,7 +249,7 @@ def append_token(
     """Write one token per slot into a single layer's page pool.
 
     ``kv_layer`` leaves are per-layer (no leading L axis): dense
-    ``(P, ps, Kv, hd)`` or residue planes ``(P, ps, 1, Kv, hdp)``.
+    ``(P, ps, Kv, hd)`` or residue planes ``(P, ps, 1 + r, Kv, hdp)``.
     ``k_new``/``v_new`` are ``(B, Kv, hd)`` in the cache dtype; ``pages`` and
     ``offs`` are ``(B,)`` int32.  Inactive slots should point at the
     reserved dump page so their writes land harmlessly.
@@ -260,8 +336,9 @@ def bytes_per_token(
     if isinstance(fmt, str):
         fmt = KV_FORMATS[fmt]
     if fmt.is_residue:
-        (_, _), vpb = packed_spec(fmt.mset)
-        return 2 * (n_kv * head_dim // vpb + n_kv * 4)
+        vpb = fmt.pack.values_per_byte
+        plane_bytes = n_kv * (head_dim // vpb + fmt.redundant * head_dim)
+        return 2 * (plane_bytes + n_kv * 4)
     return 2 * n_kv * head_dim * jnp.dtype(dtype).itemsize
 
 

@@ -178,18 +178,31 @@ def encode_rns_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
 
 
 def encode_packed_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
-    """Integer values (..., K, N) -> bit-packed planes (..., 1, K, N/vpb).
+    """Integer values (..., K, N) -> bit-packed planes (..., 1 + r, K, N/vpb).
 
     The ``rns_pack`` storage layout (KV pages): both centered residues of a
-    packable 2-channel set share byte lanes (``core/moduli.encode_packed``);
-    the size-1 channel axis keeps the scan-sliceable ResidueTensor contract.
+    packable 2-channel set share byte lanes (``ModuliSet.packed()``); the
+    channel axis keeps the scan-sliceable ResidueTensor contract.  Redundant
+    sets append ``r`` unpacked witness lanes (canonical residues mod the
+    redundant moduli, uint8) after the packed lane — the storage behind the
+    fault-tolerant KV page format (``kv_pages.verify_pages``).
     """
-    from repro.core.moduli import encode_packed
+    fmt = mset.packed()
+    lane0 = fmt.encode(w)
+    if mset.redundant == 0:
+        return lane0[..., None, :, :]
+    if fmt.values_per_byte != 1:
+        raise ValueError(
+            "redundant rns_pack needs one value per byte, got "
+            f"vpb={fmt.values_per_byte} for {mset.moduli}")
+    w32 = w.astype(jnp.int32)
+    red = [jnp.remainder(w32, m).astype(jnp.uint8)
+           for m in mset.redundant_moduli]
+    return jnp.stack([lane0, *red], axis=-3)
 
-    return encode_packed(w, mset)[..., None, :, :]
 
-
-def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend, shard=None):
+def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend, shard=None,
+            verify=None):
     """Shared runner: activation conversion + segmentation + kernel dispatch.
 
     ``b_res``: (C, K, N) pre-encoded centered residue planes.  Every public
@@ -200,12 +213,27 @@ def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend, shard=None):
     mesh (rows over dp, plane columns over tp; per-shard kernels, no
     collectives).  Column slices of the exact integer matmul commute with
     the kernel, so sharded output == single-device output bit-for-bit.
+
+    ``verify``: redundant moduli sets carry their witness channels through
+    the matmul for free (channels are independent), and the per-segment
+    decode runs :meth:`ModuliSet.corrected_decode` — base-extension
+    syndrome compare, escalating to single-channel reconstruction under a
+    ``lax.cond`` only when a fault is present.  A corrupted weight plane
+    channel therefore never reaches the value domain: the step's output is
+    bit-identical to the fault-free run.  ``None`` (default) enables the
+    check exactly when ``mset.redundant >= 2``; ``False`` forces the raw
+    info-channel decode (the bench baseline for the check's overhead).
     """
     if shard is not None:
         body = functools.partial(rns_run, mset=mset, max_abs_a=max_abs_a,
-                                 max_abs_b=max_abs_b, backend=backend)
+                                 max_abs_b=max_abs_b, backend=backend,
+                                 verify=verify)
         return _shard_mapped(body, shard, sd_planes=False)(a, b_res)
     impl = get_impl("rns_matmul", backend)
+    if verify is None:
+        verify = mset.redundant >= 2
+    decode = mset.corrected_decode if (verify and mset.redundant) \
+        else mset.from_residues
     M, K = a.shape
     C, K2, N = b_res.shape
     assert K == K2, (a.shape, b_res.shape)
@@ -230,7 +258,7 @@ def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend, shard=None):
         a_p = jnp.zeros((C, Mp, Kp), res_dtype).at[:, :M, : hi - lo].set(a_s)
         b_p = jnp.zeros((C, Kp, Np), res_dtype).at[:, : hi - lo, :N].set(b_s)
         out_res = impl(a_p, b_p, mset, bm, bn, bk)
-        total = total + mset.from_residues(out_res[:, :M, :N])
+        total = total + decode(out_res[:, :M, :N])
     return total
 
 

@@ -10,10 +10,11 @@ Everything the dispatch surface needs to pick a kernel rides on the tensor:
   friendly).  Layout ``"rns"``: ``(*stack, C, K, N)`` centered residue
   planes (int8 when the moduli allow).  Layouts ``"sd"``/``"sd_matvec"``:
   ``(*stack, C, K, N, n)`` int8 signed-digit planes, digit axis LSB-first.
-  Layout ``"rns_pack"``: ``(*stack, 1, K, N/vpb)`` uint8 — both centered
-  residues of a packable 2-channel set bit-packed into byte lanes
-  (``core/moduli.packed_spec``), the storage format of the residue-domain
-  KV pages (``numerics/kv_pages.py``); a storage-only layout (decode
+  Layout ``"rns_pack"``: ``(*stack, 1 + r, K, N/vpb)`` uint8 — both
+  centered residues of a packable 2-channel set bit-packed into byte lanes
+  (``ModuliSet.packed()``), the storage format of the residue-domain
+  KV pages (``numerics/kv_pages.py``); redundant sets add ``r`` unpacked
+  witness lanes after the packed lane.  A storage-only layout (decode
   before arithmetic).  The channel axis lands *after* any leading stack
   axes so prepared parameter trees slice cleanly under ``jax.lax.scan``.
 * ``scale``   — optional dequantization scale (a second leaf), broadcastable
@@ -40,7 +41,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.moduli import ModuliSet, decode_packed, packed_spec
+from repro.core.moduli import ModuliSet
 
 __all__ = ["LAYOUTS", "ResidueTensor"]
 
@@ -85,11 +86,19 @@ class ResidueTensor:
                 f"(*stack, C, K, N{', n' if need == 4 else ''}), "
                 f"got shape {self.planes.shape}")
         if self.layout == "rns_pack":
-            packed_spec(self.mset)   # raises unless the set is packable
-            if self.planes.shape[self.channel_axis] != 1:
+            fmt = self.mset.packed()   # raises unless the set is packable
+            lanes = 1 + self.mset.redundant
+            if self.mset.redundant and fmt.values_per_byte != 1:
                 raise ValueError(
-                    "rns_pack planes pack both residue channels into one "
-                    f"byte axis (size-1 channel dim), got {self.planes.shape}")
+                    "redundant rns_pack needs one value per byte (the "
+                    "unpacked redundant lanes must match the packed lane "
+                    f"shape), got vpb={fmt.values_per_byte} for "
+                    f"{self.mset.moduli}")
+            if self.planes.shape[self.channel_axis] != lanes:
+                raise ValueError(
+                    "rns_pack planes pack the info residue pair into one "
+                    f"byte lane plus {self.mset.redundant} redundant "
+                    f"lane(s) (channel dim {lanes}), got {self.planes.shape}")
             return
         C = self.mset.num_channels
         if self.planes.shape[self.channel_axis] != C:
@@ -98,6 +107,11 @@ class ResidueTensor:
                 f"channels at axis {self.channel_axis} but mset "
                 f"{self.mset.moduli} has {C}")
         if self.is_sd:
+            if self.mset.redundant:
+                raise ValueError(
+                    "signed-digit layouts cannot carry redundant channels "
+                    "(redundant moduli are generic, not special); use "
+                    "layout='rns' for fault-tolerant residency")
             n = _digit_width(self.mset)
             if self.planes.shape[-1] != n:
                 raise ValueError(
@@ -141,7 +155,7 @@ class ResidueTensor:
             del s[-1]
         del s[self.channel_axis]
         if self.layout == "rns_pack":
-            s[-1] *= packed_spec(self.mset)[1]   # values per byte
+            s[-1] *= self.mset.packed().values_per_byte
         return tuple(s)
 
     @property
@@ -274,8 +288,11 @@ class ResidueTensor:
         from repro.core import sdrns
 
         if self.layout == "rns_pack":
-            packed = jnp.squeeze(self.planes, axis=self.channel_axis)
-            return decode_packed(packed, self.mset)
+            # lane 0 is the packed info pair; any redundant lanes are
+            # consistency witnesses, checked by kv_pages.verify_pages
+            packed = jax.lax.index_in_dim(
+                self.planes, 0, axis=self.channel_axis, keepdims=False)
+            return self.mset.packed().decode(packed)
         cf = self._channel_first()
         if self.is_sd:
             return sdrns.sdrns_decode(cf, self.mset)

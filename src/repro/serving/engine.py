@@ -41,10 +41,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import numerics as nx
 from repro.models.api import Model
+from repro.numerics import ResidueTensor
 from repro.numerics import kv_pages as kvp
 from repro.parallel.sharding import get_shard_ctx
 from repro.serving.kv_pool import KVPagePool
+from repro.serving.stats import EngineStats, RequestStats, deprecated_stat
 
 __all__ = ["ServingEngine", "GenerateResult", "SegmentResult"]
 
@@ -56,9 +59,12 @@ class GenerateResult:
     tokens: np.ndarray          # (B, n_emitted) generated ids
     prefill_logits: np.ndarray  # (B, vocab) — logits of the *prefill* pass
     steps: int                  # decode steps actually executed
-    decode_dispatches: int = 0  # device dispatches issued for the decode loop
-    pages_allocated: int = 0    # KV pages taken from the pool (paged path)
-    pages_freed: int = 0        # KV pages returned (paged path)
+    stats: RequestStats = dataclasses.field(default_factory=RequestStats)
+
+    # legacy counter attributes (property objects are not dataclass fields)
+    decode_dispatches = deprecated_stat("GenerateResult", "decode_dispatches")
+    pages_allocated = deprecated_stat("GenerateResult", "pages_allocated")
+    pages_freed = deprecated_stat("GenerateResult", "pages_freed")
 
 
 @dataclasses.dataclass
@@ -67,6 +73,8 @@ class SegmentResult:
     tokens: np.ndarray   # (B, n) tokens emitted this segment, all slots
     steps: int           # decode steps executed (== n)
     done: np.ndarray     # (B,) bool — per-slot finished mask at exit
+    faults_detected: int = 0   # scrub detections during this segment
+    faults_corrected: int = 0  # ... repaired before the dispatch ran
 
 
 class ServingEngine:
@@ -74,7 +82,8 @@ class ServingEngine:
                  s_max: int, cache_dtype=jnp.bfloat16, prepare: bool = True,
                  fused_loop: bool = True, paged: bool | None = None,
                  page_size: int = 64, kv_format: str = "bf16",
-                 num_pages: int | None = None, prefix_cache: bool = True):
+                 num_pages: int | None = None, prefix_cache: bool = True,
+                 scrub: str = "off"):
         """``prepare=True`` makes quantized weights residue-resident up
         front (identity under the bns backend); ``prepare=False`` keeps the
         convert-per-call path — useful only as a baseline to measure the
@@ -94,7 +103,16 @@ class ServingEngine:
         planes, ~1.9x / ~3.6x fewer cache bytes, tolerance-pinned);
         ``num_pages`` sizes the pool (default: full capacity for ``batch``
         slots plus one dump page); ``prefix_cache`` enables shared-prefix
-        page reuse on the scheduler's admission path."""
+        page reuse on the scheduler's admission path.
+
+        ``scrub="decode"`` turns on the redundant-residue scrub policy:
+        before every decode dispatch the engine syndrome-checks all
+        redundant residue state — resident weight planes (``nx.scrub``)
+        and redundant KV pages (``kv_pages.verify_pages``) — repairing any
+        single-channel fault in place and counting it under
+        ``engine.stats.faults``.  A no-op unless the model weights carry a
+        redundant moduli set (``build_model(rns_mset=...)``) or the pool
+        uses a redundant page format (``kv_format="rns8r"``)."""
         self.model = model
         self.params = model.prepare_params(params) if prepare else params
         self.prepared = prepare
@@ -107,10 +125,13 @@ class ServingEngine:
         self._fused = jax.jit(self._fused_loop_fn,
                               static_argnames=("max_new_cap", "greedy"),
                               donate_argnums=(2,))
-        self.decode_steps = 0       # cumulative decode-step count (telemetry)
-        self.decode_dispatches = 0  # cumulative decode dispatches (telemetry)
-        self.fused_retraces = 0     # fused-loop traces beyond the first
+        if scrub not in ("off", "decode"):
+            raise ValueError(
+                f"scrub must be 'off' or 'decode', got {scrub!r}")
+        self.scrub = scrub
+        self.stats = EngineStats()
         self._trace_count = 0
+        self._last_scrub = (0, 0)   # (detected, corrected) of the last pass
 
         supported = (fused_loop and model.decode_paged is not None
                      and get_shard_ctx() is None)
@@ -140,8 +161,14 @@ class ServingEngine:
             self._fused_paged = jax.jit(self._fused_paged_fn,
                                         static_argnames=("seg_cap", "greedy"),
                                         donate_argnums=(2,))
+            self.stats.pool = self.pool.stats
         else:
             self.pool = None
+
+    # legacy counter attributes (see repro.serving.stats)
+    decode_steps = deprecated_stat("ServingEngine", "decode_steps")
+    decode_dispatches = deprecated_stat("ServingEngine", "decode_dispatches")
+    fused_retraces = deprecated_stat("ServingEngine", "fused_retraces")
 
     # -- trace accounting (satellite: silent per-bucket retraces) ------------
 
@@ -157,11 +184,57 @@ class ServingEngine:
         cur = self.fused_cache_size()
         if cur > self._trace_count:
             if self._trace_count > 0:
-                self.fused_retraces += cur - self._trace_count
+                self.stats.fused_retraces += cur - self._trace_count
             logger.info(
                 "fused decode loop traced for bucket cap=%d (%d trace(s) "
-                "total, %d retrace(s))", bucket, cur, self.fused_retraces)
+                "total, %d retrace(s))", bucket, cur,
+                self.stats.fused_retraces)
             self._trace_count = cur
+
+    # -- redundant-residue scrub (DESIGN.md §12) -----------------------------
+
+    def _scrub_pass(self) -> tuple[int, int]:
+        """Syndrome-check + repair all redundant residue state in place.
+
+        Walks the resident parameter tree (redundant ``rns`` weight planes
+        via :func:`repro.numerics.scrub`) and the paged KV pool (redundant
+        page formats via :func:`repro.numerics.kv_pages.verify_pages`).
+        Returns the ``(detected, corrected)`` element counts of this pass
+        and folds them into ``stats.faults``.  No-op unless
+        ``scrub="decode"`` and some state actually carries redundancy.
+        """
+        if self.scrub != "decode":
+            return 0, 0
+        det = cor = 0
+        scrubbed_weights = False
+
+        def fix(t):
+            nonlocal det, cor, scrubbed_weights
+            if (isinstance(t, ResidueTensor) and t.layout == "rns"
+                    and t.mset.redundant):
+                t, d, c = nx.scrub(t)
+                det += d
+                cor += c
+                scrubbed_weights = True
+            return t
+
+        self.params = jax.tree_util.tree_map(
+            fix, self.params,
+            is_leaf=lambda x: isinstance(x, ResidueTensor))
+        if scrubbed_weights:
+            self.stats.faults.weight_scrubs += 1
+        if (self.paged and self.pool.fmt.is_residue
+                and self.pool.fmt.redundant):
+            kv = self.pool.kv
+            k2, dk, ck = kvp.verify_pages(kv.k)
+            v2, dv, cv = kvp.verify_pages(kv.v)
+            self.pool.kv = kvp.PagedKV(k2, v2)
+            det += dk + dv
+            cor += ck + cv
+            self.stats.faults.kv_scrubs += 1
+        self.stats.faults.detected += det
+        self.stats.faults.corrected += cor
+        return det, cor
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -211,6 +284,7 @@ class ServingEngine:
             eos = np.broadcast_to(np.asarray(eos, np.int64), (B,))
             done = np.zeros(B, bool) if active is None else \
                 ~np.asarray(active, bool)
+        f_det, f_cor = self._scrub_pass()
         outs = []
         steps = 0
         for i in range(max_new):
@@ -226,11 +300,14 @@ class ServingEngine:
             logits, cache = self._decode(self.params, tok, cache, pos)
             steps += 1
             tok = self._sample(logits, temperature, key, i + 1)
-        self.decode_steps += steps
-        self.decode_dispatches += steps
-        return GenerateResult(tokens=np.stack(outs, axis=1),
-                              prefill_logits=prefill_logits,
-                              steps=steps, decode_dispatches=steps)
+        self.stats.decode_steps += steps
+        self.stats.decode_dispatches += steps
+        return GenerateResult(
+            tokens=np.stack(outs, axis=1), prefill_logits=prefill_logits,
+            steps=steps,
+            stats=RequestStats(decode_steps=steps, decode_dispatches=steps,
+                               faults_detected=f_det,
+                               faults_corrected=f_cor))
 
     # -- fused decode loop ---------------------------------------------------
 
@@ -255,6 +332,7 @@ class ServingEngine:
         # per-value retrace of the whole fused graph would dwarf the
         # per-token dispatch overhead this loop exists to eliminate)
         cap = self._bucket(max_new)
+        f_det, f_cor = self._scrub_pass()
         buf, n, steps, _ = self._fused(
             self.params, tok, cache, jnp.int32(prompt_len),
             jnp.asarray(np.clip(eos_vec, -1, 2**31 - 1), jnp.int32),
@@ -266,11 +344,14 @@ class ServingEngine:
         self._note_fused_dispatch(cap)
         n = int(n)          # the single host sync of the whole decode loop
         steps = int(steps)
-        self.decode_steps += steps
-        self.decode_dispatches += 1
-        return GenerateResult(tokens=np.asarray(buf)[:, :n],
-                              prefill_logits=prefill_logits,
-                              steps=steps, decode_dispatches=1)
+        self.stats.decode_steps += steps
+        self.stats.decode_dispatches += 1
+        return GenerateResult(
+            tokens=np.asarray(buf)[:, :n], prefill_logits=prefill_logits,
+            steps=steps,
+            stats=RequestStats(decode_steps=steps, decode_dispatches=1,
+                               faults_detected=f_det,
+                               faults_corrected=f_cor))
 
     def _fused_loop_fn(self, params, tok0, cache, start_pos, eos, done0,
                        temperature, key, max_new, *, max_new_cap: int,
@@ -391,6 +472,7 @@ class ServingEngine:
         scheduler both funnel through here.  Returns (tokens, steps, done)
         with tokens already truncated to the emitted count."""
         cap = self._bucket(seg)
+        self._last_scrub = self._scrub_pass()
         buf, n, steps, kv, done = self._fused_paged(
             self.params, tok0, self.pool.kv,
             jnp.asarray(tabs, jnp.int32),
@@ -407,8 +489,8 @@ class ServingEngine:
         self._note_fused_dispatch(cap)
         n = int(n)             # the single host sync of the segment
         steps = int(steps)
-        self.decode_steps += steps
-        self.decode_dispatches += 1
+        self.stats.decode_steps += steps
+        self.stats.decode_dispatches += 1
         return np.asarray(buf)[:, :n], steps, np.asarray(done)
 
     def _generate_paged(self, tok, cache, prompt_len, max_new, temperature,
@@ -444,11 +526,15 @@ class ServingEngine:
         tokens = np.concatenate([np.asarray(tok), buf], axis=1)
         for p in slot_pages:
             pool.release(p)
+        f_det, f_cor = self._last_scrub
         return GenerateResult(
             tokens=tokens, prefill_logits=prefill_logits, steps=steps,
-            decode_dispatches=1,
-            pages_allocated=pool.stats.pages_allocated - a0.pages_allocated,
-            pages_freed=pool.stats.pages_freed - a0.pages_freed)
+            stats=RequestStats(
+                decode_steps=steps, decode_dispatches=1,
+                pages_allocated=(pool.stats.pages_allocated
+                                 - a0.pages_allocated),
+                pages_freed=pool.stats.pages_freed - a0.pages_freed,
+                faults_detected=f_det, faults_corrected=f_cor))
 
     # -- continuous-batching admission / segment API -------------------------
 
@@ -515,7 +601,9 @@ class ServingEngine:
         buf, steps, done = self._dispatch_segment(
             jnp.asarray(tok0, jnp.int32), pos0, eos_vec, done0, remaining,
             tabs, seg, temperature, key, key_base, stop_on_finish, greedy)
-        return SegmentResult(tokens=buf, steps=steps, done=done)
+        f_det, f_cor = self._last_scrub
+        return SegmentResult(tokens=buf, steps=steps, done=done,
+                             faults_detected=f_det, faults_corrected=f_cor)
 
     @staticmethod
     def _sample(logits: jax.Array, temperature: float,

@@ -30,28 +30,30 @@ State machine per page:  free -> active(ref>0) -> [cached-free -> active]*
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.numerics import kv_pages as kvp
+from repro.serving.stats import PoolStats as _PoolStats
 
 __all__ = ["KVPagePool", "AdmitInfo", "PoolStats"]
 
 _LOGITS_CACHE_CAP = 512
 
 
-@dataclasses.dataclass
-class PoolStats:
-    pages_allocated: int = 0
-    pages_freed: int = 0
-    prefix_hits: int = 0
-    prefill_skips: int = 0
-    evictions: int = 0
-
-    def snapshot(self) -> "PoolStats":
-        return dataclasses.replace(self)
+def __getattr__(name: str):
+    # PoolStats moved to the typed telemetry surface (repro.serving.stats);
+    # the old import path keeps working behind a DeprecationWarning.
+    if name == "PoolStats":
+        warnings.warn(
+            "repro.serving.kv_pool.PoolStats is deprecated; import it from "
+            "repro.serving.stats",
+            DeprecationWarning, stacklevel=2)
+        return _PoolStats
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -78,7 +80,7 @@ class KVPagePool:
         self.prefix_enabled = prefix_cache
         self.kv = kvp.make_paged_kv(n_layers, num_pages, page_size, n_kv,
                                     head_dim, fmt=self.fmt, dtype=dtype)
-        self.stats = PoolStats()
+        self.stats = _PoolStats()
         self._init_host_state()
 
     def _init_host_state(self) -> None:

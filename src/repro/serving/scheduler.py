@@ -30,6 +30,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.serving.engine import ServingEngine
+from repro.serving.stats import RequestStats, deprecated_stat
 
 __all__ = ["Request", "RequestScheduler"]
 
@@ -42,14 +43,18 @@ class Request:
     eos: int | None = None
 
     result: np.ndarray | None = None   # filled by the scheduler
-    # -- per-request telemetry (filled by the scheduler) ---------------------
-    decode_steps: int = 0         # fused decode steps this request rode in
-    decode_dispatches: int = 0    # decode segments it participated in
-    pages_allocated: int = 0      # KV pages newly allocated at admission
-    pages_freed: int = 0          # KV pages released at retirement
-    prefix_hits: int = 0          # prompt pages reused from the prefix cache
-    prefill_skipped: bool = False  # whole prompt cached -> no prefill pass
-    latency_s: float = 0.0        # serve() entry -> this request completed
+    # per-request telemetry (filled by the scheduler) — see
+    # repro.serving.stats.RequestStats for the field inventory
+    stats: RequestStats = dataclasses.field(default_factory=RequestStats)
+
+    # legacy telemetry attributes (property objects are not dataclass fields)
+    decode_steps = deprecated_stat("Request", "decode_steps")
+    decode_dispatches = deprecated_stat("Request", "decode_dispatches")
+    pages_allocated = deprecated_stat("Request", "pages_allocated")
+    pages_freed = deprecated_stat("Request", "pages_freed")
+    prefix_hits = deprecated_stat("Request", "prefix_hits")
+    prefill_skipped = deprecated_stat("Request", "prefill_skipped")
+    latency_s = deprecated_stat("Request", "latency_s")
 
 
 @dataclasses.dataclass
@@ -106,9 +111,9 @@ class RequestScheduler:
             admitted = eng.admit_prefill(batch_toks, batch_total)
             for s, r in pend.items():
                 logits, info = admitted[s]
-                r.pages_allocated = info.pages_allocated
-                r.prefix_hits = info.prefix_hits
-                r.prefill_skipped = info.cached_logits is not None
+                r.stats.pages_allocated = info.pages_allocated
+                r.stats.prefix_hits = info.prefix_hits
+                r.stats.prefill_skipped = info.cached_logits is not None
                 tok0 = int(np.argmax(logits))
                 slot = _Slot(req=r, emitted=[tok0],
                              tab=eng.pool.tab_row(info.pages, eng.n_pmax),
@@ -129,8 +134,8 @@ class RequestScheduler:
             r.result = toks
             freed_before = eng.pool.stats.pages_freed
             eng.pool.release(slot.pages)
-            r.pages_freed = eng.pool.stats.pages_freed - freed_before
-            r.latency_s = time.perf_counter() - self._t0
+            r.stats.pages_freed = eng.pool.stats.pages_freed - freed_before
+            r.stats.latency_s = time.perf_counter() - self._t0
             finished.append(r)
 
         while queue or slots:
@@ -168,8 +173,13 @@ class RequestScheduler:
                     if hits.size:
                         stop = int(hits[0]) + 1
                 sl.emitted += [int(t) for t in row[:stop]]
-                r.decode_steps += res.steps
-                r.decode_dispatches += 1
+                r.stats.decode_steps += res.steps
+                r.stats.decode_dispatches += 1
+                # scrub counters are pool/param-wide per segment — every
+                # co-resident request observed (and survived) the same
+                # faults, so each carries the segment's counts
+                r.stats.faults_detected += res.faults_detected
+                r.stats.faults_corrected += res.faults_corrected
                 if (stop is not None
                         or len(sl.emitted) >= r.max_new):
                     del slots[s]
@@ -208,11 +218,13 @@ class RequestScheduler:
                 if hits.size:
                     toks = toks[: hits[0] + 1]
             r.result = toks
-            r.decode_steps = out.steps
-            r.decode_dispatches = out.decode_dispatches
-            r.pages_allocated = out.pages_allocated
-            r.pages_freed = out.pages_freed
+            r.stats.decode_steps = out.steps
+            r.stats.decode_dispatches = out.stats.decode_dispatches
+            r.stats.pages_allocated = out.stats.pages_allocated
+            r.stats.pages_freed = out.stats.pages_freed
+            r.stats.faults_detected = out.stats.faults_detected
+            r.stats.faults_corrected = out.stats.faults_corrected
             # every round member returns at the round boundary — the short
             # requests' latency is pinned to the round's straggler
-            r.latency_s = time.perf_counter() - self._t0
+            r.stats.latency_s = time.perf_counter() - self._t0
         return reqs

@@ -1,0 +1,185 @@
+"""Fault injection for the redundant-residue serving stack.
+
+:func:`inject_faults` patches a :class:`~repro.serving.engine.ServingEngine`
+so that its next fused decode dispatch is split in two at ``after_steps``
+tokens, with bit flips applied to residue state *between* the halves —
+i.e. genuinely mid-decode, inside one ``generate()`` call, after real KV
+rows have been written.  Under ``scrub="decode"`` the engine's scrub pass
+at the second dispatch boundary must detect and repair every injected
+fault before the remaining tokens are produced; with redundant weight
+moduli the matmul-level ``corrected_decode`` masks weight faults even
+without a scrub.
+
+Faults are described by :class:`FaultSpec`:
+
+* ``kind="weight"`` — flip ``bit`` in residue ``channel`` of the
+  ``leaf``-th residue-resident weight tensor (tree-walk order) at flat
+  element ``index`` of that channel's plane.
+* ``kind="kv"`` — flip ``bit`` in lane ``channel`` of the paged KV pool
+  (``which`` picks K or V), addressed either by ``at`` (a multi-index into
+  the lane-removed plane array ``(L, P, ps, Kv, hdp)``) or by flat
+  ``index``.
+
+Everything operates on host copies and writes the corrupted arrays back,
+so no jit caches are invalidated.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.numerics import ResidueTensor
+from repro.numerics.kv_pages import PagedKV
+
+__all__ = ["FaultSpec", "inject_faults", "flip_weight_bit", "flip_kv_bit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    kind: str                  # "weight" | "kv"
+    bit: int = 0x01            # XOR mask applied to the stored byte
+    channel: int = 0           # residue channel (weight) / plane lane (kv)
+    index: int = 0             # flat element index within the channel plane
+    leaf: int = 0              # which resident weight leaf (kind="weight")
+    which: str = "k"           # "k" | "v" pool side (kind="kv")
+    at: tuple[int, ...] | None = None  # multi-index alternative to ``index``
+
+    def __post_init__(self):
+        if self.kind not in ("weight", "kv"):
+            raise ValueError(f"kind must be 'weight' or 'kv', got "
+                             f"{self.kind!r}")
+        if self.kind == "kv" and self.which not in ("k", "v"):
+            raise ValueError(f"which must be 'k' or 'v', got {self.which!r}")
+        if not 0 < self.bit <= 0xFF:
+            raise ValueError(f"bit must be a nonzero byte mask, got "
+                             f"{self.bit:#x}")
+
+
+def _flip_planes(planes: jnp.ndarray, channel_axis: int, channel: int,
+                 index: int, at: tuple[int, ...] | None,
+                 bit: int) -> tuple[jnp.ndarray, tuple[int, ...]]:
+    """XOR ``bit`` into one stored byte; returns (new planes, location)."""
+    arr = np.asarray(planes).copy()
+    u8 = arr.view(np.uint8)
+    cf = np.moveaxis(u8, channel_axis, 0)          # view — writes propagate
+    if at is None:
+        at = np.unravel_index(index % int(np.prod(cf.shape[1:])),
+                              cf.shape[1:])
+    loc = (channel % cf.shape[0], *at)
+    cf[loc] ^= bit
+    return jnp.asarray(arr), loc
+
+
+def _resident_leaves(params) -> list[ResidueTensor]:
+    import jax
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, ResidueTensor))
+    return [t for t in leaves
+            if isinstance(t, ResidueTensor) and t.layout == "rns"]
+
+
+def flip_weight_bit(engine, spec: FaultSpec) -> tuple[int, ...]:
+    """Corrupt one residue-resident weight plane byte in place."""
+    import jax
+    targets = _resident_leaves(engine.params)
+    if not targets:
+        raise ValueError("engine has no residue-resident rns weights")
+    victim = targets[spec.leaf % len(targets)]
+    fixed, loc = _flip_planes(victim.planes, victim.channel_axis,
+                              spec.channel, spec.index, spec.at, spec.bit)
+    hit = {"done": False}
+
+    def swap(t):
+        if (isinstance(t, ResidueTensor) and t is victim
+                and not hit["done"]):
+            hit["done"] = True
+            return t._with_planes(fixed)
+        return t
+
+    engine.params = jax.tree_util.tree_map(
+        swap, engine.params, is_leaf=lambda x: isinstance(x, ResidueTensor))
+    assert hit["done"]
+    return loc
+
+
+def flip_kv_bit(engine, spec: FaultSpec) -> tuple[int, ...]:
+    """Corrupt one paged-KV plane byte in place (``engine.pool.kv``)."""
+    if engine.pool is None:
+        raise ValueError("engine is not paged — no KV pool to corrupt")
+    kv = engine.pool.kv
+    t = kv.k if spec.which == "k" else kv.v
+    if not isinstance(t, ResidueTensor):
+        raise ValueError("KV pool is not residue-formatted (use a rns* "
+                         "kv_format)")
+    fixed, loc = _flip_planes(t.planes, t.planes.ndim - 3, spec.channel,
+                              spec.index, spec.at, spec.bit)
+    t2 = dataclasses.replace(t, planes=fixed)
+    engine.pool.kv = (PagedKV(t2, kv.v) if spec.which == "k"
+                      else PagedKV(kv.k, t2))
+    return loc
+
+
+def _apply(engine, faults, log: list) -> None:
+    for spec in faults:
+        if spec.kind == "weight":
+            loc = flip_weight_bit(engine, spec)
+        else:
+            loc = flip_kv_bit(engine, spec)
+        log.append((spec, loc))
+
+
+@contextlib.contextmanager
+def inject_faults(engine, faults, *,
+                  after_steps: int = 1) -> Iterator[list]:
+    """Arm ``engine`` to take ``faults`` mid-decode (paged engines).
+
+    The next fused decode dispatch is split at ``after_steps`` emitted
+    tokens: the first sub-segment runs clean, the bit flips land, and the
+    remainder of the segment continues from the exact same carry (token,
+    positions, budgets, sampling fold-in) — so a fault-free engine would
+    produce bit-identical output, and a scrubbing engine must repair the
+    damage at the second dispatch boundary to match.  Yields a log of
+    ``(FaultSpec, location)`` tuples, filled when the faults fire.
+    Subsequent dispatches (and re-entry) run unpatched.
+    """
+    if engine.pool is None:
+        raise ValueError("inject_faults drives the paged dispatch path; "
+                         "construct the engine with paged=True")
+    orig = engine._dispatch_segment
+    log: list = []
+    armed = {"live": True}
+
+    def patched(tok0, pos0, eos_vec, done0, remaining, tabs, seg,
+                temperature, key, key_base, stop_on_finish, greedy):
+        if not armed["live"]:
+            return orig(tok0, pos0, eos_vec, done0, remaining, tabs, seg,
+                        temperature, key, key_base, stop_on_finish, greedy)
+        armed["live"] = False
+        k = min(int(after_steps), int(seg))
+        if k <= 0:
+            _apply(engine, faults, log)
+            return orig(tok0, pos0, eos_vec, done0, remaining, tabs, seg,
+                        temperature, key, key_base, stop_on_finish, greedy)
+        buf1, steps1, done1 = orig(tok0, pos0, eos_vec, done0, remaining,
+                                   tabs, k, temperature, key, key_base,
+                                   stop_on_finish, greedy)
+        _apply(engine, faults, log)
+        if steps1 >= int(seg) or bool(np.asarray(done1).all()):
+            return buf1, steps1, done1
+        tok2 = jnp.asarray(buf1[:, steps1 - 1:steps1], jnp.int32)
+        buf2, steps2, done2 = orig(
+            tok2, np.asarray(pos0) + steps1, eos_vec, done1,
+            np.asarray(remaining) - steps1, tabs, int(seg) - steps1,
+            temperature, key, key_base + steps1, stop_on_finish, greedy)
+        return (np.concatenate([buf1, buf2], axis=1), steps1 + steps2,
+                done2)
+
+    engine._dispatch_segment = patched
+    try:
+        yield log
+    finally:
+        engine._dispatch_segment = orig

@@ -1,0 +1,273 @@
+"""Redundant-residue fault tolerance: serve through silent data corruption.
+
+The acceptance pin: with ``redundant=2`` weight moduli (P21R2) and the
+``rns8r`` redundant KV-page format, bit flips injected into a resident
+weight plane AND live KV pages *mid-decode* are detected, corrected, and
+the generated tokens are bit-identical to a clean run — with the whole
+episode visible in the typed telemetry (``EngineStats`` /
+``RequestStats``).  Also pins the page-level ``verify_pages`` repair in
+isolation, the matmul-level ``corrected_decode`` masking (scrub off), the
+continuous-batching attribution path, and the legacy telemetry
+deprecation shims.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.moduli import KV8R2, P21R2
+from repro.models.api import build_model
+from repro.numerics import kv_pages as kvp
+from repro.serving import kv_pool
+from repro.serving.engine import GenerateResult, ServingEngine
+from repro.serving.scheduler import Request, RequestScheduler
+from repro.serving.stats import EngineStats, PoolStats, RequestStats
+from repro.testing.faults import FaultSpec, flip_weight_bit, inject_faults
+
+CFG = ArchConfig(name="t", family="dense", d_model=64, n_layers=2,
+                 n_heads=4, n_kv=2, d_ff=128, vocab=97,
+                 compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def rmodel():
+    model = build_model(CFG, system="rns", rns_mset=P21R2)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _engine(rmodel, **kw):
+    model, params = rmodel
+    kw.setdefault("kv_format", "rns8r")
+    kw.setdefault("scrub", "decode")
+    return ServingEngine(model, params, batch=2, s_max=32, paged=True,
+                         page_size=4, **kw)
+
+
+def _prompts():
+    rng = np.random.default_rng(7)
+    return {"tokens": rng.integers(0, CFG.vocab, (2, 6)).astype(np.int32)}
+
+
+# ---------------------------------------------------------------------------
+# The acceptance criterion, end to end
+# ---------------------------------------------------------------------------
+
+
+def test_weight_and_kv_faults_corrected_bit_identical(rmodel):
+    """Mid-decode weight + KV-page bit flips under scrub="decode": all
+    detected, all corrected, output tokens bit-identical to a clean run,
+    counters visible on both the engine and the request."""
+    eng = _engine(rmodel)
+    batch = _prompts()
+    clean = eng.generate(batch, max_new=10)
+    assert clean.stats.faults_detected == 0
+
+    det0 = eng.stats.faults.detected
+    cor0 = eng.stats.faults.corrected
+    faults = [
+        # weight plane: multi-bit corruption of one residue channel
+        FaultSpec(kind="weight", bit=0x11, channel=1, index=5),
+        # K page, lane 0 = the packed info byte (both syndromes fire,
+        # value reconstructed from the witness lanes via CRT)
+        FaultSpec(kind="kv", which="k", channel=0, index=3, bit=0x20),
+        # V page, witness lane (single syndrome isolates it; recomputed)
+        FaultSpec(kind="kv", which="v", channel=2, index=9, bit=0x01),
+    ]
+    with inject_faults(eng, faults, after_steps=3) as log:
+        faulty = eng.generate(batch, max_new=10)
+    assert len(log) == 3
+
+    np.testing.assert_array_equal(faulty.tokens, clean.tokens)
+    assert faulty.steps == clean.steps
+    assert eng.stats.faults.detected - det0 == 3
+    assert eng.stats.faults.corrected - cor0 == 3
+    assert eng.stats.faults.weight_scrubs > 0
+    assert eng.stats.faults.kv_scrubs > 0
+    assert faulty.stats.faults_detected == 3
+    assert faulty.stats.faults_corrected == 3
+
+
+def test_scrub_off_weight_fault_masked_by_corrected_decode(rmodel):
+    """Without the scrub policy nothing repairs the stored plane — but the
+    redundant matmul path's in-run ``corrected_decode`` still masks a
+    single-channel weight fault, so tokens stay bit-identical while the
+    engine's fault counters (a scrub-side surface) stay at zero."""
+    eng = _engine(rmodel, scrub="off")
+    batch = _prompts()
+    clean = eng.generate(batch, max_new=8)
+    flip_weight_bit(eng, FaultSpec(kind="weight", bit=0x05, channel=2,
+                                   index=11))
+    faulty = eng.generate(batch, max_new=8)
+    np.testing.assert_array_equal(faulty.tokens, clean.tokens)
+    assert eng.stats.faults.detected == 0
+    assert eng.stats.faults.corrected == 0
+
+
+def test_scrub_rejects_unknown_policy(rmodel):
+    with pytest.raises(ValueError, match="scrub"):
+        _engine(rmodel, scrub="always")
+
+
+def test_scheduler_attributes_faults_to_requests(rmodel):
+    """Continuous batching: a fault taken during a decode segment lands in
+    the per-request ``stats.faults_*`` of every co-resident request."""
+    eng = _engine(rmodel)
+    sched = RequestScheduler(eng)
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, CFG.vocab, 5).astype(np.int32),
+                    max_new=8) for i in range(2)]
+    clean = [np.asarray(r.result) for r in sched.serve(
+        [dataclasses.replace(r, rid=r.rid,
+                             stats=RequestStats()) for r in reqs])]
+    faults = [FaultSpec(kind="weight", bit=0x08, channel=0, index=2)]
+    with inject_faults(eng, faults, after_steps=2) as log:
+        out = sched.serve(reqs)
+    assert len(log) == 1
+    for r, ref in zip(out, clean):
+        np.testing.assert_array_equal(np.asarray(r.result), ref)
+    assert sum(r.stats.faults_detected for r in out) >= 1
+    assert sum(r.stats.faults_corrected for r in out) >= 1
+
+
+# ---------------------------------------------------------------------------
+# Page-level verify/repair in isolation
+# ---------------------------------------------------------------------------
+
+
+def _rns8r_pages():
+    fmt = kvp.KV_FORMATS["rns8r"]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 2, (3, 8, 2, 16)).astype(np.float32))
+    planes, scale = kvp.quantize_to_format(x, fmt)
+    return kvp.ResidueTensor(planes=planes, scale=scale, mset=fmt.mset,
+                             layout="rns_pack", qbits=fmt.qbits,
+                             max_abs=1.0)
+
+
+def test_verify_pages_clean_is_noop():
+    t = _rns8r_pages()
+    fixed, det, cor = kvp.verify_pages(t)
+    assert (det, cor) == (0, 0)
+    np.testing.assert_array_equal(np.asarray(fixed.planes),
+                                  np.asarray(t.planes))
+
+
+@pytest.mark.parametrize("lane", [0, 1, 2],
+                         ids=["packed-byte", "witness-17", "witness-19"])
+def test_verify_pages_repairs_single_lane_fault(lane):
+    """A flip in any lane — the packed info byte or either witness — is
+    detected and the plane restored exactly."""
+    t = _rns8r_pages()
+    ref = np.asarray(t.planes).copy()
+    bad = ref.copy()
+    cf = np.moveaxis(bad, -3, 0)
+    cf[(lane, 1, 4, 1, 7)] ^= 0x13 if lane == 0 else 0x01
+    t_bad = dataclasses.replace(t, planes=jnp.asarray(bad))
+    fixed, det, cor = kvp.verify_pages(t_bad)
+    assert det == 1 and cor == 1
+    np.testing.assert_array_equal(np.asarray(fixed.planes), ref)
+
+
+def test_verify_pages_rejects_non_redundant():
+    fmt = kvp.KV_FORMATS["rns8"]
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (2, 4, 2, 8)).astype(np.float32))
+    planes, scale = kvp.quantize_to_format(x, fmt)
+    t = kvp.ResidueTensor(planes=planes, scale=scale, mset=fmt.mset,
+                          layout="rns_pack", qbits=fmt.qbits, max_abs=1.0)
+    fixed, det, cor = kvp.verify_pages(t)   # r == 0: nothing to verify
+    assert (det, cor) == (0, 0) and fixed is t
+
+
+def test_rns8r_format_metadata():
+    fmt = kvp.KV_FORMATS["rns8r"]
+    assert fmt.mset is KV8R2
+    assert fmt.redundant == 2
+    assert fmt.pack.values_per_byte == 1
+    # 2 witness lanes of head_dim bytes each ride on the packed lane
+    assert (kvp.bytes_per_token(kvp.KV_FORMATS["rns8r"], n_kv=2, head_dim=8)
+            > kvp.bytes_per_token(kvp.KV_FORMATS["rns8"], n_kv=2,
+                                  head_dim=8))
+
+
+# ---------------------------------------------------------------------------
+# Fault-spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="cache")
+    with pytest.raises(ValueError, match="which"):
+        FaultSpec(kind="kv", which="q")
+    with pytest.raises(ValueError, match="bit"):
+        FaultSpec(kind="weight", bit=0)
+    with pytest.raises(ValueError, match="bit"):
+        FaultSpec(kind="weight", bit=0x100)
+
+
+# ---------------------------------------------------------------------------
+# Typed telemetry: snapshots + legacy shims
+# ---------------------------------------------------------------------------
+
+
+def test_engine_stats_snapshot_isolated():
+    s = EngineStats()
+    s.decode_steps = 4
+    s.faults.detected = 2
+    snap = s.snapshot()
+    s.decode_steps = 9
+    s.faults.detected = 5
+    assert snap.decode_steps == 4 and snap.faults.detected == 2
+
+
+def test_legacy_engine_counters_warn(rmodel):
+    eng = _engine(rmodel)
+    eng.generate(_prompts(), max_new=2)
+    with pytest.deprecated_call():
+        assert eng.decode_steps == eng.stats.decode_steps
+    with pytest.deprecated_call():
+        assert eng.decode_dispatches == eng.stats.decode_dispatches
+    with pytest.deprecated_call():
+        assert eng.fused_retraces == eng.stats.fused_retraces
+    with pytest.deprecated_call():
+        eng.decode_steps = 0
+    assert eng.stats.decode_steps == 0
+
+
+def test_legacy_result_and_request_counters_warn():
+    res = GenerateResult(tokens=np.zeros((1, 2), np.int32),
+                         prefill_logits=None, steps=2,
+                         stats=RequestStats(decode_dispatches=3,
+                                            pages_allocated=5,
+                                            pages_freed=5))
+    with pytest.deprecated_call():
+        assert res.decode_dispatches == 3
+    with pytest.deprecated_call():
+        assert res.pages_allocated == 5
+    with pytest.deprecated_call():
+        assert res.pages_freed == 5
+
+    r = Request(rid=0, tokens=np.zeros(3, np.int32), max_new=4)
+    for name in ("decode_steps", "decode_dispatches", "pages_allocated",
+                 "pages_freed", "prefix_hits", "latency_s"):
+        with pytest.deprecated_call():
+            getattr(r, name)
+        with pytest.deprecated_call():
+            setattr(r, name, 1)
+    assert r.stats.decode_steps == 1 and r.stats.latency_s == 1
+    with pytest.deprecated_call():
+        assert r.prefill_skipped is False
+
+
+def test_pool_stats_import_shim_warns():
+    with pytest.deprecated_call():
+        legacy = kv_pool.PoolStats
+    assert legacy is PoolStats

@@ -99,3 +99,172 @@ def test_ring_homomorphism(mset):
 def test_lazy_capacity():
     assert P21.lazy_add_capacity() >= 2**18
     assert P16.lazy_add_capacity() >= 2**22
+
+
+# ---------------------------------------------------------------------------
+# Redundant residue number system: syndromes, correction, soundness guards.
+# ---------------------------------------------------------------------------
+
+from repro.core.moduli import (  # noqa: E402
+    KV4, KV8, KV8R2, P21R2, PackedFormat, decode_packed, encode_packed,
+    packed_spec, packed_spec_raw,
+)
+
+RSETS = [P21R2, KV8R2]
+
+
+def test_special_set_rejects_degenerate_n():
+    for n in (1, 0, -3):
+        with pytest.raises(ValueError, match="n >= 2"):
+            special_set(n)
+    assert special_set(2).moduli == (3, 4, 5)
+
+
+def test_redundant_structure():
+    assert P21R2.redundant == 2
+    assert P21R2.info_moduli == (127, 128, 129)
+    assert P21R2.redundant_moduli == (131, 133)
+    # the dynamic range is defined by the information moduli only
+    assert P21R2.M == P21.M and P21R2.half_range == P21.half_range
+    assert P21R2.M_total == P21.M * 131 * 133
+    assert P21R2.info.moduli == P21.moduli and P21R2.info.redundant == 0
+    assert P21.with_redundancy((131, 133)).moduli == P21R2.moduli
+    assert KV8R2.info_moduli == KV8.moduli
+
+
+def test_make_rejects_uncorrectable_redundancy():
+    """r>=2 sets must satisfy the leave-two-out projection condition —
+    without it a single fault has no unique legitimate projection."""
+    with pytest.raises(ValueError, match="single-fault correction"):
+        ModuliSet.make((7, 9, 11, 13, 4, 5), redundant=2)
+
+
+def test_redundant_encode_decode_matches_info_set():
+    """Redundant channels ride for free: decode ignores them."""
+    rng = np.random.default_rng(3)
+    xs = jnp.asarray(rng.integers(-P21.half_range, P21.half_range,
+                                  size=256), jnp.int32)
+    res = P21R2.to_residues(xs)
+    assert res.shape[0] == 5
+    np.testing.assert_array_equal(np.asarray(P21R2.from_residues(res)),
+                                  np.asarray(xs))
+    np.testing.assert_array_equal(
+        np.asarray(P21R2.syndromes(res)), 0)
+
+
+@pytest.mark.parametrize("mset", RSETS, ids=lambda s: str(s.moduli))
+@given(x=st.integers(min_value=-(2**20), max_value=2**20),
+       chan=st.integers(min_value=0, max_value=63),
+       delta=st.integers(min_value=1, max_value=10**6))
+@settings(max_examples=120, deadline=None)
+def test_single_fault_detected_and_corrected(mset, x, chan, delta):
+    """Any single corrupted channel — information or witness — is detected,
+    located, and repaired; corrected_decode recovers the exact value."""
+    x = x % (mset.half_range + 1)
+    clean = np.asarray(mset.to_residues(jnp.int32(x))).copy()
+    c = chan % mset.num_channels
+    m = mset.moduli[c]
+    bad = clean.copy()
+    bad[c] = (bad[c] + 1 + delta % (m - 1)) % m   # changed mod m, guaranteed
+    fixed, det, cor = mset.correct(jnp.asarray(bad))
+    assert bool(det) and bool(cor), (x, c)
+    assert int(mset.corrected_decode(jnp.asarray(bad))) == x
+    np.testing.assert_array_equal(np.asarray(fixed), clean)
+
+
+@pytest.mark.parametrize("mset", RSETS, ids=lambda s: str(s.moduli))
+@given(x=st.integers(min_value=-(2**20), max_value=2**20),
+       c1=st.integers(min_value=0, max_value=63),
+       c2=st.integers(min_value=0, max_value=63),
+       d1=st.integers(min_value=1, max_value=10**6),
+       d2=st.integers(min_value=1, max_value=10**6))
+@settings(max_examples=120, deadline=None)
+def test_double_fault_always_detected(mset, x, c1, c2, d1, d2):
+    """Two corrupted channels exceed r=2's correction radius but never
+    escape detection for these sets."""
+    x = x % (mset.half_range + 1)
+    res = np.asarray(mset.to_residues(jnp.int32(x))).copy()
+    c1 = c1 % mset.num_channels
+    c2 = c2 % mset.num_channels
+    if c1 == c2:
+        c2 = (c2 + 1) % mset.num_channels
+    for c, d in ((c1, d1), (c2, d2)):
+        m = mset.moduli[c]
+        res[c] = (res[c] + 1 + d % (m - 1)) % m
+    _, det, _ = mset.correct(jnp.asarray(res))
+    assert bool(det), (x, c1, c2)
+
+
+def test_r1_is_detect_only():
+    """One witness detects any single fault but cannot locate it."""
+    m1 = ModuliSet.make((15, 16, 17), redundant=1)
+    x = 57
+    clean = np.asarray(m1.to_residues(jnp.int32(x))).copy()
+    for c in range(m1.num_channels):
+        bad = clean.copy()
+        bad[c] = (bad[c] + 1) % m1.moduli[c]
+        fixed, det, cor = m1.correct(jnp.asarray(bad))
+        assert bool(det) and not bool(cor)
+    # corrected_decode degrades to the plain info decode (no projection)
+    assert int(m1.corrected_decode(jnp.asarray(clean))) == x
+
+
+def test_zero_fault_clean_path():
+    rng = np.random.default_rng(9)
+    xs = jnp.asarray(rng.integers(-P21R2.half_range, P21R2.half_range,
+                                  size=64), jnp.int32)
+    res = P21R2.to_residues(xs)
+    fixed, det, cor = P21R2.correct(res)
+    assert not bool(jnp.any(det)) and not bool(jnp.any(cor))
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(res))
+    np.testing.assert_array_equal(
+        np.asarray(P21R2.corrected_decode(res)), np.asarray(xs))
+
+
+# ---------------------------------------------------------------------------
+# PackedFormat: unified pack-parameter object + legacy shims.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mset", [KV8, KV4], ids=["kv8", "kv4"])
+@given(vals=st.lists(st.integers(min_value=-(2**15), max_value=2**15),
+                     min_size=8, max_size=8))
+@settings(max_examples=100, deadline=None)
+def test_packed_codec_exact_at_max_abs_boundary(mset, vals):
+    """Round-trip exactness at and around the codec's extreme values."""
+    fmt = mset.packed()
+    lo, hi = -mset.M // 2, mset.M // 2 - 1
+    xs = [lo, lo + 1, hi - 1, hi, 0] + [lo + abs(v) % mset.M for v in vals]
+    pad = (-len(xs)) % fmt.values_per_byte
+    x = np.asarray(xs + [0] * pad, np.int32)
+    packed = fmt.encode(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(fmt.decode(packed)), x)
+
+
+def test_packed_format_properties():
+    fmt = KV8.packed()
+    assert fmt == PackedFormat.for_moduli((15, 16))
+    assert fmt.values_per_byte == 1 and fmt.bits == 8
+    assert KV4.packed().values_per_byte == 2
+    assert KV8R2.packed().moduli == (15, 16)  # info pair of the R2 set
+    with pytest.raises(ValueError, match="2 moduli"):
+        P21R2.packed()   # three information moduli — not byte-packable
+    with pytest.raises(ValueError, match="power-of-two"):
+        PackedFormat.for_moduli((4, 15))
+
+
+def test_packed_legacy_shims_warn_and_delegate():
+    fmt = KV8.packed()
+    x = jnp.asarray(np.arange(-8, 8, dtype=np.int32))
+    with pytest.deprecated_call():
+        assert packed_spec(KV8) == (fmt.widths, fmt.values_per_byte)
+    with pytest.deprecated_call():
+        assert packed_spec_raw((15, 16)) == (fmt.widths,
+                                             fmt.values_per_byte)
+    with pytest.deprecated_call():
+        packed = encode_packed(x, KV8)
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  np.asarray(fmt.encode(x)))
+    with pytest.deprecated_call():
+        back = decode_packed(packed, KV8)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))

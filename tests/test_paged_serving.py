@@ -18,8 +18,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.moduli import KV4, KV8, decode_packed, encode_packed, \
-    packed_spec
+from repro.core.moduli import KV4, KV8
 from repro.models.api import build_model
 from repro.numerics import kv_pages as kvp
 from repro.numerics.attention import paged_decode, set_decode_block
@@ -35,17 +34,18 @@ from repro.serving.scheduler import Request, RequestScheduler
 
 @pytest.mark.parametrize("mset", [KV8, KV4], ids=["kv8", "kv4"])
 def test_packed_roundtrip_full_centered_range(mset):
-    """encode_packed/decode_packed is exact over the whole centered range
+    """The PackedFormat codec is exact over the whole centered range
     [-M/2, M/2) — the packed byte stream is a lossless integer codec."""
+    fmt = mset.packed()
     lo, hi = -mset.M // 2, mset.M // 2 - 1
-    (_, _), vpb = packed_spec(mset)
+    vpb = fmt.values_per_byte
     x = np.arange(lo, hi + 1, dtype=np.int32)
     pad = (-len(x)) % vpb
     x = np.concatenate([x, np.zeros(pad, np.int32)]).reshape(2, -1)
-    packed = encode_packed(jnp.asarray(x), mset)
+    packed = fmt.encode(jnp.asarray(x))
     assert packed.dtype == jnp.uint8
     assert packed.shape[-1] == x.shape[-1] // vpb
-    np.testing.assert_array_equal(np.asarray(decode_packed(packed, mset)), x)
+    np.testing.assert_array_equal(np.asarray(fmt.decode(packed)), x)
 
 
 @pytest.mark.parametrize("name", ["rns8", "rns4"])
@@ -245,9 +245,9 @@ def test_paged_generate_bit_identical_multi_page(small_model):
             np.testing.assert_array_equal(rd.prefill_logits,
                                           rp.prefill_logits)
             assert rd.steps == rp.steps
-            assert rp.decode_dispatches == 1
-            assert rp.pages_allocated > 0
-            assert rp.pages_allocated == rp.pages_freed
+            assert rp.stats.decode_dispatches == 1
+            assert rp.stats.pages_allocated > 0
+            assert rp.stats.pages_allocated == rp.stats.pages_freed
         eos = int(dense.generate(batch, max_new=3).tokens[0, 1])
         rd = dense.generate(batch, max_new=12, eos=eos)
         rp = paged.generate(batch, max_new=12, eos=eos)
@@ -309,11 +309,11 @@ def test_continuous_mid_decode_admission(small_model):
     assert [r.rid for r in out] == [0, 1, 2, 3]
     for r in out:
         assert len(r.result) == r.max_new
-        assert r.decode_dispatches >= 1
-        assert r.pages_allocated > 0 and r.pages_freed > 0
+        assert r.stats.decode_dispatches >= 1
+        assert r.stats.pages_allocated > 0 and r.stats.pages_freed > 0
     # rid 0 (budget 3) finishes mid-decode of rid 1 (budget 10): rid 2 was
     # admitted into the freed slot before rid 1 finished
-    assert out[1].decode_dispatches > 1
+    assert out[1].stats.decode_dispatches > 1
     # every result equals serving the request alone
     for r, p in zip(out, prompts):
         solo = RequestScheduler(eng).serve(
@@ -331,15 +331,15 @@ def test_continuous_prefix_reuse_and_prefill_skip(small_model):
     toks = rng.integers(0, cfg.vocab, 16).astype(np.int32)  # 2 full pages
     reqs = [Request(rid=i, tokens=toks, max_new=4) for i in range(3)]
     out = sched.serve(reqs)
-    assert sum(r.prefix_hits for r in out) >= 2
-    assert any(r.prefill_skipped for r in out[1:])
+    assert sum(r.stats.prefix_hits for r in out) >= 2
+    assert any(r.stats.prefill_skipped for r in out[1:])
     for r in out[1:]:
         np.testing.assert_array_equal(r.result, out[0].result)
     # a no-prefix-cache engine returns the same tokens
     eng2 = _sched_engine(small_model, prefix_cache=False)
     out2 = RequestScheduler(eng2).serve(
         [Request(rid=i, tokens=toks, max_new=4) for i in range(3)])
-    assert all(r.prefix_hits == 0 for r in out2)
+    assert all(r.stats.prefix_hits == 0 for r in out2)
     for r, r2 in zip(out, out2):
         np.testing.assert_array_equal(r.result, r2.result)
 
@@ -362,5 +362,5 @@ def test_continuous_eos_mid_page(small_model):
     assert len(out[0].result) == want < 12
     assert int(out[0].result[-1]) == eos
     assert len(out[1].result) == 12
-    assert out[0].pages_freed > 0
+    assert out[0].stats.pages_freed > 0
     assert eng.pool.free_pages > 0

@@ -64,19 +64,19 @@ def test_scheduler_round_early_stops_on_eos():
     toks = np.arange(1, 9, dtype=np.int32)
     probe = sched.serve([Request(rid=0, tokens=toks, max_new=4)])[0]
     eos = int(probe.result[0])     # the model's deterministic 1st token
-    before = eng.decode_steps
+    before = eng.stats.decode_steps
     big = 64
     out = sched.serve([Request(rid=1, tokens=toks, max_new=big, eos=eos),
                        Request(rid=2, tokens=toks, max_new=big, eos=eos)])
-    used = eng.decode_steps - before
+    used = eng.stats.decode_steps - before
     assert used == 0, used         # EOS on the prefill token: zero decodes
     for r in out:
         assert len(r.result) == 1 and int(r.result[0]) == eos
     # a member without an EOS keeps its round running to max_new
-    before = eng.decode_steps
+    before = eng.stats.decode_steps
     sched.serve([Request(rid=3, tokens=toks, max_new=6, eos=eos),
                  Request(rid=4, tokens=toks, max_new=6)])
-    assert eng.decode_steps - before == 5   # 6 tokens = 5 decode steps
+    assert eng.stats.decode_steps - before == 5   # 6 tokens = 5 decode steps
 
 
 def test_scheduler_matches_direct_engine():

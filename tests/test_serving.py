@@ -75,9 +75,9 @@ def test_generate_eos_early_stop_counts_steps(engine):
     probe = eng.generate({"tokens": prompts}, max_new=3)
     # choose each slot's own 2nd emitted token as its EOS
     eos = probe.tokens[:, 1].astype(np.int64)
-    before = eng.decode_steps
+    before = eng.stats.decode_steps
     r = eng.generate({"tokens": prompts}, max_new=32, eos=eos)
-    assert r.steps == eng.decode_steps - before
+    assert r.steps == eng.stats.decode_steps - before
     assert r.steps < 32                       # early stop actually fired
     assert r.tokens.shape[1] == r.steps + 1   # one decode per extra token
     np.testing.assert_array_equal(r.tokens[:, :2], probe.tokens[:, :2])
@@ -105,10 +105,10 @@ def test_fused_loop_is_one_dispatch(engine):
     rng = np.random.default_rng(2)
     prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
     for max_new in (4, 12):
-        before = eng.decode_dispatches
+        before = eng.stats.decode_dispatches
         r = eng.generate({"tokens": prompts}, max_new=max_new)
-        assert r.decode_dispatches == 1
-        assert eng.decode_dispatches - before == 1
+        assert r.stats.decode_dispatches == 1
+        assert eng.stats.decode_dispatches - before == 1
         assert r.steps == max_new - 1
 
 
@@ -125,7 +125,7 @@ def test_fused_loop_max_new_is_runtime_within_bucket(engine):
     r12 = eng.generate({"tokens": prompts}, max_new=12)
     r16 = eng.generate({"tokens": prompts}, max_new=16)
     assert eng.fused_cache_size() == before         # same bucket, no retrace
-    assert eng.fused_retraces == eng.fused_cache_size() - 1
+    assert eng.stats.fused_retraces == eng.fused_cache_size() - 1
     assert r12.tokens.shape[1] == 12 and r16.tokens.shape[1] == 16
 
 
@@ -138,7 +138,7 @@ def test_fused_loop_matches_host_loop(engine, host_engine):
     np.testing.assert_array_equal(r_f.tokens, r_h.tokens)
     np.testing.assert_array_equal(r_f.prefill_logits, r_h.prefill_logits)
     assert r_f.steps == r_h.steps
-    assert r_h.decode_dispatches == r_h.steps   # the measured baseline
+    assert r_h.stats.decode_dispatches == r_h.steps   # the measured baseline
 
 
 def test_fused_loop_eos_parity_with_inactive_slots(engine, host_engine):

@@ -20,6 +20,11 @@ moduli + 2 redundant witnesses — single-fault correcting):
   product, and ``nx.scrub`` must count the corrupted elements and return a
   plane-exact repair.
 
+* **rotate_scrub** (asserted in --smoke): the ``scrub="rotate:k"`` engine
+  policy vs the full ``scrub="decode"`` pass — one unit group checked per
+  dispatch must cost less than scrubbing everything, while a persistent
+  injected fault is still caught within ``k`` passes.
+
 Run:  PYTHONPATH=src python benchmarks/fault_bench.py [--smoke]
 Writes BENCH_fault[_smoke].json for the CI artifact trail.
 """
@@ -103,6 +108,43 @@ def bench_correction(*, k: int, n: int) -> dict:
             "plane_repaired_exactly": repaired}
 
 
+def bench_rotate_scrub(*, groups: int, reps: int) -> dict:
+    """Engine-level rotating scrub vs the full per-dispatch pass."""
+    from repro.configs.base import ArchConfig
+    from repro.models.api import build_model
+    from repro.serving.engine import ServingEngine
+    from repro.testing.faults import FaultSpec, flip_weight_bit
+
+    cfg = ArchConfig(name="t", family="dense", d_model=128, n_layers=4,
+                     n_heads=4, n_kv=2, d_ff=256, vocab=257,
+                     compute_dtype="float32")
+    model = build_model(cfg, system="rns", rns_mset=P21R2)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def engine(scrub):
+        return ServingEngine(model, params, batch=2, s_max=32, paged=True,
+                             page_size=4, kv_format="rns8r", scrub=scrub)
+
+    eng_full = engine("decode")
+    eng_rot = engine(f"rotate:{groups}")
+    for _ in range(groups):          # warm every group's jitted scrubs
+        eng_rot._scrub_pass()
+    full_ms = _time_ms(eng_full._scrub_pass, reps=reps)
+
+    def rotation():                  # one full rotation: k partial passes
+        for _ in range(groups):
+            eng_rot._scrub_pass()
+    rotate_ms = _time_ms(rotation, reps=reps) / groups
+
+    flip_weight_bit(eng_rot, FaultSpec(kind="weight", bit=0x11, channel=1,
+                                       index=5))
+    caught = any(eng_rot._scrub_pass()[0] > 0 for _ in range(groups))
+    return {"cell": "rotate_scrub", "groups": groups,
+            "full_pass_ms": full_ms, "rotate_pass_ms": rotate_ms,
+            "per_dispatch_speedup": full_ms / rotate_ms,
+            "fault_caught_within_k": bool(caught)}
+
+
 def run(*, smoke: bool = False, verbose: bool = True) -> dict:
     # the check is O(M*N) element-wise vs the O(M*K*N) matmul — K must be
     # deep enough for the gate to measure amortized cost, not dispatch noise
@@ -112,6 +154,7 @@ def run(*, smoke: bool = False, verbose: bool = True) -> dict:
         bench_check_overhead(k=k, n=n, reps=reps),
         bench_redundancy_carry(k=k, n=n, reps=reps),
         bench_correction(k=k, n=n),
+        bench_rotate_scrub(groups=4, reps=reps),
     ]
     if verbose:
         for c in cells:
@@ -144,6 +187,16 @@ def main(argv=None):
         print("[fault_bench] FAIL: fused consistency check cost "
               f"{cells['check_overhead']['overhead_ratio']:.3f}x "
               "(gate: <= 1.10)")
+        return 1
+    rot = cells["rotate_scrub"]
+    if not rot["fault_caught_within_k"]:
+        print("[fault_bench] FAIL: rotating scrub missed a persistent "
+              f"fault over {rot['groups']} passes")
+        return 1
+    if args.smoke and rot["rotate_pass_ms"] >= rot["full_pass_ms"]:
+        print("[fault_bench] FAIL: rotate:k pass "
+              f"({rot['rotate_pass_ms']:.3f} ms) not cheaper than the "
+              f"full scrub pass ({rot['full_pass_ms']:.3f} ms)")
         return 1
     return 0
 

@@ -41,6 +41,14 @@ resident token** (residue pages cut cache bytes ~1.9x / ~3.6x).
 ``--smoke`` gates on continuous batching serving at least as many users
 as fixed rounds, and on the rns4 >= 2x byte cut.
 
+The ``spec`` section (PR 8) measures speculative decoding per max_new
+bucket under both drafters (n-gram lookahead and the reduced-moduli RNS
+draft) against plain paged decoding: decode steps/s, acceptance rate,
+mean accepted block length, and ``outputs_match`` — greedy acceptance is
+exact, so matching outputs is *gated* (always), the tokens/s speedup is
+reported.  ``--only-spec`` runs just this section (the CI spec-smoke
+job) and writes BENCH_serving.json.
+
 Run:  PYTHONPATH=src python benchmarks/serving_bench.py [--smoke]
 Writes BENCH_serving[_smoke].json for the CI artifact trail.
 """
@@ -289,6 +297,87 @@ def bench_paged(*, steps_hint: int, reps: int,
     return out
 
 
+def bench_spec(*, reps: int, buckets: list[int]) -> dict:
+    """Speculative decoding: tokens retired per second vs plain decoding.
+
+    One workload — cyclic prompts, the streams small greedy models settle
+    into (and the shape real decoders hit on boilerplate) — generated by a
+    plain paged engine and by speculative engines under both drafters, per
+    max_new bucket.  Greedy acceptance is exact, so ``outputs_match`` must
+    hold everywhere (this is the gate, together with the n-gram drafter's
+    ``mean_accepted_len`` > 1 — i.e. drafting actually retires more than
+    one token per verify step); the tokens/s speedup is *reported*, since
+    interpret-mode CPU kernels do not reward batched verify the way real
+    accelerators do.
+    """
+    cfg = dataclasses.replace(
+        get_config("yi-6b").reduced(),
+        n_layers=2, d_model=128, d_ff=256, n_heads=2, n_kv=1, head_dim=64,
+        vocab=64, compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, page_size = 4, 8
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, cfg.vocab, (B, 3)).astype(np.int32)
+    prompts = np.tile(base, (1, 3))                  # cyclic 9-token prompts
+    s_max = prompts.shape[1] + max(buckets) + 8
+
+    def engine(**kw):
+        return ServingEngine(model, params, batch=B, s_max=s_max,
+                             paged=True, page_size=page_size, **kw)
+
+    def ms_generate(eng, mx):
+        def once():
+            t0 = time.perf_counter()
+            eng.generate({"tokens": prompts}, max_new=mx)
+            return time.perf_counter() - t0
+
+        once()  # warmup: compile this bucket
+        return float(min(once() for _ in range(reps))) * 1e3
+
+    plain = engine()
+    ref = {}
+    out = {"batch": B, "buckets": buckets, "prompt": "cyclic",
+           "plain": {}, "drafters": {}}
+    for mx in buckets:
+        ms = ms_generate(plain, mx)
+        ref[mx] = plain.generate({"tokens": prompts}, max_new=mx)
+        out["plain"][str(mx)] = {
+            "ms_per_generate": ms,
+            "decode_steps_per_s": (mx - 1) / (ms / 1e3),
+            "tokens_per_s": B * mx / (ms / 1e3),
+        }
+    for name in ("ngram:4", "rns:3"):
+        eng = engine(spec=name)
+        cells = {}
+        for mx in buckets:
+            ms = ms_generate(eng, mx)
+            before = eng.stats.spec.snapshot()
+            r = eng.generate({"tokens": prompts}, max_new=mx)
+            sp = eng.stats.spec
+            verify_steps = sp.verify_steps - before.verify_steps
+            proposed = sp.proposed - before.proposed
+            accepted = sp.accepted - before.accepted
+            emitted = sp.emitted - before.emitted
+            blocks = sp.blocks - before.blocks
+            plain_ms = out["plain"][str(mx)]["ms_per_generate"]
+            cells[str(mx)] = {
+                "ms_per_generate": ms,
+                # effective per-slot decode steps retired per second (the
+                # spec loop buys them with only verify_steps target calls)
+                "decode_steps_per_s": (mx - 1) / (ms / 1e3),
+                "tokens_per_s": B * mx / (ms / 1e3),
+                "verify_steps": verify_steps,
+                "acceptance_rate": accepted / max(proposed, 1),
+                "mean_accepted_len": emitted / max(blocks, 1),
+                "speedup_vs_plain": plain_ms / ms,
+                "outputs_match": bool(
+                    np.array_equal(ref[mx].tokens, r.tokens)),
+            }
+        out["drafters"][name] = cells
+    return out
+
+
 def run(*, smoke: bool = False, verbose: bool = True) -> dict:
     if smoke:
         cells = [
@@ -335,6 +424,10 @@ def run(*, smoke: bool = False, verbose: bool = True) -> dict:
               f"ms/generate "
               f"({loops['fused_decode_dispatches_per_generate']} dispatch)")
         print(f"  speedup    : {loops['speedup']:.3f}x")
+    spec = bench_spec(reps=2 if smoke else 4,
+                      buckets=[8, 16] if smoke else [12, 24])
+    if verbose:
+        _print_spec(spec)
     paged = bench_paged(steps_hint=12 if smoke else 24,
                         reps=2 if smoke else 4)
     if verbose:
@@ -353,7 +446,40 @@ def run(*, smoke: bool = False, verbose: bool = True) -> dict:
                   f"{m['decode_steps']:4d} steps, "
                   f"{m['kv_bytes_per_resident_token']:4d} B/token" + extra)
     return {"smoke": smoke, "cells": results, "loops": loops,
-            "paged": paged}
+            "spec": spec, "paged": paged}
+
+
+def _print_spec(spec: dict) -> None:
+    print(f"[serving_bench] speculative decode (B={spec['batch']}, "
+          f"{spec['prompt']} prompts, buckets={spec['buckets']}):")
+    for mx in spec["buckets"]:
+        p = spec["plain"][str(mx)]
+        print(f"  max_new={mx:3d}  plain    : "
+              f"{p['decode_steps_per_s']:8.1f} steps/s")
+        for name, cells in spec["drafters"].items():
+            c = cells[str(mx)]
+            print(f"  max_new={mx:3d}  {name:8s} : "
+                  f"{c['decode_steps_per_s']:8.1f} steps/s  "
+                  f"({c['speedup_vs_plain']:.2f}x, "
+                  f"accept={c['acceptance_rate']:.2f}, "
+                  f"mean_block={c['mean_accepted_len']:.2f}, "
+                  f"match={c['outputs_match']})")
+
+
+def _gate_spec(spec: dict) -> int:
+    """Exactness + drafter-quality gates (speedup is reported only)."""
+    for name, cells in spec["drafters"].items():
+        for mx, c in cells.items():
+            if not c["outputs_match"]:
+                print(f"[serving_bench] FAIL: speculative outputs diverged "
+                      f"from plain greedy decoding ({name}, max_new={mx})")
+                return 1
+    ng = spec["drafters"]["ngram:4"]
+    if all(c["mean_accepted_len"] <= 1.0 for c in ng.values()):
+        print("[serving_bench] FAIL: n-gram drafter never retired more "
+              "than one token per verify step on the cyclic workload")
+        return 1
+    return 0
 
 
 def main(argv=None):
@@ -361,14 +487,32 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes + assert the residency win on the "
                          "rns cell (CI gate)")
+    ap.add_argument("--only-spec", action="store_true",
+                    help="run only the speculative-decoding section at the "
+                         "full shapes (the CI spec-smoke job) and gate on "
+                         "exact outputs + accepted-length > 1")
     ap.add_argument("--json", default=None, metavar="PATH")
     args = ap.parse_args(argv)
+    if args.only_spec:
+        spec = bench_spec(reps=2 if args.smoke else 4,
+                          buckets=[8, 16] if args.smoke else [12, 24])
+        _print_spec(spec)
+        out = {"smoke": args.smoke, "spec": spec}
+        path = args.json or ("BENCH_serving_smoke.json" if args.smoke
+                             else "BENCH_serving.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[serving_bench] wrote {path}")
+        return _gate_spec(spec)
     out = run(smoke=args.smoke)
     path = args.json or ("BENCH_serving_smoke.json" if args.smoke
                          else "BENCH_serving.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"[serving_bench] wrote {path}")
+    rc = _gate_spec(out["spec"])
+    if rc:
+        return rc
     if args.smoke:
         gate = next(c for c in out["cells"] if c["system"] == "rns")
         if gate["speedup"] <= 1.0:

@@ -37,6 +37,10 @@ def main(argv=None):
                     help="keep weights float and convert per call (baseline "
                          "for the residue-resident default; see "
                          "benchmarks/serving_bench.py)")
+    ap.add_argument("--spec", default=None, metavar="DRAFTER[:K]",
+                    help='speculative decoding drafter: "ngram[:k]" or '
+                         '"rns[:k]" (greedy only; paged engines). Output '
+                         "tokens are bit-identical to plain decoding")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -56,7 +60,7 @@ def main(argv=None):
         s_max = P  # encoder memory length; decoder len = cfg.dec_len
 
     engine = ServingEngine(model, params, batch=B, s_max=s_max,
-                           prepare=not args.no_prepare)
+                           prepare=not args.no_prepare, spec=args.spec)
     rng = np.random.default_rng(args.seed)
     if cfg.is_encdec:
         from repro.models.frontends import synthetic_frames
@@ -83,6 +87,11 @@ def main(argv=None):
     tput = B * args.max_new / dt
     print(f"[serve] {args.arch} B={B} prompt={prompt_len} "
           f"new={args.max_new}: {dt:.2f}s ({tput:.1f} tok/s)")
+    if engine.stats.spec is not None:
+        sp = engine.stats.spec
+        print(f"[serve] spec={args.spec}: {sp.verify_steps} verify steps "
+              f"for {sp.emitted} tokens (accept={sp.acceptance_rate:.2f}, "
+              f"mean block={sp.mean_accepted_len:.2f})")
     for b in range(min(B, 2)):
         print(f"  seq{b}: {res.tokens[b].tolist()}")
     return 0

@@ -71,6 +71,8 @@ class Model:
     # paged serving (block-table KV pool); None for families without a
     # paged decode path (encdec / ssm / hybrid)
     decode_paged: Callable[..., tuple[jax.Array, Any]] | None = None
+    # speculative serving: V-token batched verify against the paged pool
+    verify_paged: Callable[..., tuple[jax.Array, Any]] | None = None
 
 
 MOE_AUX_WEIGHT = 0.01
@@ -224,8 +226,14 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
             return tf_mod.lm_decode_paged(
                 params, cfg, token, kv, block_tab, pos, page_size=page_size,
                 dense_kw=dense_kw, cache_dtype=cache_dtype)
+
+        def verify_paged(params, tokens, kv, block_tab, pos, *, page_size,
+                         cache_dtype=jnp.bfloat16):
+            return tf_mod.lm_verify_paged(
+                params, cfg, tokens, kv, block_tab, pos, page_size=page_size,
+                dense_kw=dense_kw, cache_dtype=cache_dtype)
     else:
-        decode_paged = None
+        decode_paged = verify_paged = None
 
     # -- dry-run input specs ---------------------------------------------------
     def input_specs(shape: ShapeConfig) -> dict[str, Any]:
@@ -294,4 +302,5 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
     return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
                  decode=decode, init_cache=init_cache,
                  input_specs=input_specs, cache_roles=cache_roles,
-                 prepare_params=prepare_params, decode_paged=decode_paged)
+                 prepare_params=prepare_params, decode_paged=decode_paged,
+                 verify_paged=verify_paged)

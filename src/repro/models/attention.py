@@ -432,3 +432,62 @@ def paged_decode_attention(
                             page_size=page_size, backend=backend)
     out = o.astype(q.dtype).reshape(B, 1, n_heads * head_dim)
     return linear.dense(params["wo"], out, **dense_kw), kv_layer
+
+
+def paged_verify_attention(
+    params: dict[str, Any],
+    x: jax.Array,
+    kv_layer: "nxkv.PagedKV",
+    block_tab: jax.Array,
+    positions: jax.Array,
+    *,
+    page_size: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    qk_norm: bool = False,
+    rope_theta: float = 1e4,
+    dense_kw: dict[str, Any] | None = None,
+    apply_rope: bool = True,
+    cache_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, "nxkv.PagedKV"]:
+    """Speculative verify step over one layer's *paged* KV pool.
+
+    x: (B, V, D) — each slot feeds its current last token plus ``V - 1``
+    drafted tokens at per-slot per-row ``positions (B, V)``.  All V rows'
+    K/V append to the slot's pages in one scatter (the same fancy-indexed
+    ``append_token``, now with (B, V) page/offset grids), then every row
+    attends causally over its own prefix via :func:`nxattn.paged_verify`
+    — the single-token flash kernel with the V axis folded into its batch
+    grid and ``kv_len`` advancing per row.  Row ``j``'s output is
+    bit-identical to a sequential decode that had emitted rows ``< j``:
+    within the block, row ``j`` only ever attends to rows the acceptance
+    rule has already pinned (a mismatch at ``i < j`` rejects row ``j``
+    itself), so speculative reads always see the bytes a plain decode
+    would have written.
+
+    Positions past the block-table capacity append to the dump page
+    (page 0) instead of clipping into the slot's last page: speculative
+    tails may legally overshoot the allocation; clipping would corrupt
+    live rows.
+    """
+    dense_kw = dense_kw or {}
+    B, V, _ = x.shape
+    positions = jnp.asarray(positions, jnp.int32)
+    q, k, v = _project_qkv(params, x, n_heads=n_heads, n_kv=n_kv,
+                           head_dim=head_dim, qk_norm=qk_norm,
+                           positions=positions, rope_theta=rope_theta,
+                           dense_kw=dense_kw, apply_rope=apply_rope)
+    n_pmax = block_tab.shape[1]
+    page_idx = positions // page_size
+    pages = jnp.take_along_axis(block_tab,
+                                jnp.clip(page_idx, 0, n_pmax - 1), axis=1)
+    pages = jnp.where(page_idx < n_pmax, pages, 0)   # overshoot -> dump
+    offs = positions % page_size
+    kv_layer = nxkv.append_token(kv_layer, k.astype(cache_dtype),
+                                 v.astype(cache_dtype), pages, offs)
+    backend = _paged_backend(B * V, n_heads, n_pmax)
+    o = nxattn.paged_verify(q, kv_layer, block_tab, kv_len=positions + 1,
+                            page_size=page_size, backend=backend)
+    out = o.astype(q.dtype).reshape(B, V, n_heads * head_dim)
+    return linear.dense(params["wo"], out, **dense_kw), kv_layer

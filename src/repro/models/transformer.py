@@ -625,3 +625,71 @@ def lm_decode_paged(
         body, (x, kv), (jnp.arange(L, dtype=jnp.int32), params["layers"]))
     logits = _logits(params, cfg, x, dense_kw)
     return logits[:, 0], kv
+
+
+def lm_verify_paged(
+    params: dict[str, Any],
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    kv,
+    block_tab: jax.Array,
+    pos: jax.Array,
+    *,
+    page_size: int,
+    dense_kw: dict[str, Any] | None = None,
+    cache_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Any]:
+    """Speculative verify: V tokens per slot, one batched paged step.
+
+    tokens: (B, V) int32 — each slot's current last token followed by
+    ``V - 1`` drafted tokens, occupying positions ``pos[b] ..
+    pos[b] + V - 1``;  kv/block_tab as in :func:`lm_decode_paged`.
+    Returns ``(logits (B, V, vocab), kv)`` — row ``j`` is the target's
+    distribution for the token *after* ``tokens[:, j]``, each computed
+    over exactly the prefix a sequential decode would have seen (the
+    per-row causal masking lives in the folded kernel dispatch,
+    :func:`repro.numerics.attention.paged_verify`).  Layer structure,
+    scan carry, and MLP path mirror :func:`lm_decode_paged` with the
+    token axis widened from 1 to V — every weight matmul is the same
+    resident residue matmul over V rows instead of one.
+    """
+    from repro.numerics import kv_pages as kvp
+
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged verify supports dense/moe/vlm, not {cfg.family!r}")
+    dense_kw = dense_kw or {}
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    V = tokens.shape[1]
+    x = params["embed"]["table"].astype(compute_dtype)[tokens]  # (B, V, d)
+    x = constrain(x, "dp", None, None)
+    positions = jnp.asarray(pos, jnp.int32)[:, None] + jnp.arange(
+        V, dtype=jnp.int32)[None, :]
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+               qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+               dense_kw=dense_kw, apply_rope=not cfg.is_encdec)
+    L = cfg.n_layers
+
+    def body(carry, inp):
+        x, kv = carry
+        i, lp = inp
+        lay = kvp.layer_slice(kv, i)
+        h, lay2 = attn_mod.paged_verify_attention(
+            lp["attn"], rmsnorm(lp["attn_norm"], x), lay, block_tab,
+            positions, page_size=page_size, cache_dtype=cache_dtype, **akw)
+        kv = kvp.layer_update(kv, i, lay2)
+        x = x + h
+        h = rmsnorm(lp["mlp_norm"], x)
+        if cfg.family == "moe":
+            h, _ = moe_mod.moe(lp["moe"], h, n_experts=cfg.n_experts,
+                               top_k=cfg.top_k, capacity_factor=cfg.moe_cf,
+                               dense_kw=dense_kw)
+        else:
+            fn = (mlp_mod.gelu_mlp if cfg.mlp_type == "gelu"
+                  else mlp_mod.swiglu)
+            h = fn(lp["mlp"], h, dense_kw)
+        return (x + h, kv), None
+
+    (x, kv), _ = jax.lax.scan(
+        body, (x, kv), (jnp.arange(L, dtype=jnp.int32), params["layers"]))
+    return _logits(params, cfg, x, dense_kw), kv

@@ -40,6 +40,7 @@ __all__ = [
     "flash_attention",
     "flash_decode",
     "paged_decode",
+    "paged_verify",
     "merge_decode_partials",
     "pick_block",
     "grid_size",
@@ -280,3 +281,36 @@ def paged_decode(
     impl = get_impl("flash_paged_decode", resolve_backend(backend))
     return impl(q, k_raw, v_raw, k_scale, v_scale, fmt, block_tab, kv_len,
                 page_size)
+
+
+def paged_verify(
+    q: jax.Array,
+    kv_layer: "_kv.PagedKV",
+    block_tab: jax.Array,
+    kv_len: jax.Array,
+    *,
+    page_size: int,
+    backend: str | None = None,
+) -> jax.Array:
+    """Multi-token split-KV attention for the speculative verify step.
+
+    The spec loop verifies a block of ``V = k + 1`` tokens per slot in one
+    batched target step; each verify row attends causally over its own
+    prefix, which is exactly :func:`paged_decode` with a *per-row* logical
+    length.  The V axis is folded into the kernel's batch grid axis — row
+    ``(b, j)`` becomes batch row ``b * V + j`` with its slot's block table
+    repeated and ``kv_len[b, j]`` advancing by one per in-block position —
+    so the same compiled flash kernel serves 1-token decode and k-token
+    verify, and each folded row's online-softmax is bit-identical to the
+    single-token dispatch it replaces (pinned by tests/test_spec_decode.py).
+
+    q: (B, V, H, hd);  block_tab: (B, n_pmax);  kv_len: (B, V) int32
+    per-row logical prefix lengths.  Returns (B, V, H, hd) f32.
+    """
+    B, V, H, hd = q.shape
+    q2 = q.reshape(B * V, H, hd)
+    tab2 = jnp.repeat(jnp.asarray(block_tab, jnp.int32), V, axis=0)
+    len2 = jnp.asarray(kv_len, jnp.int32).reshape(B * V)
+    out = paged_decode(q2, kv_layer, tab2, len2, page_size=page_size,
+                       backend=backend)
+    return out.reshape(B, V, H, hd)

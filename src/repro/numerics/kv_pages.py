@@ -246,13 +246,18 @@ def append_token(
     pages: jax.Array,
     offs: jax.Array,
 ) -> PagedKV:
-    """Write one token per slot into a single layer's page pool.
+    """Write one token per slot — or a block of them — into a single
+    layer's page pool.
 
     ``kv_layer`` leaves are per-layer (no leading L axis): dense
     ``(P, ps, Kv, hd)`` or residue planes ``(P, ps, 1 + r, Kv, hdp)``.
     ``k_new``/``v_new`` are ``(B, Kv, hd)`` in the cache dtype; ``pages`` and
-    ``offs`` are ``(B,)`` int32.  Inactive slots should point at the
-    reserved dump page so their writes land harmlessly.
+    ``offs`` are ``(B,)`` int32.  The speculative verify step scatters a
+    whole draft block at once by passing ``(B, V, Kv, hd)`` values with
+    ``(B, V)`` page/offset grids — the fancy-indexed write (and the fused
+    residue quantization) is rank-polymorphic over the leading axes.
+    Inactive slots should point at the reserved dump page so their writes
+    land harmlessly.
     """
     fmt = kv_format_of(kv_layer)
 

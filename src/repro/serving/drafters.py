@@ -1,0 +1,226 @@
+"""Drafters for the speculative serving loop (DESIGN.md §13).
+
+Two drafters behind one protocol:
+
+* :class:`NGramDrafter` — model-free lookahead.  Keeps each slot's full
+  token stream (prompt + emitted) in a device-resident history buffer and
+  proposes the continuation of the most recent earlier occurrence of the
+  last ``n`` tokens.  Free to propose, surprisingly strong on the
+  repetitive/cyclic streams small greedy models settle into.
+
+* :class:`RNSDraftModel` — the paper-native drafter: a reduced-moduli /
+  low-qbits residue model *derived from the target's own weights* (no
+  second checkpoint).  The target's resident :class:`ResidueTensor`
+  planes are decoded back to values and re-encoded through a cheaper
+  ``EncodeSpec`` (default: the P16 special set ``(31, 32, 33)`` at 3-bit
+  weights vs the target's P21 at 4), exactly the paper's claim that a
+  narrower channel set shrinks arithmetic cost.  The draft decodes
+  through its own shadow KV page pool that shares the target pool's page
+  ids and block tables — page bytes are a pure function of the token
+  prefix per model, so prefix sharing and page reuse carry over for free.
+
+The drafter protocol (all array methods are traced inside the engine's
+jitted spec loop; state is a pytree riding in the ``while_loop`` carry):
+
+* ``init_state(batch)`` — fresh device state.
+* ``begin(state, slot_tokens, slot_tok0, prompts, tabs, s_max)`` — host
+  side, at admission: register prompts (and run the draft prefill).
+* ``propose(state, tok, pos, tab) -> (drafts (B, k), state)`` — traced.
+* ``observe(state, block, m, pos, tab) -> state`` — traced; the accepted
+  block (``m`` tokens per slot, 0 for dead slots) was just emitted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import numerics as nx
+from repro.core.moduli import special_set
+from repro.models.api import Model, build_model
+from repro.numerics import ResidueTensor
+from repro.numerics import kv_pages as kvp
+from repro.serving.spec import SpecConfig
+
+__all__ = ["NGramDrafter", "RNSDraftModel", "derive_draft_params",
+           "make_drafter"]
+
+# the paper's next special set down from the serving default P21 —
+# 16-bit dynamic range over 3 channels, the natural "cheaper sibling"
+P16 = special_set(5)
+
+
+class NGramDrafter:
+    """Model-free n-gram lookahead drafter.
+
+    ``hist (B, cap)`` holds each slot's token stream; index ``pos`` (the
+    engine's per-slot KV position of the current last token) is always
+    the last valid entry, so no separate length bookkeeping is needed.
+    """
+
+    def __init__(self, k: int, *, n: int = 2, batch: int, hist_cap: int):
+        self.k = k
+        self.n = n
+        self.batch = batch
+        # headroom so observe() scatters past the cap resolve to drops
+        self.cap = hist_cap + k + 1
+
+    def init_state(self, batch: int):
+        return {"hist": jnp.zeros((batch, self.cap), jnp.int32)}
+
+    def begin(self, state, slot_tokens, slot_tok0, prompts, tabs, s_max):
+        hist = state["hist"]
+        for s, toks in slot_tokens.items():
+            row = np.zeros(self.cap, np.int32)
+            toks = np.asarray(toks, np.int32)
+            row[: len(toks)] = toks
+            row[len(toks)] = slot_tok0[s]
+            hist = hist.at[s].set(jnp.asarray(row))
+        return {"hist": hist}
+
+    def propose(self, state, tok, pos, tab):
+        hist, n, k, cap = state["hist"], self.n, self.k, self.cap
+        B = hist.shape[0]
+        rows = jnp.arange(B)[:, None]
+        # the n-token context ending at pos (clamped gathers; windows that
+        # would reach before the stream start are masked out below)
+        ctx = hist[rows, jnp.clip(pos[:, None] - (n - 1) + jnp.arange(n), 0,
+                                  cap - 1)]                        # (B, n)
+        # all length-n windows: win[b, j, t] = hist[b, j + t]
+        win = jnp.stack([hist[:, t: cap - n + t + 1] for t in range(n)],
+                        axis=-1)                       # (B, cap - n + 1, n)
+        j = jnp.arange(cap - n + 1)[None, :]
+        # a usable match ends strictly before the current last token (so
+        # it has a continuation), and the context itself must exist
+        valid = (j + n <= pos[:, None]) & (pos[:, None] >= n - 1)
+        hit = jnp.all(win == ctx[:, None, :], axis=-1) & valid
+        best = jnp.max(jnp.where(hit, j, -1), axis=1)              # (B,)
+        found = best >= 0
+        # continuation tokens following the matched window, clamped to the
+        # known stream; fallback (no match / ran off the end): repeat the
+        # slot's current last token — cheap and exact-safe either way
+        last = hist[rows[:, 0], jnp.clip(pos, 0, cap - 1)]         # (B,)
+        src = best[:, None] + n + jnp.arange(k)[None, :]           # (B, k)
+        in_range = found[:, None] & (src <= pos[:, None])
+        drafts = jnp.where(in_range,
+                           hist[rows, jnp.clip(src, 0, cap - 1)],
+                           last[:, None]).astype(jnp.int32)
+        return drafts, state
+
+    def observe(self, state, block, m, pos, tab):
+        hist = state["hist"]
+        B, kp1 = block.shape
+        j = jnp.arange(kp1)[None, :]
+        # emitted token j lands at stream index pos + 1 + j; dead slots
+        # (m == 0) and the rejected tail push out of range and drop
+        idx = jnp.where(j < m[:, None], pos[:, None] + 1 + j, self.cap)
+        hist = hist.at[jnp.arange(B)[:, None], idx].set(block, mode="drop")
+        return {"hist": hist}
+
+
+def derive_draft_params(params, draft_model: Model):
+    """Reduced-moduli draft weights from the target's resident tree.
+
+    Resident :class:`ResidueTensor` leaves are decoded back to their
+    (already weight-quantized) values and re-encoded through the draft
+    model's cheaper ``EncodeSpec``; float leaves (norm scales, the
+    embedding table, routers, an unprepared target tree) pass straight
+    into the draft's own ``prepare_params``.  The derived ``logits_w`` is
+    re-prepared from the float table, so the whole draft tree is
+    residue-resident under the reduced set — no second checkpoint.
+    """
+    def deq(t):
+        return nx.decode(t) if isinstance(t, ResidueTensor) else t
+
+    floatp = jax.tree_util.tree_map(
+        deq, params, is_leaf=lambda x: isinstance(x, ResidueTensor))
+    if isinstance(floatp.get("embed"), dict):
+        floatp["embed"] = {k: v for k, v in floatp["embed"].items()
+                           if k != "logits_w"}
+    return draft_model.prepare_params(floatp)
+
+
+class RNSDraftModel:
+    """Reduced-moduli residue draft model sharing the target's weights.
+
+    ``propose`` runs ``k + 1`` draft decode steps in a ``fori_loop`` —
+    one per proposed token plus one trailing step that only exists to
+    write the last proposal's KV row, so a fully-accepted block leaves no
+    hole in the draft cache.  The shadow pool reuses the *target's* block
+    tables verbatim; rejected-draft rows are overwritten by the next
+    propose at the same positions.  ``observe`` is therefore a no-op.
+    """
+
+    def __init__(self, k: int, target: Model, target_params, *,
+                 qbits: int = 3, mset=None, num_pages: int, page_size: int,
+                 cache_dtype=jnp.bfloat16, s_cap: int):
+        self.k = k
+        self.mset = P16 if mset is None else mset
+        self.model = build_model(target.cfg, system="rns", rns_bits=qbits,
+                                 rns_mset=self.mset)
+        # deep-copy: derivation passes float leaves (norm scales, embed
+        # table) through untouched, and shared buffers would clash with
+        # the engine's donated draft-state argument
+        self.params = jax.tree_util.tree_map(
+            jnp.copy, derive_draft_params(target_params, self.model))
+        self.page_size = page_size
+        self.cache_dtype = cache_dtype
+        self.s_cap = s_cap
+        cfg = target.cfg
+        self._pool0 = kvp.make_paged_kv(cfg.n_layers, num_pages, page_size,
+                                        cfg.n_kv, cfg.hd, dtype=cache_dtype)
+        self._prefill = jax.jit(self.model.prefill,
+                                static_argnames=("s_max",))
+        self._scatter = jax.jit(kvp.scatter_prefill,
+                                static_argnames=("page_size",),
+                                donate_argnums=(0,))
+
+    def init_state(self, batch: int):
+        # fresh copies: the engine donates the whole draft state into the
+        # fused dispatch, so handing out the cached buffers would let the
+        # first dispatch consume them for every later init
+        return {"params": jax.tree_util.tree_map(jnp.copy, self.params),
+                "kv": jax.tree_util.tree_map(jnp.copy, self._pool0)}
+
+    def begin(self, state, slot_tokens, slot_tok0, prompts, tabs, s_max):
+        if prompts is None:      # every admitted prompt was prefix-cached;
+            return state         # the shadow pages already hold draft KV
+        _, cache = self._prefill(state["params"], {"tokens": prompts},
+                                 s_max=s_max)
+        kv = self._scatter(state["kv"], cache.k, cache.v, tabs,
+                           page_size=self.page_size)
+        return {**state, "kv": kv}
+
+    def propose(self, state, tok, pos, tab):
+        k = self.k
+        drafts0 = jnp.zeros((tok.shape[0], k), jnp.int32)
+
+        def step(j, carry):
+            cur, kv, drafts = carry
+            logits, kv = self.model.decode_paged(
+                state["params"], cur, kv, tab, pos + j,
+                page_size=self.page_size, cache_dtype=self.cache_dtype)
+            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            upd = jax.lax.dynamic_update_slice(
+                drafts, nxt, (0, jnp.minimum(j, k - 1)))
+            return nxt, kv, jnp.where(j < k, upd, drafts)
+
+        _, kv, drafts = jax.lax.fori_loop(
+            0, k + 1, step, (tok, state["kv"], drafts0))
+        return drafts, {**state, "kv": kv}
+
+    def observe(self, state, block, m, pos, tab):
+        return state
+
+
+def make_drafter(cfg: SpecConfig, target: Model, target_params, *,
+                 batch: int, num_pages: int, page_size: int, n_pmax: int,
+                 cache_dtype=jnp.bfloat16):
+    """Build the drafter a parsed ``spec=`` knob names."""
+    if cfg.drafter == "ngram":
+        return NGramDrafter(cfg.k, n=cfg.ngram_n, batch=batch,
+                            hist_cap=n_pmax * page_size)
+    return RNSDraftModel(cfg.k, target, target_params, qbits=cfg.draft_qbits,
+                         mset=cfg.draft_mset, num_pages=num_pages,
+                         page_size=page_size, cache_dtype=cache_dtype,
+                         s_cap=n_pmax * page_size)

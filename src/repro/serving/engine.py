@@ -47,7 +47,9 @@ from repro.numerics import ResidueTensor
 from repro.numerics import kv_pages as kvp
 from repro.parallel.sharding import get_shard_ctx
 from repro.serving.kv_pool import KVPagePool
-from repro.serving.stats import EngineStats, RequestStats, deprecated_stat
+from repro.serving.spec import SpecConfig, accept_blocks
+from repro.serving.stats import (EngineStats, RequestStats, SpecStats,
+                                 deprecated_stat)
 
 __all__ = ["ServingEngine", "GenerateResult", "SegmentResult"]
 
@@ -71,10 +73,16 @@ class GenerateResult:
 class SegmentResult:
     """One continuous-batching decode segment (one fused dispatch)."""
     tokens: np.ndarray   # (B, n) tokens emitted this segment, all slots
-    steps: int           # decode steps executed (== n)
+    steps: int           # decode steps executed (== n without spec)
     done: np.ndarray     # (B,) bool — per-slot finished mask at exit
     faults_detected: int = 0   # scrub detections during this segment
     faults_corrected: int = 0  # ... repaired before the dispatch ran
+    # per-slot emitted counts: with speculative decoding slots advance by
+    # ragged accepted-block jumps, so row s holds counts[s] valid tokens
+    # (plain segments fill it with `steps` for every slot)
+    counts: np.ndarray | None = None
+    proposed: int = 0    # draft tokens proposed this segment (spec only)
+    accepted: int = 0    # ... accepted by the greedy verify rule
 
 
 class ServingEngine:
@@ -83,7 +91,7 @@ class ServingEngine:
                  fused_loop: bool = True, paged: bool | None = None,
                  page_size: int = 64, kv_format: str = "bf16",
                  num_pages: int | None = None, prefix_cache: bool = True,
-                 scrub: str = "off"):
+                 scrub: str = "off", spec=None):
         """``prepare=True`` makes quantized weights residue-resident up
         front (identity under the bns backend); ``prepare=False`` keeps the
         convert-per-call path — useful only as a baseline to measure the
@@ -112,7 +120,20 @@ class ServingEngine:
         single-channel fault in place and counting it under
         ``engine.stats.faults``.  A no-op unless the model weights carry a
         redundant moduli set (``build_model(rns_mset=...)``) or the pool
-        uses a redundant page format (``kv_format="rns8r"``)."""
+        uses a redundant page format (``kv_format="rns8r"``).
+        ``scrub="rotate:k"`` amortizes the policy: the redundant units
+        (weight planes + the K/V page pools) are round-robined into ``k``
+        groups and each dispatch checks one group, so full coverage costs
+        ``k`` dispatches at ~1/k the per-dispatch scrub time.
+
+        ``spec=`` turns on speculative decoding (DESIGN.md §13): a
+        :class:`~repro.serving.spec.SpecConfig` or a ``"ngram"`` /
+        ``"ngram:k"`` / ``"rns:k"`` string.  The drafter proposes k
+        tokens per step, the target verifies the whole block in one
+        batched paged step inside the same single-dispatch fused loop,
+        and greedy acceptance emits the longest agreed prefix —
+        bit-identical tokens, fewer target steps.  Requires the paged
+        fused loop and greedy sampling."""
         self.model = model
         self.params = model.prepare_params(params) if prepare else params
         self.prepared = prepare
@@ -125,13 +146,21 @@ class ServingEngine:
         self._fused = jax.jit(self._fused_loop_fn,
                               static_argnames=("max_new_cap", "greedy"),
                               donate_argnums=(2,))
-        if scrub not in ("off", "decode"):
+        self._scrub_groups = 0      # rotate:k group count (0 = not rotating)
+        self._scrub_cursor = 0      # which group the next dispatch checks
+        if scrub.startswith("rotate:"):
+            self._scrub_groups = int(scrub.split(":", 1)[1])
+            if self._scrub_groups < 1:
+                raise ValueError(f"scrub rotate group count must be >= 1, "
+                                 f"got {scrub!r}")
+        elif scrub not in ("off", "decode"):
             raise ValueError(
-                f"scrub must be 'off' or 'decode', got {scrub!r}")
+                f"scrub must be 'off', 'decode' or 'rotate:k', got {scrub!r}")
         self.scrub = scrub
         self.stats = EngineStats()
         self._trace_count = 0
         self._last_scrub = (0, 0)   # (detected, corrected) of the last pass
+        self._compiled_buckets: dict[str, set[int]] = {}
 
         supported = (fused_loop and model.decode_paged is not None
                      and get_shard_ctx() is None)
@@ -165,6 +194,26 @@ class ServingEngine:
         else:
             self.pool = None
 
+        self.spec = None
+        self._drafter = None
+        if spec is not None:
+            if not self.paged:
+                raise ValueError(
+                    "spec= needs the paged fused decode loop (paged=True, "
+                    "fused_loop=True, a family with a paged decode path, "
+                    "and no mesh)")
+            from repro.serving.drafters import make_drafter
+            self.spec = SpecConfig.parse(spec)
+            self._drafter = make_drafter(
+                self.spec, model, self.params, batch=batch,
+                num_pages=self.pool.num_pages, page_size=page_size,
+                n_pmax=self.n_pmax, cache_dtype=cache_dtype)
+            self._spec_state = self._drafter.init_state(batch)
+            self._fused_spec = jax.jit(self._fused_spec_fn,
+                                       static_argnames=("seg_cap",),
+                                       donate_argnums=(2, 3))
+            self.stats.spec = SpecStats()
+
     # legacy counter attributes (see repro.serving.stats)
     decode_steps = deprecated_stat("ServingEngine", "decode_steps")
     decode_dispatches = deprecated_stat("ServingEngine", "decode_dispatches")
@@ -174,11 +223,31 @@ class ServingEngine:
 
     def fused_cache_size(self) -> int:
         """Compiled-trace count of the active fused decode loop."""
-        fn = self._fused_paged if self.paged else self._fused
+        if self._drafter is not None:
+            fn = self._fused_spec
+        else:
+            fn = self._fused_paged if self.paged else self._fused
         try:
             return fn._cache_size()
         except AttributeError:      # pragma: no cover - older jax
             return -1
+
+    def _pick_bucket(self, kind: str, n: int) -> int:
+        """Bucket cap for a decode loop of length ``n``, reusing traces.
+
+        A length landing between already-compiled buckets runs under the
+        *next-larger compiled* cap instead of retracing its own power-of-
+        two bucket — the loop length is a runtime operand, so any compiled
+        cap >= the wanted bucket serves it bit-identically (only the
+        donated token-buffer width changes, and callers slice it anyway).
+        """
+        want = self._bucket(n)
+        caps = self._compiled_buckets.setdefault(kind, set())
+        bigger = [c for c in caps if c >= want]
+        if bigger:
+            return min(bigger)
+        caps.add(want)
+        return want
 
     def _note_fused_dispatch(self, bucket: int) -> None:
         cur = self.fused_cache_size()
@@ -201,17 +270,34 @@ class ServingEngine:
         page formats via :func:`repro.numerics.kv_pages.verify_pages`).
         Returns the ``(detected, corrected)`` element counts of this pass
         and folds them into ``stats.faults``.  No-op unless
-        ``scrub="decode"`` and some state actually carries redundancy.
+        ``scrub="decode"`` / ``"rotate:k"`` and some state actually
+        carries redundancy.
+
+        Under ``rotate:k`` the scrubbable units — each redundant weight
+        plane, plus the K and V page pools — are numbered in a fixed
+        (tree-deterministic) order and partitioned round-robin into ``k``
+        groups; one group is checked per pass and the cursor advances, so
+        any persistent fault is caught within ``k`` dispatches at ~1/k
+        the per-dispatch cost (gated in BENCH_fault.json).
         """
-        if self.scrub != "decode":
+        if self.scrub == "off":
             return 0, 0
+        groups = self._scrub_groups          # 0 => scrub everything
+        active = self._scrub_cursor % groups if groups else 0
+        unit = 0
         det = cor = 0
         scrubbed_weights = False
+
+        def due() -> bool:
+            nonlocal unit
+            mine = not groups or unit % groups == active
+            unit += 1
+            return mine
 
         def fix(t):
             nonlocal det, cor, scrubbed_weights
             if (isinstance(t, ResidueTensor) and t.layout == "rns"
-                    and t.mset.redundant):
+                    and t.mset.redundant and due()):
                 t, d, c = nx.scrub(t)
                 det += d
                 cor += c
@@ -226,12 +312,23 @@ class ServingEngine:
         if (self.paged and self.pool.fmt.is_residue
                 and self.pool.fmt.redundant):
             kv = self.pool.kv
-            k2, dk, ck = kvp.verify_pages(kv.k)
-            v2, dv, cv = kvp.verify_pages(kv.v)
-            self.pool.kv = kvp.PagedKV(k2, v2)
-            det += dk + dv
-            cor += ck + cv
-            self.stats.faults.kv_scrubs += 1
+            k_pool, v_pool = kv.k, kv.v
+            scrubbed_kv = False
+            if due():
+                k_pool, dk, ck = kvp.verify_pages(k_pool)
+                det += dk
+                cor += ck
+                scrubbed_kv = True
+            if due():
+                v_pool, dv, cv = kvp.verify_pages(v_pool)
+                det += dv
+                cor += cv
+                scrubbed_kv = True
+            if scrubbed_kv:
+                self.pool.kv = kvp.PagedKV(k_pool, v_pool)
+                self.stats.faults.kv_scrubs += 1
+        if groups:
+            self._scrub_cursor += 1
         self.stats.faults.detected += det
         self.stats.faults.corrected += cor
         return det, cor
@@ -272,6 +369,12 @@ class ServingEngine:
         tok = self._sample(logits, temperature, key, 0)
         B = tok.shape[0]
         if self.paged:
+            if self._drafter is not None:
+                if "tokens" not in batch_inputs:
+                    raise ValueError(
+                        "spec= needs token prompts (drafters condition on "
+                        "the token stream)")
+                self._last_prompts = np.asarray(batch_inputs["tokens"])
             return self._generate_paged(tok, cache, prompt_len, max_new,
                                         temperature, key, eos, active,
                                         prefill_logits)
@@ -330,8 +433,10 @@ class ServingEngine:
         # max_new (max over the packed requests) retrace per *bucket*, not
         # per value (the host loop compiled model.decode exactly once; a
         # per-value retrace of the whole fused graph would dwarf the
-        # per-token dispatch overhead this loop exists to eliminate)
-        cap = self._bucket(max_new)
+        # per-token dispatch overhead this loop exists to eliminate); a
+        # max_new landing between compiled buckets reuses the next-larger
+        # compiled trace instead of retracing (_pick_bucket)
+        cap = self._pick_bucket("fused", max_new)
         f_det, f_cor = self._scrub_pass()
         buf, n, steps, _ = self._fused(
             self.params, tok, cache, jnp.int32(prompt_len),
@@ -465,19 +570,125 @@ class ServingEngine:
         i, _, _, kv, done, buf, steps = jax.lax.while_loop(cond, body, init)
         return buf, i, steps, kv, done
 
+    # -- speculative decode loop (DESIGN.md §13) -----------------------------
+
+    def _fused_spec_fn(self, params, tok0, kv, dstate, tab, pos0, eos,
+                       done_in, remaining, seg, stop_flag, *, seg_cap: int):
+        """Device-resident speculative decode segment (jitted; pool and
+        drafter state donated).
+
+        Each iteration: the drafter proposes ``k`` tokens, the target
+        verifies ``tok0 + drafts`` in one batched ``verify_paged`` step
+        (writing all k+1 KV rows; rejected rows are overwritten by the
+        next iteration at the same positions, and the per-row ``kv_len``
+        masking means they are never read), and the greedy acceptance
+        rule (:func:`repro.serving.spec.accept_blocks`) emits 1..k+1
+        tokens per live slot.  Slots therefore advance *raggedly*: the
+        carry tracks per-slot positions and emitted counts, finished
+        slots freeze (their re-verifies rewrite identical bytes), and the
+        caller reads row ``b``'s first ``cnt[b]`` buffer entries.
+
+        Every emitted token is the argmax of a target logits row over
+        exactly the prefix the plain loop would have used, so the token
+        streams are bit-identical — drafting only changes how many rows
+        one verify step retires (``steps`` counts verify iterations, not
+        tokens).
+        """
+        B = tok0.shape[0]
+        k = self._drafter.k
+        kp1 = k + 1
+        buf0 = jnp.zeros((B, seg_cap), jnp.int32)
+        done0 = (done_in | ((eos >= 0) & (tok0[:, 0] == eos))
+                 | (remaining <= 0))
+        fin0 = done0
+        j = jnp.arange(kp1)[None, :]
+        rows = jnp.arange(B)[:, None]
+
+        def cond(st):
+            return jnp.logical_not(st[1])
+
+        def body(st):
+            it, _, tok, kv, dstate, done, pos, cnt, buf, prop, acc = st
+            live = ~done
+            drafts, dstate = self._drafter.propose(dstate, tok, pos, tab)
+            vtok = jnp.concatenate([tok, drafts], axis=1)       # (B, k+1)
+            logits, kv = self.model.verify_paged(
+                params, vtok, kv, tab, pos,
+                page_size=self.page_size, cache_dtype=self.cache_dtype)
+            blk = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, k+1)
+            m, n_acc = accept_blocks(drafts, blk, eos=eos,
+                                     budget=remaining - cnt, live=live)
+            idx = jnp.where(j < m[:, None], cnt[:, None] + j, seg_cap)
+            buf = buf.at[rows, idx].set(blk, mode="drop")
+            cnt = cnt + m
+            pos = pos + m
+            tok = jnp.where(live[:, None],
+                            jnp.take_along_axis(
+                                blk, jnp.maximum(m - 1, 0)[:, None], axis=1),
+                            tok)
+            hit_eos = jnp.any((j < m[:, None]) & (eos[:, None] >= 0)
+                              & (blk == eos[:, None]), axis=1)
+            done = done | (live & (hit_eos | (cnt >= remaining)))
+            dstate = self._drafter.observe(dstate, blk, m, pos - m, tab)
+            prop = prop + k * jnp.sum(live.astype(jnp.int32))
+            acc = acc + jnp.sum(jnp.where(
+                live, jnp.minimum(n_acc, jnp.maximum(m - 1, 0)), 0))
+            halt = (jnp.all(done) | (it + 1 >= seg)
+                    | (stop_flag & jnp.any(done & ~fin0)))
+            return (it + 1, halt, tok, kv, dstate, done, pos, cnt, buf,
+                    prop, acc)
+
+        init = (jnp.int32(0), jnp.all(done0) | (seg <= 0), tok0, kv, dstate,
+                done0, jnp.asarray(pos0, jnp.int32),
+                jnp.zeros(B, jnp.int32), buf0, jnp.int32(0), jnp.int32(0))
+        (it, _, _, kv, dstate, done, _, cnt, buf,
+         prop, acc) = jax.lax.while_loop(cond, body, init)
+        return buf, cnt, it, kv, dstate, done, prop, acc
+
     def _dispatch_segment(self, tok0, pos0, eos_vec, done0, remaining,
                           tabs, seg, temperature, key, key_base,
                           stop_on_finish, greedy):
         """Shared fused-paged dispatch: generate() and the continuous
-        scheduler both funnel through here.  Returns (tokens, steps, done)
-        with tokens already truncated to the emitted count."""
-        cap = self._bucket(seg)
+        scheduler both funnel through here.  Returns ``(tokens, steps,
+        done, counts, proposed, accepted)`` — tokens truncated to the
+        emitted width, ``counts`` the per-slot valid-token counts (ragged
+        under speculation, uniform ``steps`` otherwise)."""
+        if self._drafter is not None and not greedy:
+            raise ValueError("speculative decoding (spec=) is greedy-"
+                             "acceptance only; run with temperature=0")
+        cap = self._pick_bucket("spec" if self._drafter is not None
+                                else "paged", seg)
         self._last_scrub = self._scrub_pass()
+        eos_dev = jnp.asarray(np.clip(eos_vec, -1, 2**31 - 1), jnp.int32)
+        if self._drafter is not None:
+            buf, cnt, steps, kv, dstate, done, prop, acc = self._fused_spec(
+                self.params, tok0, self.pool.kv, self._spec_state,
+                jnp.asarray(tabs, jnp.int32),
+                jnp.asarray(pos0, jnp.int32), eos_dev,
+                jnp.asarray(done0),
+                jnp.asarray(remaining, jnp.int32),
+                jnp.int32(seg), jnp.bool_(stop_on_finish),
+                seg_cap=cap)
+            self.pool.kv = kv          # donated in, aliased out
+            self._spec_state = dstate  # ditto (drafter KV / history)
+            self._note_fused_dispatch(cap)
+            counts = np.asarray(cnt)   # the single host sync of the segment
+            steps, prop, acc = int(steps), int(prop), int(acc)
+            n = int(counts.max()) if counts.size else 0
+            self.stats.decode_steps += steps
+            self.stats.decode_dispatches += 1
+            sp = self.stats.spec
+            sp.proposed += prop
+            sp.accepted += acc
+            sp.emitted += int(counts.sum())
+            sp.verify_steps += steps
+            sp.blocks += prop // self._drafter.k
+            return (np.asarray(buf)[:, :n], steps, np.asarray(done),
+                    counts, prop, acc)
         buf, n, steps, kv, done = self._fused_paged(
             self.params, tok0, self.pool.kv,
             jnp.asarray(tabs, jnp.int32),
-            jnp.asarray(pos0, jnp.int32),
-            jnp.asarray(np.clip(eos_vec, -1, 2**31 - 1), jnp.int32),
+            jnp.asarray(pos0, jnp.int32), eos_dev,
             jnp.asarray(done0),
             jnp.asarray(remaining, jnp.int32),
             jnp.float32(temperature),
@@ -491,7 +702,8 @@ class ServingEngine:
         steps = int(steps)
         self.stats.decode_steps += steps
         self.stats.decode_dispatches += 1
-        return np.asarray(buf)[:, :n], steps, np.asarray(done)
+        counts = np.full(tok0.shape[0], steps, np.int64)
+        return np.asarray(buf)[:, :n], steps, np.asarray(done), counts, 0, 0
 
     def _generate_paged(self, tok, cache, prompt_len, max_new, temperature,
                         key, eos, active, prefill_logits) -> GenerateResult:
@@ -509,17 +721,30 @@ class ServingEngine:
         pool = self.pool
         pool.reset()    # generate() owns the whole pool for this call
         a0 = pool.stats.snapshot()
-        n_pages = min(-(-(prompt_len + max_new) // self.page_size),
+        # speculative verifies overshoot the last emitted row by up to k
+        # positions — allocate the headroom so the tail writes stay on the
+        # slot's own pages (past-capacity rows fall to the dump page)
+        k_spec = self._drafter.k if self._drafter is not None else 0
+        n_pages = min(-(-(prompt_len + max_new + k_spec) // self.page_size),
                       self.n_pmax)
         slot_pages = [pool.alloc(n_pages) for _ in range(B)]
         tabs = np.stack([pool.tab_row(p, self.n_pmax) for p in slot_pages])
         tab_dev = jnp.asarray(tabs)
         pool.kv = self._scatter(pool.kv, cache.k, cache.v, tab_dev,
                                 page_size=self.page_size)
+        if self._drafter is not None:
+            prompts = np.asarray(self._last_prompts)
+            tok_np = np.asarray(tok[:, 0])
+            self._spec_state = self._drafter.init_state(B)
+            self._spec_state = self._drafter.begin(
+                self._spec_state,
+                {b: prompts[b] for b in range(B)},
+                {b: int(tok_np[b]) for b in range(B)},
+                jnp.asarray(prompts), tab_dev, prompts.shape[1])
         # tok0 is recorded on the host; the device segment emits the rest.
         # remaining = max_new - 1 further tokens; seg bounds the segment at
         # the same count, so steps/halting match the dense loop exactly.
-        buf, steps, _ = self._dispatch_segment(
+        buf, steps, _, counts, prop, acc = self._dispatch_segment(
             tok, np.full(B, prompt_len, np.int32), eos_vec, done0,
             np.full(B, max_new - 1, np.int32), tab_dev,
             max_new - 1, temperature, key, 0, False, greedy)
@@ -527,6 +752,12 @@ class ServingEngine:
         for p in slot_pages:
             pool.release(p)
         f_det, f_cor = self._last_scrub
+        spec_stats = None
+        if self._drafter is not None:
+            spec_stats = SpecStats(proposed=prop, accepted=acc,
+                                   emitted=int(counts.sum()),
+                                   verify_steps=steps,
+                                   blocks=prop // self._drafter.k)
         return GenerateResult(
             tokens=tokens, prefill_logits=prefill_logits, steps=steps,
             stats=RequestStats(
@@ -534,7 +765,8 @@ class ServingEngine:
                 pages_allocated=(pool.stats.pages_allocated
                                  - a0.pages_allocated),
                 pages_freed=pool.stats.pages_freed - a0.pages_freed,
-                faults_detected=f_det, faults_corrected=f_cor))
+                faults_detected=f_det, faults_corrected=f_cor,
+                spec=spec_stats))
 
     # -- continuous-batching admission / segment API -------------------------
 
@@ -557,6 +789,10 @@ class ServingEngine:
         out = {s: (infos[s].cached_logits, infos[s]) for s in infos
                if infos[s].cached_logits is not None}
         if not need:
+            # prefill skipped everywhere; the drafter still registers the
+            # prompts (shadow pages already hold the draft KV — page
+            # content is a pure function of the token prefix per model)
+            self._spec_begin(slot_tokens, out, None, None, 0)
             return out
         s_buck = min(self._bucket(max(len(slot_tokens[s]) for s in need)),
                      self.n_pmax * self.page_size)
@@ -582,7 +818,29 @@ class ServingEngine:
         for s in need:
             pool.remember_logits(slot_tokens[s], logits[s])
             out[s] = (logits[s], infos[s])
+        self._spec_begin(slot_tokens, out, jnp.asarray(prompts),
+                         jnp.asarray(tabs), s_buck)
         return out
+
+    def _spec_begin(self, slot_tokens, out, prompts, tabs, s_max) -> None:
+        """Register newly admitted prompts with the drafter (spec= only):
+        the n-gram drafter seeds its history rows; the rns drafter runs its
+        own prefill over the same padded batch and scatters the shadow
+        pages (one extra *prefill* dispatch — decode stays one dispatch
+        per segment)."""
+        if self._drafter is None:
+            return
+        tok0 = {s: int(np.argmax(out[s][0])) for s in slot_tokens}
+        self._spec_state = self._drafter.begin(
+            self._spec_state,
+            {s: np.asarray(slot_tokens[s]) for s in slot_tokens},
+            tok0, prompts, tabs, s_max)
+
+    @property
+    def spec_lookahead(self) -> int:
+        """Draft block size k (0 without spec=) — the KV-position headroom
+        admissions must reserve for speculative verify overshoot."""
+        return self._drafter.k if self._drafter is not None else 0
 
     def paged_segment(self, tok0, pos0, remaining, eos_vec, done0, tabs, *,
                       seg: int, stop_on_finish: bool,
@@ -598,12 +856,13 @@ class ServingEngine:
         scheduler can retire it and admit from the queue.
         """
         greedy = temperature <= 0.0 or key is None
-        buf, steps, done = self._dispatch_segment(
+        buf, steps, done, counts, prop, acc = self._dispatch_segment(
             jnp.asarray(tok0, jnp.int32), pos0, eos_vec, done0, remaining,
             tabs, seg, temperature, key, key_base, stop_on_finish, greedy)
         f_det, f_cor = self._last_scrub
         return SegmentResult(tokens=buf, steps=steps, done=done,
-                             faults_detected=f_det, faults_corrected=f_cor)
+                             faults_detected=f_det, faults_corrected=f_cor,
+                             counts=counts, proposed=prop, accepted=acc)
 
     @staticmethod
     def _sample(logits: jax.Array, temperature: float,

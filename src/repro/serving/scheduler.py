@@ -30,7 +30,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.serving.engine import ServingEngine
-from repro.serving.stats import RequestStats, deprecated_stat
+from repro.serving.stats import RequestStats, SpecStats, deprecated_stat
 
 __all__ = ["Request", "RequestScheduler"]
 
@@ -105,7 +105,10 @@ class RequestScheduler:
                 r = queue.pop(0)
                 pend[s] = r
                 batch_toks[s] = np.asarray(r.tokens, np.int32)
-                batch_total[s] = min(len(r.tokens) + r.max_new, cap)
+                # spec_lookahead: speculative verifies overshoot the last
+                # emitted row by up to k positions — reserve the headroom
+                batch_total[s] = min(
+                    len(r.tokens) + r.max_new + eng.spec_lookahead, cap)
             if not pend:
                 return
             admitted = eng.admit_prefill(batch_toks, batch_total)
@@ -165,7 +168,11 @@ class RequestScheduler:
                 seg=seg, stop_on_finish=bool(queue))
             for s, sl in list(slots.items()):
                 r = sl.req
-                take = min(res.steps, r.max_new - len(sl.emitted))
+                # per-slot counts: speculative segments advance slots by
+                # ragged accepted-block jumps, so row s holds counts[s]
+                # valid tokens (plain segments fill counts with steps)
+                avail = res.steps if res.counts is None else int(res.counts[s])
+                take = min(avail, r.max_new - len(sl.emitted))
                 row = res.tokens[s, :take]
                 stop = None
                 if r.eos is not None:
@@ -175,6 +182,17 @@ class RequestScheduler:
                 sl.emitted += [int(t) for t in row[:stop]]
                 r.stats.decode_steps += res.steps
                 r.stats.decode_dispatches += 1
+                if res.proposed:
+                    # segment-wide drafting telemetry: like the scrub
+                    # counters, every co-resident request rode the same
+                    # verify steps, so each carries the segment's counts
+                    if r.stats.spec is None:
+                        r.stats.spec = SpecStats()
+                    r.stats.spec.proposed += res.proposed
+                    r.stats.spec.accepted += res.accepted
+                    r.stats.spec.emitted += take
+                    r.stats.spec.verify_steps += res.steps
+                    r.stats.spec.blocks += res.proposed // eng.spec_lookahead
                 # scrub counters are pool/param-wide per segment — every
                 # co-resident request observed (and survived) the same
                 # faults, so each carries the segment's counts

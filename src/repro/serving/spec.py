@@ -1,0 +1,96 @@
+"""Speculative decoding on the fused device loop (DESIGN.md §13).
+
+A drafter proposes ``k`` tokens, the target model verifies all of them in
+**one** batched paged decode step (a length-``k+1`` "mini-prefill" against
+the paged KV cache), and the greedy acceptance rule emits the longest
+draft prefix the target agrees with *plus* the target's own next token —
+between 1 and ``k+1`` tokens per verify step.  The whole propose → verify
+→ accept cycle lives inside the engine's jitted ``lax.while_loop``, so a
+generate stays a single dispatch with no host sync, exactly like the
+plain fused loop it replaces.
+
+Greedy acceptance is *exact*: every emitted token is the argmax of a
+target-model logits row computed over the same KV prefix the plain loop
+would have used, so speculative output is bit-identical to non-speculative
+decoding — the drafter only decides how many of those rows one dispatch
+retires (pinned by tests/test_spec_decode.py).
+
+:class:`SpecConfig` parses the engine's ``spec=`` knob; the acceptance
+arithmetic is the pure :func:`accept_blocks`, shared by the fused loop
+and the unit tests.  Drafters live in :mod:`repro.serving.drafters`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["SpecConfig", "accept_blocks"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Parsed ``ServingEngine(spec=...)`` knob.
+
+    ``drafter``: ``"ngram"`` (model-free lookahead over the emitted
+    stream) or ``"rns"`` (reduced-moduli residue draft model derived from
+    the target's resident planes — no second checkpoint).
+
+    ``k``: draft tokens proposed per verify step.  ``ngram_n``: context
+    length of the n-gram match.  ``draft_qbits`` / ``draft_mset``: the
+    cheaper quantization the rns drafter decodes the shared weights
+    through (``draft_mset=None`` defaults to the paper's P16 special set).
+    """
+
+    drafter: str = "ngram"
+    k: int = 4
+    ngram_n: int = 2
+    draft_qbits: int = 3
+    draft_mset: object | None = None
+
+    def __post_init__(self):
+        if self.drafter not in ("ngram", "rns"):
+            raise ValueError(
+                f"spec drafter must be 'ngram' or 'rns', got {self.drafter!r}")
+        if self.k < 1:
+            raise ValueError(f"spec k must be >= 1, got {self.k}")
+
+    @classmethod
+    def parse(cls, spec) -> "SpecConfig":
+        """Accept a SpecConfig, or a ``"drafter"`` / ``"drafter:k"`` string."""
+        if isinstance(spec, cls):
+            return spec
+        if not isinstance(spec, str):
+            raise TypeError(
+                f"spec must be a SpecConfig or string, got {type(spec)}")
+        name, _, karg = spec.partition(":")
+        return cls(drafter=name, k=int(karg)) if karg else cls(drafter=name)
+
+
+def accept_blocks(drafts, greedy, *, eos, budget, live):
+    """The greedy acceptance rule, as pure array arithmetic.
+
+    ``drafts (B, k)``: the drafter's proposals ``d_1..d_k``.
+    ``greedy (B, k+1)``: the target's argmax continuation of each fed
+    token — row ``j`` is the token the target emits *after* seeing
+    ``t_0, d_1..d_j`` (``t_0`` is the slot's current last token).
+    ``eos (B,)``: per-slot stop token (< 0 = none); ``budget (B,)``:
+    tokens the slot may still emit; ``live (B,)``: slots still decoding.
+
+    Returns ``(m, n_acc)``: ``m`` tokens of ``greedy`` to emit per slot
+    (0 for dead slots, else >= 1 — the longest matching draft prefix plus
+    the target's correction/bonus token, clamped by budget and truncated
+    just past the first EOS), and ``n_acc``, the raw accepted-draft count
+    before clamping (the drafter-quality telemetry number).
+    """
+    k = drafts.shape[1]
+    match = (drafts == greedy[:, :k]).astype(jnp.int32)
+    # longest all-accepted prefix: cumprod turns the first mismatch into 0s
+    n_acc = jnp.cumprod(match, axis=1).sum(axis=1)
+    m = jnp.minimum(n_acc + 1, budget)
+    j = jnp.arange(k + 1)[None, :]
+    is_eos = (eos[:, None] >= 0) & (greedy == eos[:, None])
+    eos_pos = jnp.min(jnp.where(is_eos, j, k + 1), axis=1)
+    m = jnp.minimum(m, eos_pos + 1)            # emit through the EOS, stop
+    m = jnp.where(live, m, 0)
+    return m, n_acc

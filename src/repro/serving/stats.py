@@ -27,6 +27,7 @@ import warnings
 __all__ = [
     "FaultStats",
     "PoolStats",
+    "SpecStats",
     "RequestStats",
     "EngineStats",
     "deprecated_stat",
@@ -61,6 +62,36 @@ class PoolStats:
 
 
 @dataclasses.dataclass
+class SpecStats:
+    """Speculative-decoding telemetry (see DESIGN.md §13).
+
+    One verify step is one batched target-model call inside the fused
+    spec loop; it emits between 1 and k+1 tokens per live slot, so
+    ``mean_accepted_len`` > 1 is the whole point of drafting.
+    """
+
+    proposed: int = 0       # draft tokens proposed (k per live slot/step)
+    accepted: int = 0       # ... accepted by the greedy verify rule
+    emitted: int = 0        # tokens emitted through the spec loop
+    verify_steps: int = 0   # batched verify steps (target-model calls)
+    blocks: int = 0         # accepted blocks emitted (live slot-steps)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        return self.accepted / max(self.proposed, 1)
+
+    @property
+    def mean_accepted_len(self) -> float:
+        """Tokens emitted per accepted block — the per-slot advance one
+        verify step buys (1.0 = drafting bought nothing)."""
+        return self.emitted / max(self.blocks, 1)
+
+    def snapshot(self) -> "SpecStats":
+        return dataclasses.replace(self)
+
+
+@dataclasses.dataclass
 class RequestStats:
     """Per-request telemetry, filled by the engine/scheduler."""
 
@@ -73,9 +104,11 @@ class RequestStats:
     latency_s: float = 0.0         # serve() entry -> request completed
     faults_detected: int = 0       # corruption seen while this request rode
     faults_corrected: int = 0      # ... and repaired in-flight
+    spec: SpecStats | None = None  # speculative segments it rode in
 
     def snapshot(self) -> "RequestStats":
-        return dataclasses.replace(self)
+        return dataclasses.replace(
+            self, spec=self.spec.snapshot() if self.spec is not None else None)
 
 
 @dataclasses.dataclass
@@ -91,12 +124,14 @@ class EngineStats:
     fused_retraces: int = 0      # fused-loop retraces (new length buckets)
     faults: FaultStats = dataclasses.field(default_factory=FaultStats)
     pool: PoolStats | None = None   # shared with the engine's KVPagePool
+    spec: SpecStats | None = None   # set when the engine runs with spec=
 
     def snapshot(self) -> "EngineStats":
         return dataclasses.replace(
             self,
             faults=self.faults.snapshot(),
             pool=self.pool.snapshot() if self.pool is not None else None,
+            spec=self.spec.snapshot() if self.spec is not None else None,
         )
 
 

@@ -159,24 +159,29 @@ def inject_faults(engine, faults, *,
             return orig(tok0, pos0, eos_vec, done0, remaining, tabs, seg,
                         temperature, key, key_base, stop_on_finish, greedy)
         armed["live"] = False
+        if getattr(engine, "_drafter", None) is not None:
+            raise ValueError(
+                "inject_faults splits the plain dispatch at a uniform step "
+                "boundary; speculative engines advance slots raggedly — "
+                "construct the engine without spec=")
         k = min(int(after_steps), int(seg))
         if k <= 0:
             _apply(engine, faults, log)
             return orig(tok0, pos0, eos_vec, done0, remaining, tabs, seg,
                         temperature, key, key_base, stop_on_finish, greedy)
-        buf1, steps1, done1 = orig(tok0, pos0, eos_vec, done0, remaining,
-                                   tabs, k, temperature, key, key_base,
-                                   stop_on_finish, greedy)
+        buf1, steps1, done1, cnt1, _, _ = orig(
+            tok0, pos0, eos_vec, done0, remaining, tabs, k, temperature,
+            key, key_base, stop_on_finish, greedy)
         _apply(engine, faults, log)
         if steps1 >= int(seg) or bool(np.asarray(done1).all()):
-            return buf1, steps1, done1
+            return buf1, steps1, done1, cnt1, 0, 0
         tok2 = jnp.asarray(buf1[:, steps1 - 1:steps1], jnp.int32)
-        buf2, steps2, done2 = orig(
+        buf2, steps2, done2, cnt2, _, _ = orig(
             tok2, np.asarray(pos0) + steps1, eos_vec, done1,
             np.asarray(remaining) - steps1, tabs, int(seg) - steps1,
             temperature, key, key_base + steps1, stop_on_finish, greedy)
         return (np.concatenate([buf1, buf2], axis=1), steps1 + steps2,
-                done2)
+                done2, cnt1 + cnt2, 0, 0)
 
     engine._dispatch_segment = patched
     try:

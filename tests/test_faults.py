@@ -112,6 +112,46 @@ def test_scrub_off_weight_fault_masked_by_corrected_decode(rmodel):
 def test_scrub_rejects_unknown_policy(rmodel):
     with pytest.raises(ValueError, match="scrub"):
         _engine(rmodel, scrub="always")
+    with pytest.raises(ValueError, match="rotate"):
+        _engine(rmodel, scrub="rotate:0")
+
+
+def test_rotate_scrub_corrects_within_k_passes(rmodel):
+    """scrub="rotate:3" checks one unit group per pass: a persistent
+    weight fault is caught and repaired within 3 passes, and once
+    repaired every later pass sees a clean plane."""
+    eng = _engine(rmodel, scrub="rotate:3")
+    flip_weight_bit(eng, FaultSpec(kind="weight", bit=0x11, channel=1,
+                                   index=5))
+    fixed_at = None
+    for i in range(3):
+        det, cor = eng._scrub_pass()
+        assert det == cor
+        if det:
+            fixed_at = i
+    assert fixed_at is not None            # caught within k dispatches
+    for _ in range(3):                     # a full extra rotation: clean
+        det, _ = eng._scrub_pass()
+        assert det == 0
+    assert eng.stats.faults.detected == eng.stats.faults.corrected > 0
+
+
+def test_rotate_scrub_serves_bit_identical_through_fault(rmodel):
+    """End to end under rotation: the fault may ride uncorrected for up
+    to k-1 dispatches (the redundant matmul's corrected_decode masks it
+    in-run), tokens stay bit-identical throughout, and the scrub counters
+    show the eventual repair."""
+    eng = _engine(rmodel, scrub="rotate:3")
+    batch = _prompts()
+    clean = eng.generate(batch, max_new=8)
+    flip_weight_bit(eng, FaultSpec(kind="weight", bit=0x09, channel=2,
+                                   index=7))
+    det0 = eng.stats.faults.detected
+    for _ in range(3):                     # one dispatch per generate
+        r = eng.generate(batch, max_new=8)
+        np.testing.assert_array_equal(r.tokens, clean.tokens)
+    assert eng.stats.faults.detected - det0 > 0
+    assert eng.stats.faults.detected == eng.stats.faults.corrected
 
 
 def test_scheduler_attributes_faults_to_requests(rmodel):

@@ -129,6 +129,29 @@ def test_fused_loop_max_new_is_runtime_within_bucket(engine):
     assert r12.tokens.shape[1] == 12 and r16.tokens.shape[1] == 16
 
 
+def test_fused_loop_between_buckets_reuses_larger_trace():
+    """A max_new landing between already-compiled buckets must NOT retrace
+    its own power-of-two bucket: the loop length is a runtime operand, so
+    the next-larger compiled cap serves it bit-identically.  A mixed
+    max_new workload therefore compiles exactly one trace."""
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(),
+                              n_layers=2, vocab=256,
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    eng = ServingEngine(model, params, batch=2, s_max=40)
+    rng = np.random.default_rng(9)
+    prompts = rng.integers(0, cfg.vocab, (2, 8)).astype(np.int32)
+    r24 = eng.generate({"tokens": prompts}, max_new=24)   # compiles bucket 32
+    size, retr = eng.fused_cache_size(), eng.stats.fused_retraces
+    for mx in (10, 6, 16, 12):      # buckets 16, 8, 16 — all ride cap 32
+        r = eng.generate({"tokens": prompts}, max_new=mx)
+        assert r.tokens.shape[1] == mx
+        np.testing.assert_array_equal(r.tokens, r24.tokens[:, :mx])
+    assert eng.fused_cache_size() == size             # zero new traces
+    assert eng.stats.fused_retraces == retr
+
+
 def test_fused_loop_matches_host_loop(engine, host_engine):
     eng, cfg = engine
     rng = np.random.default_rng(3)

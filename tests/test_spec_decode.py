@@ -1,0 +1,236 @@
+"""Speculative decoding (DESIGN.md §13): the greedy acceptance rule, the
+batched verify step, and the end-to-end pin — speculative generate() is
+bit-identical to plain paged decoding for BOTH drafters, on float and
+residue pages, while staying one device dispatch per generate."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.numerics import kv_pages as kvp
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Request, RequestScheduler
+from repro.serving.spec import SpecConfig, accept_blocks
+from repro.serving.stats import SpecStats
+
+
+# ---------------------------------------------------------------------------
+# accept_blocks: the acceptance rule as pure arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_accept_blocks_rules():
+    """One batch, five slots, k=3: full acceptance (+bonus), first-mismatch
+    truncation, EOS inside the accepted prefix, budget clamp, dead slot."""
+    drafts = jnp.asarray([[1, 2, 3],
+                          [1, 9, 3],     # mismatch at draft index 1
+                          [1, 2, 3],
+                          [1, 2, 3],
+                          [1, 2, 3]], jnp.int32)
+    greedy = jnp.asarray([[1, 2, 3, 4],  # agrees everywhere -> bonus token
+                          [1, 5, 6, 7],  # correction token at row 1
+                          [1, 2, 3, 4],  # 2 is slot 2's EOS (position 1)
+                          [1, 2, 3, 4],
+                          [1, 2, 3, 4]], jnp.int32)
+    eos = jnp.asarray([-1, -1, 2, -1, -1])
+    budget = jnp.asarray([10, 10, 10, 1, 10])
+    live = jnp.asarray([True, True, True, True, False])
+    m, n_acc = accept_blocks(drafts, greedy, eos=eos, budget=budget,
+                             live=live)
+    np.testing.assert_array_equal(np.asarray(n_acc), [3, 1, 3, 3, 3])
+    #        full k+1 --v  v-- prefix+correction
+    np.testing.assert_array_equal(np.asarray(m), [4, 2, 2, 1, 0])
+    #   emit through the EOS, then stop --^  ^-- budget   ^-- dead
+
+
+def test_accept_blocks_eos_as_bonus_token():
+    """EOS arriving as the bonus token still emits the full k+1 block."""
+    drafts = jnp.asarray([[1, 2]], jnp.int32)
+    greedy = jnp.asarray([[1, 2, 7]], jnp.int32)
+    m, n_acc = accept_blocks(drafts, greedy, eos=jnp.asarray([7]),
+                             budget=jnp.asarray([10]),
+                             live=jnp.asarray([True]))
+    assert int(m[0]) == 3 and int(n_acc[0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Shared tiny model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(),
+                              n_layers=2, vocab=97,
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _engine(small_model, **kw):
+    model, params, _ = small_model
+    return ServingEngine(model, params, batch=2, s_max=40, paged=True,
+                         page_size=4, **kw)
+
+
+def _prompts(cfg, seed=0, n=9):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, (2, n)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# verify_paged: one batched step == k+1 sequential decode steps, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_verify_paged_rows_match_sequential_decode(small_model):
+    """The spec loop's correctness backbone: feeding ``V`` tokens through
+    one ``verify_paged`` call yields the same logits rows — and the same
+    final KV page bytes — as ``V`` sequential ``decode_paged`` steps."""
+    model, params, cfg = small_model
+    B, ps, n_pmax, V = 2, 4, 6, 3
+    prompts = _prompts(cfg, seed=1)
+    plen = prompts.shape[1]
+    s_max = n_pmax * ps
+    pool = kvp.make_paged_kv(cfg.n_layers, 1 + B * n_pmax, ps,
+                             cfg.n_kv, cfg.hd, dtype=jnp.float32)
+    tab = jnp.asarray(np.arange(1, 1 + B * n_pmax,
+                                dtype=np.int32).reshape(B, n_pmax))
+    _, cache = model.prefill(params, {"tokens": jnp.asarray(prompts)},
+                             s_max=s_max)
+    pool = kvp.scatter_prefill(pool, cache.k, cache.v, tab, page_size=ps)
+    toks = _prompts(cfg, seed=2, n=V)            # arbitrary fed tokens
+    pos0 = jnp.full((B,), plen, jnp.int32)
+
+    kv_a = jax.tree_util.tree_map(jnp.copy, pool)
+    rows = []
+    for j in range(V):
+        logits_j, kv_a = model.decode_paged(
+            params, jnp.asarray(toks[:, j: j + 1]), kv_a, tab, pos0 + j,
+            page_size=ps, cache_dtype=jnp.float32)
+        rows.append(np.asarray(logits_j))
+
+    kv_b = jax.tree_util.tree_map(jnp.copy, pool)
+    logits_v, kv_b = model.verify_paged(
+        params, jnp.asarray(toks), kv_b, tab, pos0,
+        page_size=ps, cache_dtype=jnp.float32)
+    for j in range(V):
+        np.testing.assert_array_equal(np.asarray(logits_v)[:, j], rows[j],
+                                      err_msg=f"verify row {j}")
+    for la, lb in zip(jax.tree_util.tree_leaves(kv_a),
+                      jax.tree_util.tree_leaves(kv_b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: spec generate == plain generate, bit-identical, one dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ["ngram:4", "rns:3"])
+@pytest.mark.parametrize("fmt", [None, "rns8r"])
+def test_spec_generate_bit_identical(small_model, spec, fmt):
+    """The tentpole pin: both drafters, float and redundant-residue pages
+    — speculative tokens match plain paged decoding exactly, in ONE
+    dispatch, with sane SpecStats."""
+    kw = {} if fmt is None else {"kv_format": fmt}
+    plain = _engine(small_model, **kw)
+    eng = _engine(small_model, spec=spec, **kw)
+    _, _, cfg = small_model
+    prompts = _prompts(cfg)
+    rp = plain.generate({"tokens": prompts}, max_new=12)
+    rs = eng.generate({"tokens": prompts}, max_new=12)
+    np.testing.assert_array_equal(rp.tokens, rs.tokens)
+    assert rs.stats.decode_dispatches == 1
+    sp = eng.stats.spec
+    assert isinstance(sp, SpecStats)
+    assert sp.verify_steps > 0 and sp.blocks > 0
+    assert sp.proposed == sp.blocks * eng.spec_lookahead
+    assert 0 <= sp.accepted <= sp.proposed
+    assert 0.0 <= sp.acceptance_rate <= 1.0
+    # both slots ran to budget: 11 loop tokens each (tok0 is prefill's)
+    assert sp.emitted == 2 * 11
+    assert 1.0 <= sp.mean_accepted_len <= eng.spec_lookahead + 1
+    # per-request snapshot rode out on the result
+    assert rs.stats.spec is not None and rs.stats.spec.emitted == 2 * 11
+
+
+def test_spec_fewer_verify_steps_on_repetitive_stream(small_model):
+    """On a cyclic prompt the n-gram drafter must actually buy steps:
+    fewer target verify steps than tokens emitted (mean accepted > 1)."""
+    plain = _engine(small_model)
+    eng = _engine(small_model, spec="ngram:4")
+    _, _, cfg = small_model
+    prompts = np.tile(np.asarray([[5, 9, 7], [3, 1, 4]], np.int32), (1, 3))
+    rp = plain.generate({"tokens": prompts}, max_new=16)
+    rs = eng.generate({"tokens": prompts}, max_new=16)
+    np.testing.assert_array_equal(rp.tokens, rs.tokens)
+    sp = eng.stats.spec
+    assert sp.verify_steps < rp.steps
+    assert sp.mean_accepted_len > 1.0
+
+
+def test_spec_eos_inside_accepted_block(small_model):
+    """An EOS arriving mid-block truncates the emission just past it and
+    retires the slot; surviving rows match plain decoding up to each
+    row's own EOS."""
+    plain = _engine(small_model)
+    eng = _engine(small_model, spec="ngram:4")
+    _, _, cfg = small_model
+    prompts = _prompts(cfg, seed=3)
+    probe = plain.generate({"tokens": prompts}, max_new=12)
+    eos = probe.tokens[:, 4].astype(np.int64)   # hit ~5 tokens in
+    rp = plain.generate({"tokens": prompts}, max_new=12, eos=eos)
+    rs = eng.generate({"tokens": prompts}, max_new=12, eos=eos)
+    for b in range(2):
+        def cut(row):
+            hits = np.nonzero(row == eos[b])[0]
+            return row[: hits[0] + 1] if hits.size else row
+        np.testing.assert_array_equal(cut(rp.tokens[b]), cut(rs.tokens[b]),
+                                      err_msg=f"row {b}")
+
+
+def test_spec_scheduler_parity(small_model):
+    """Continuous batching over a speculative engine: identical results to
+    the non-speculative scheduler, with per-request SpecStats filled."""
+    _, _, cfg = small_model
+    rng = np.random.default_rng(8)
+    def reqs():
+        return [Request(rid=i,
+                        tokens=rng0.integers(0, cfg.vocab,
+                                             (5 + i,)).astype(np.int32),
+                        max_new=8 + i, eos=None)
+                for i, rng0 in ((i, np.random.default_rng(100 + i))
+                                for i in range(5))]
+    out_p = RequestScheduler(_engine(small_model)).serve(reqs())
+    out_s = RequestScheduler(_engine(small_model, spec="rns:4")).serve(reqs())
+    for a, b in zip(out_p, out_s):
+        np.testing.assert_array_equal(a.result, b.result,
+                                      err_msg=f"rid {a.rid}")
+        sp = b.stats.spec
+        assert sp is not None and sp.verify_steps > 0
+        assert sp.emitted >= len(b.result) - 1    # tok0 comes from prefill
+        assert 0 <= sp.accepted <= sp.proposed
+
+
+def test_spec_knob_validation(small_model):
+    model, params, _ = small_model
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(model, params, batch=2, s_max=40, paged=False,
+                      spec="ngram:4")
+    with pytest.raises(ValueError):
+        SpecConfig.parse("medusa:4")
+    with pytest.raises(ValueError):
+        SpecConfig(drafter="ngram", k=0)
+    assert SpecConfig.parse("rns").k == 4
+    eng = _engine(small_model, spec="ngram:2")
+    with pytest.raises(ValueError, match="greedy"):
+        eng.generate({"tokens": _prompts(small_model[2])}, max_new=4,
+                     temperature=0.7, key=jax.random.PRNGKey(0))

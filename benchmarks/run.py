@@ -9,8 +9,8 @@ from __future__ import annotations
 import sys
 
 from benchmarks import (attention_bench, dnn_speedup, fig1_curves,
-                        flash_bench, kernel_bench, table1_delay,
-                        table2_selection)
+                        flash_bench, kernel_bench, sharding_bench,
+                        table1_delay, table2_selection)
 
 
 def main() -> int:
@@ -53,13 +53,20 @@ def main() -> int:
     if any(c["hlo_scores_materialized"] for c in ab["cells"]):
         failures.append("attention flash lowering materialized scores")
 
+    # sharded residency + channel-parallel decode collective gates
+    # (plane-bytes shrink, one psum per residue matmul, zero C-axis
+    # gathers); writes BENCH_sharding.json
+    if sharding_bench.main([]) != 0:
+        failures.append("sharding bench gates")
+
     print("\n== benchmark summary ==")
     if failures:
         for f in failures:
             print(f"FAIL: {f}")
         return 1
     print("all paper-validation gates passed "
-          "(Table I/II, Fig. 1, DNN speedups, kernel exactness)")
+          "(Table I/II, Fig. 1, DNN speedups, kernel exactness, "
+          "sharding collectives)")
     return 0
 
 

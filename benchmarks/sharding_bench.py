@@ -18,6 +18,24 @@ claim — it is a regression canary for the sharded path's overhead and a
 record of the per-device plane-bytes shrink (which *is* the production
 point: every model axis doubling halves resident plane bytes per chip).
 
+Channel-parallel collective gates
+---------------------------------
+The second section compiles one decode step under the ``channel_shard``
+layout on a (2, 3) mesh (the tensor axis sized to P21's C=3) and walks
+the compiled HLO with ``roofline/hlo_cost.py``:
+
+* the psum schedule must emit **exactly one s32 all-reduce over the
+  tensor axis per residue matmul** (7 per layer + the lm_head), and
+* **zero** integer all-gathers over the tensor axis — the C-axis plane
+  gather the partial-CRT fold replaces.  (FSDP weight gathers over the
+  *data* axis are a different, orthogonal layout choice and remain.)
+
+A "before" baseline — same mesh, planner monkeypatched to decline so the
+planes fall back to the XLA-partitioned gather layout — is compiled for
+the collective-bytes inventory (DESIGN.md §14); it must show the C-axis
+gathers the psum path eliminates.  Both cells' collective bytes land in
+the JSON, and the gates fail the bench (CI bench-smoke + benchmarks/run.py).
+
 Run:  PYTHONPATH=src python benchmarks/sharding_bench.py [--smoke]
 Writes BENCH_sharding[_smoke].json for the CI artifact trail.
 """
@@ -82,6 +100,68 @@ def _decode_ms(model, params, *, ctx, batch, steps, reps) -> float:
     return float(min(trace_and_run() for _ in range(reps))) * 1e3
 
 
+def _coll_profile(hlo: str, tp_size: int) -> dict:
+    """Tensor-axis collective inventory of one compiled decode step.
+
+    Splits the trip-count-aware ``analyze_hlo`` profile by the collective's
+    group size: entries with ``g == tp_size`` ride the tensor (channel)
+    axis.  Integer dtypes (s8/s16/s32/u8) are residue-domain traffic —
+    an integer all-gather over the tensor axis is exactly the C-axis
+    plane gather the psum schedule must not contain.
+    """
+    import re
+
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    prof = analyze_hlo(hlo).as_dict()
+    out = {"coll": prof["coll"], "tp_psum_count": 0, "tp_psum_bytes": 0,
+           "tp_int_gather_count": 0, "tp_int_gather_bytes": 0}
+    for key, nbytes, count in prof["top_coll"]:
+        m = re.match(r"(\S+) \(?(\w+)\[", key)
+        g = re.search(r"g=(\d+)", key)
+        if not m or not g or int(g.group(1)) != tp_size:
+            continue
+        kind, dtype = m.group(1), m.group(2)
+        if kind == "all-reduce" and dtype == "s32":
+            out["tp_psum_count"] += int(count)
+            out["tp_psum_bytes"] += int(nbytes)
+        elif kind == "all-gather" and dtype in ("s8", "s16", "s32", "u8"):
+            out["tp_int_gather_count"] += int(count)
+            out["tp_int_gather_bytes"] += int(nbytes)
+    return out
+
+
+def _channel_cell(cfg, model, raw, *, batch: int, gather_baseline: bool):
+    """Compile one channel_shard decode step; return its collective profile.
+
+    ``gather_baseline=True`` monkeypatches the planner to decline every
+    plan, so the C-split planes fall back to the XLA-partitioned layout
+    (the pre-psum state) — the "before" row of the collective inventory.
+    The decode is lowered through a fresh wrapper function each call:
+    ``jax.jit(model.decode)`` would hit jax's persistent lowering cache
+    (bound methods hash by instance) and silently reuse the *other*
+    variant's HLO.
+    """
+    from repro.numerics import runners
+
+    mesh = make_test_mesh((2, 3))
+    ctx_c = make_ctx(mesh, channel_shard=True)
+    orig_plan = runners.tp_shard_plan
+    if gather_baseline:
+        runners.tp_shard_plan = lambda *a, **k: None
+    try:
+        with shard_ctx(ctx_c):
+            params = model.prepare_params(raw)
+            cache = model.init_cache(batch, 16)
+            tok = jnp.zeros((batch, 1), jnp.int32)
+            compiled = jax.jit(
+                lambda p, t, c, pos: model.decode(p, t, c, pos)).lower(
+                    params, tok, cache, jnp.int32(1)).compile()
+    finally:
+        runners.tp_shard_plan = orig_plan
+    return _coll_profile(compiled.as_text(), mesh.shape["model"])
+
+
 def run(*, smoke: bool = False, verbose: bool = True) -> dict:
     if smoke:
         dims = dict(d_model=64, d_ff=128, n_layers=1, steps=8, reps=3)
@@ -107,6 +187,13 @@ def run(*, smoke: bool = False, verbose: bool = True) -> dict:
                         steps=dims["steps"], reps=dims["reps"])
     ms_sh = _decode_ms(model, params_sh, ctx=ctx, batch=B,
                        steps=dims["steps"], reps=dims["reps"])
+    # channel-parallel psum schedule on the (2, 3) mesh: collective
+    # inventory of one compiled decode step, before (gather layout) and
+    # after (partial-CRT psum fold).  7 residue matmuls per layer
+    # (wq/wk/wv/wo + gate/up/down) + the lm_head, one psum each.
+    Bc = 6                        # divisible by the (2, 3) mesh's data axis
+    after = _channel_cell(cfg, model, raw, batch=Bc, gather_baseline=False)
+    before = _channel_cell(cfg, model, raw, batch=Bc, gather_baseline=True)
     out = {
         "smoke": smoke,
         "mesh": "2x2 forced-host-device",
@@ -118,6 +205,13 @@ def run(*, smoke: bool = False, verbose: bool = True) -> dict:
         "ratio_sharded_over_replicated": ms_sh / ms_rep,
         "plane_bytes_dev_replicated": _plane_bytes_dev(params_rep),
         "plane_bytes_dev_sharded": _plane_bytes_dev(params_sh),
+        "channel": {
+            "mesh": "2x3 forced-host-device (model axis = P21 C=3)",
+            "batch": Bc,
+            "expected_psums": dims["n_layers"] * 7 + 1,
+            "after_psum": after,
+            "before_gather_layout": before,
+        },
     }
     if verbose:
         print(f"[sharding_bench] rns decode (B={B}, L={dims['n_layers']}, "
@@ -128,6 +222,12 @@ def run(*, smoke: bool = False, verbose: bool = True) -> dict:
         print(f"  sharded planes    : {ms_sh:8.2f} ms/token "
               f"({out['plane_bytes_dev_sharded']} B/dev)")
         print(f"  ratio             : {out['ratio_sharded_over_replicated']:.3f}x")
+        print(f"[sharding_bench] channel_shard decode step (2x3 mesh): "
+              f"psums={after['tp_psum_count']} "
+              f"({after['tp_psum_bytes']} B), C-axis int gathers="
+              f"{after['tp_int_gather_count']} "
+              f"({after['tp_int_gather_bytes']} B); gather-layout baseline "
+              f"carried {before['tp_int_gather_bytes']} B of C-axis gathers")
     return out
 
 
@@ -144,11 +244,33 @@ def main(argv=None):
         json.dump(out, f, indent=2)
     print(f"[sharding_bench] wrote {path}")
     # gate: the sharded prepared tree must actually be sharded
+    rc = 0
     if out["plane_bytes_dev_sharded"] >= out["plane_bytes_dev_replicated"]:
         print("[sharding_bench] FAIL: sharded prepared tree is not smaller "
               "per device than the replicated one")
-        return 1
-    return 0
+        rc = 1
+    # gates: the channel_shard decode step carries no C-axis plane gather
+    # and exactly one psum per residue matmul; the gather-layout baseline
+    # must still show the traffic the psum fold removes (otherwise the
+    # "before" row of the inventory is vacuous).
+    ch = out["channel"]
+    after, before = ch["after_psum"], ch["before_gather_layout"]
+    if after["tp_int_gather_bytes"] != 0:
+        print(f"[sharding_bench] FAIL: channel_shard decode step carries "
+              f"{after['tp_int_gather_bytes']} B of integer all-gathers over "
+              "the tensor axis (C-axis plane gather not eliminated)")
+        rc = 1
+    if after["tp_psum_count"] != ch["expected_psums"]:
+        print(f"[sharding_bench] FAIL: channel_shard decode step has "
+              f"{after['tp_psum_count']} tensor-axis psums, expected "
+              f"{ch['expected_psums']} (one per residue matmul + lm_head)")
+        rc = 1
+    if before["tp_int_gather_bytes"] <= 0:
+        print("[sharding_bench] FAIL: gather-layout baseline shows no "
+              "C-axis integer gathers — the before/after inventory is "
+              "not measuring anything")
+        rc = 1
+    return rc
 
 
 if __name__ == "__main__":

@@ -604,6 +604,145 @@ class ModuliSet:
         fixed = self.center(jnp.stack(rows, axis=0))
         return fixed, detected, corrected
 
+    # ---- partial CRT: per-channel value-domain projections ------------------
+    #
+    # The C-split (channel_shard) decode path.  MRC is inherently sequential
+    # across channels (digit j needs digits < j), so a C-split device cannot
+    # contribute an MRC digit locally.  CRT can: each information channel's
+    # projection  t_c * (M / m_c)  with  t_c = r_c * inv(M/m_c, m_c) mod m_c
+    # is a *local* value-domain partial, the channel sum satisfies
+    # S = X_canonical (mod M), and one psum + one final mod M replaces the
+    # cross-channel plane gather.  The int32 overflow that ruled CRT out for
+    # the *general* reverse conversion (module docstring) is bounded here:
+    # every per-term product  r_c * inv_c  stays under max(m)^2 and the
+    # channel sum under num_info * (M - 1), so the path is gated on
+    # :attr:`supports_partial_decode` and the wide sets keep the MRC path.
+
+    @functools.cached_property
+    def supports_partial_decode(self) -> bool:
+        """Whether the int32 partial-CRT (psum) decode path is exact.
+
+        Needs every per-channel product ``r * inv`` (< max(m)^2) and the
+        summed projections (< num_info * (M - 1)) inside int32.  False for
+        the wide sets (P33/P64/CRT40) — those require the sequential MRC
+        path and fall back to the gathered decode under ``channel_shard``.
+        """
+        return (max(self.moduli) <= 46340
+                and self.num_info * (self.M - 1) < (1 << 31))
+
+    @functools.cached_property
+    def _crt_tables(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-channel CRT projection tables ``(B, inv)``, both ``(C,)`` int32.
+
+        ``B[c] = M / m_c`` and ``inv[c] = (M / m_c)^-1 mod m_c`` for the
+        information channels; redundant (witness) channels get zero rows so
+        their projections vanish from the value sum by construction.
+        """
+        C = self.num_channels
+        B = np.zeros((C,), np.int64)
+        inv = np.zeros((C,), np.int64)
+        for c, m in enumerate(self.info_moduli):
+            B[c] = self.M // m
+            inv[c] = modinv((self.M // m) % m, m)
+        return B.astype(np.int32), inv.astype(np.int32)
+
+    def partial_decode(self, planes: jax.Array,
+                       channel_ids: jax.Array) -> jax.Array:
+        """Local value-domain CRT partial of a C-split residue slice.
+
+        ``planes``: ``(C_loc, ...)`` residues of the locally resident
+        channels (any int32 representative of the residue class — centered,
+        canonical, or lazy kernel accumulations all work); ``channel_ids``:
+        ``(C_loc,)`` int32 *global* channel indices (may be traced, e.g.
+        derived from ``axis_index`` inside a ``shard_map`` body).  Returns
+        the sum over local channels of ``(r_c * inv_c mod m_c) * (M/m_c)``
+        — witness channels contribute zero.  Summing these partials over
+        all shards and folding with :meth:`fold_partials` equals
+        :meth:`from_residues` bit-for-bit (gated on
+        :attr:`supports_partial_decode`).
+        """
+        if not self.supports_partial_decode:
+            raise ValueError(
+                f"moduli set {self.moduli} exceeds the int32 partial-CRT "
+                "bound (num_info * (M-1) must fit int32); use the gathered "
+                "MRC path (from_residues)")
+        B_tab, inv_tab = self._crt_tables
+        cid = channel_ids.astype(jnp.int32)
+        bshape = (-1,) + (1,) * (planes.ndim - 1)
+        m = jnp.take(jnp.asarray(self.moduli, jnp.int32), cid).reshape(bshape)
+        B = jnp.take(jnp.asarray(B_tab), cid).reshape(bshape)
+        inv = jnp.take(jnp.asarray(inv_tab), cid).reshape(bshape)
+        r = jnp.remainder(planes.astype(jnp.int32), m)   # canonical [0, m)
+        t = jnp.remainder(r * inv, m)                    # r*inv < max(m)^2
+        return jnp.sum(t * B, axis=0)                    # each term < M
+
+    def fold_partials(self, partial_sum: jax.Array) -> jax.Array:
+        """Fold psum-ed CRT partials to the signed decode: one final mod M.
+
+        ``partial_sum`` is the across-shard sum of :meth:`partial_decode`
+        outputs; ``partial_sum mod M`` is the canonical value and the
+        centering threshold matches :meth:`from_residues`' lexicographic
+        sign test, so the result is bit-identical to the gathered decode.
+        """
+        M = jnp.int32(self.M)
+        x = jnp.remainder(partial_sum, M)
+        return jnp.where(x > jnp.int32(self.half_range), x - M, x)
+
+    def partial_witnesses(self, planes: jax.Array,
+                          channel_ids: jax.Array) -> jax.Array:
+        """Local contribution to the ``(r, ...)`` canonical witness planes.
+
+        Each redundant channel's canonical residues where that channel is
+        locally resident, zero elsewhere — so a psum across shards
+        assembles the full witness planes even when info and witness moduli
+        live on different devices.  Plain-RNS sets return a ``(0, ...)``
+        stack.
+        """
+        cid = channel_ids.astype(jnp.int32)
+        bshape = (-1,) + (1,) * (planes.ndim - 1)
+        p32 = planes.astype(jnp.int32)
+        outs = []
+        for j, m in enumerate(self.redundant_moduli):
+            hit = (cid == self.num_info + j).reshape(bshape)
+            outs.append(jnp.sum(
+                jnp.where(hit, jnp.remainder(p32, m), 0), axis=0))
+        if not outs:
+            return jnp.zeros((0,) + planes.shape[1:], jnp.int32)
+        return jnp.stack(outs, axis=0)
+
+    def corrected_fold(self, partial_sum: jax.Array,
+                       witnesses: jax.Array) -> jax.Array:
+        """Redundancy-aware :meth:`fold_partials` — the psum-path sibling of
+        :meth:`corrected_decode`.
+
+        ``witnesses``: psum-assembled ``(r, ...)`` canonical witness
+        residues (:meth:`partial_witnesses`).  The syndromes compare them
+        against the folded info decode; an information-channel fault (every
+        syndrome nonzero, ``redundant >= 2``) re-synthesizes the full
+        canonical residue vector from ``(x, witnesses)`` — valid because
+        the CRT decode satisfies ``x = r_i (mod m_i)`` for every stored
+        info residue, corrupted or not — and reuses the leave-one-out
+        projection scan under a ``lax.cond``.  Bit-identical to
+        :meth:`corrected_decode` on the gathered planes.
+        """
+        x = self.fold_partials(partial_sum)
+        if self.redundant < 2:
+            return x
+        nz = [jnp.remainder(witnesses[j] - jnp.remainder(x, m), m) != 0
+              for j, m in enumerate(self.redundant_moduli)]
+        info_fault = functools.reduce(jnp.logical_and, nz)
+
+        def _fix(args):
+            x, w = args
+            res = jnp.stack(
+                [jnp.remainder(x, m) for m in self.info_moduli]
+                + [w[j] for j in range(self.redundant)], axis=0)
+            best, n_legit = self._project_info(res)
+            return jnp.where(info_fault & (n_legit == 1), best, x)
+
+        return jax.lax.cond(jnp.any(info_fault), _fix,
+                            lambda args: args[0], (x, witnesses))
+
     # ---- packed 2-channel storage format -----------------------------------
 
     def packed(self) -> "PackedFormat":

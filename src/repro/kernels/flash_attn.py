@@ -40,6 +40,16 @@ tile is sanitized against its true extent before it enters the accumulation.
 Exactness: this is *exact* attention (same math as the reference, different
 summation order); tests sweep GQA ratios / causal / ragged ``kv_len``
 against ``ref.py``.
+
+Mesh contract
+-------------
+The kernels are shard_map-safe: they reference no mesh axes, so the
+dispatchers in ``numerics/attention.py`` may run them *inside* a shard_map
+body (the ``channel_shard`` decode schedule does — batch over dp, heads and
+KV replicated, zero collectives) and the per-shard body is byte-for-byte
+the single-device kernel.  ``compat.resolve_interpret`` keys on the
+platform, not the mesh, so interpret-mode auto-selection is unchanged
+inside a mapped body.
 """
 from __future__ import annotations
 

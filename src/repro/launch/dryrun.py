@@ -38,7 +38,7 @@ def _cell_filename(arch, shape, mesh_name, system, tag):
     return f"{arch}_{shape}_{mesh_name}_{system}{suffix}.json"
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+def run_cell(arch: str, shape_name: str, mesh_name: str = "single", *,
              system: str = "bns", seq_shard: bool = False,
              channel_shard: bool = False, reduced: bool = False,
              out_dir: str = "experiments/dryrun", tag: str = "",
@@ -62,8 +62,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     if reduced:
         cfg = cfg.reduced()  # CI smoke: tiny dims, same mesh + rule set
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    mesh_name = "multi" if multi_pod else "single"
+    if mesh_name == "channel":
+        # channel-parallel pod slice: the model axis sized to the moduli
+        # channel count (C=3 for the serving default P21 set) so the
+        # C-split psum schedule engages instead of falling back
+        from repro.core.moduli import P21
+        mesh = make_production_mesh(channel=P21.num_channels)
+    else:
+        mesh = make_production_mesh(multi_pod=mesh_name == "multi")
     ctx = make_ctx(mesh, seq_shard=seq_shard, channel_shard=channel_shard)
     # dry-run lowers on CPU for cost analysis: pin the pure-jnp ref
     # oracle (same flop/byte structure as the kernel) rather than letting
@@ -238,7 +244,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch")
     ap.add_argument("--shape")
-    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--mesh", choices=("single", "multi", "channel"),
+                    default="single",
+                    help="'channel' = single-pod mesh with the model axis "
+                         "sized to the moduli channel count (pair with "
+                         "--channel-shard for the psum decode schedule)")
     ap.add_argument("--system", "--backend", dest="system", default="bns",
                     choices=("bns", "rns", "sdrns"),
                     help="number system (--backend is a deprecated alias); "
@@ -298,7 +308,7 @@ def main(argv=None):
 
     assert args.arch and args.shape, "--arch and --shape required"
     try:
-        rec = run_cell(args.arch, args.shape, args.mesh == "multi",
+        rec = run_cell(args.arch, args.shape, args.mesh,
                        system=args.system, seq_shard=args.seq_shard,
                        channel_shard=args.channel_shard,
                        reduced=args.reduced,

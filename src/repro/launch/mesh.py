@@ -20,9 +20,28 @@ from repro.parallel.sharding import ShardCtx
 __all__ = ["make_production_mesh", "make_ctx", "make_test_mesh"]
 
 
-def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False,
+                         channel: int | None = None) -> Mesh:
+    """The pod-slice mesh; ``channel=C`` reshapes for channel-parallel runs.
+
+    The default (16, 16) model axis never divides a moduli channel count
+    (C is 3/5/6 for the serving sets), so a ``channel_shard`` run on it
+    would always fall back to the gathered layout.  ``channel=C`` sizes
+    the model axis to exactly C and gives the rest of the pod to data
+    parallelism: ``(256 // C, C)`` — e.g. (85, 3) = 255 of the pod's 256
+    chips for the P21 set.  Channel meshes are single-pod (the psum fold
+    wants the tensor axis inside one ICI domain).
+    """
+    if channel is not None:
+        if multi_pod:
+            raise ValueError("channel-parallel meshes are single-pod")
+        if channel < 2 or channel > 256:
+            raise ValueError(f"channel axis must be in [2, 256], got {channel}")
+        shape: tuple[int, ...] = (256 // channel, channel)
+        axes: tuple[str, ...] = ("data", "model")
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
     if len(jax.devices()) < n:
         raise RuntimeError(

@@ -92,11 +92,18 @@ def set_attn_impl(impl: str | None) -> str | None:
 def _flash_backend(B: int, H: int, Sq: int, T: int) -> str | None:
     """Registry backend for the flash path, or None -> materialized path.
 
-    Mesh traces always materialize (their ``constrain`` annotations encode
-    the TP/split-KV layouts); "ref"/"cost" impls mean materialized; auto
-    interpret dispatch respects :data:`_INTERPRET_GRID_CAP`.
+    Column/TP mesh traces materialize (their ``constrain`` annotations
+    encode the TP/split-KV layouts).  The ``channel_shard`` layout keeps
+    the flash path: attention is float-domain and replicated over the
+    tensor axes there, and the ``numerics/attention.py`` dispatchers wrap
+    the kernels in the same shard_map mesh context as the residue matmuls
+    — so a whole residue-resident decode step lowers under one mesh with
+    only the partial-CRT psums as collectives.  "ref"/"cost" impls mean
+    materialized; auto interpret dispatch respects
+    :data:`_INTERPRET_GRID_CAP`.
     """
-    if get_shard_ctx() is not None:
+    ctx = get_shard_ctx()
+    if ctx is not None and not ctx.channel_shard:
         return None
     backend = resolve_backend(_IMPL_OVERRIDE)
     if backend in ("ref", "cost"):

@@ -240,7 +240,7 @@ def matmul(a: jax.Array, t: ResidueTensor, *, max_abs_a: int | None = None,
             f"{t.shape}; use numerics.einsum for stacked operands")
     if a.ndim != 2:
         raise ValueError(f"matmul takes a 2-D activation, got {a.shape}")
-    shard = runners.tp_shard_plan(a.shape[0], t.shape[-1])
+    shard = runners.tp_shard_plan(a.shape[0], t.shape[-1], mset=t.mset)
     return _matmul_jit(a, t, max_abs_a, backend, shard, verify)
 
 
@@ -272,8 +272,6 @@ def _parse_stacked(subscripts: str) -> int:
     return len(stack)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("subscripts", "max_abs_a", "backend"))
 def einsum(subscripts: str, a: jax.Array, t: ResidueTensor, *,
            max_abs_a: int | None = None,
            backend: str | None = None) -> jax.Array:
@@ -285,6 +283,12 @@ def einsum(subscripts: str, a: jax.Array, t: ResidueTensor, *,
     weights.  Each stack slice runs the same shared runner ``matmul`` uses
     (scanned over the stack), so digit outputs equal per-slice ``matmul``
     bit-for-bit; decode-shaped slices ride the matvec schedule.
+
+    Like :func:`matmul`, the shard plan is resolved *here* — outside the
+    jitted body, from the installed ShardCtx plus the tensor's moduli
+    metadata — and passed down as a static: each scanned slice runs the
+    same per-shard schedule (column-split kernels, or the channel-split
+    partial-CRT psum fold under ``channel_shard``).
     """
     if not isinstance(t, ResidueTensor):
         raise TypeError(
@@ -298,8 +302,20 @@ def einsum(subscripts: str, a: jax.Array, t: ResidueTensor, *,
         raise ValueError(
             f"encoded operand stack {t.stack_shape} does not match spec "
             f"{subscripts!r} (want rank {stack_nd})")
+    shard = runners.tp_shard_plan(a.shape[-2], t.shape[-1], mset=t.mset)
+    return _einsum_jit(subscripts, a, t, max_abs_a=max_abs_a,
+                       backend=backend, shard=shard)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("subscripts", "max_abs_a", "backend",
+                                    "shard"))
+def _einsum_jit(subscripts: str, a: jax.Array, t: ResidueTensor, *,
+                max_abs_a: int | None, backend: str | None,
+                shard) -> jax.Array:
+    stack_nd = _parse_stacked(subscripts)
     if stack_nd == 0:
-        return _matmul_planes(a, t, max_abs_a, backend)
+        return _matmul_planes(a, t, max_abs_a, backend, shard)
     stack_shape = a.shape[:stack_nd]
     if tuple(t.stack_shape) != tuple(stack_shape):
         raise ValueError(
@@ -319,7 +335,7 @@ def einsum(subscripts: str, a: jax.Array, t: ResidueTensor, *,
         t_i = ResidueTensor(planes=p_i, scale=None, mset=t.mset,
                             layout=t.layout, qbits=t.qbits,
                             max_abs=t.max_abs)
-        return carry, _matmul_planes(a_i, t_i, max_abs_a, backend)
+        return carry, _matmul_planes(a_i, t_i, max_abs_a, backend, shard)
 
     _, outs = jax.lax.scan(body, None, (a_r, p_r))
     return outs.reshape(*stack_shape, *outs.shape[1:])

@@ -25,7 +25,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.kernels import compat
 from repro.kernels.flash_attn import (
     DEFAULT_BLOCKS,
     flash_attention_pallas,
@@ -195,6 +197,32 @@ register_impl("flash_paged_decode", "cost", _paged_ref_impl)
 # ---------------------------------------------------------------------------
 
 
+def _channel_ctx_plan(B: int):
+    """``(mesh, dp_names)`` under a ``channel_shard`` ShardCtx, else None.
+
+    Under the channel-parallel layout the residue matmuls run as shard_map
+    bodies (``runners._channel_mapped``); attention is float-domain and
+    carries no moduli channels, so the dispatchers wrap the flash kernels
+    in the *same* mesh context — batch over ``dp``, everything else
+    replicated over the tensor axes.  Each shard runs the unchanged kernel
+    body with **zero collectives** (the output is already replicated over
+    tp), so a whole residue-resident decode step lowers under one mesh
+    and the only cross-device traffic left is the partial-CRT psum per
+    residue matmul.  Bit-identical: the kernel body per shard is the
+    single-device body.  ``dp_names`` is ``()`` when ``B`` is not
+    divisible (the batch then rides replicated too).
+    """
+    from repro.parallel.sharding import get_shard_ctx
+
+    ctx = get_shard_ctx()
+    if ctx is None or not ctx.channel_shard:
+        return None
+    dp = ctx.resolve("dp")
+    if not dp or B % ctx.axis_size(dp):
+        dp = ()
+    return (ctx.mesh, dp)
+
+
 def flash_attention(
     q: jax.Array,
     k: jax.Array,
@@ -219,7 +247,20 @@ def flash_attention(
     if kv_len is not None:
         kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
     impl = get_impl("flash_attention", resolve_backend(backend))
-    return impl(q, k, v, kv_len, causal, bq, bk)
+    plan = _channel_ctx_plan(B)
+    if plan is None:
+        return impl(q, k, v, kv_len, causal, bq, bk)
+    mesh, dp = plan
+    bspec = P(dp or None, None, None, None)
+    args = (q, k, v) + (() if kv_len is None else (kv_len,))
+    in_specs = (bspec, bspec, bspec) + (
+        () if kv_len is None else (P(dp or None),))
+
+    def body(q_, k_, v_, *rest):
+        return impl(q_, k_, v_, rest[0] if rest else None, causal, bq, bk)
+
+    return compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=bspec, check_vma=False)(*args)
 
 
 def flash_decode(
@@ -241,7 +282,19 @@ def flash_decode(
     bk = bk or _DECODE_BLOCK_OVERRIDE or pick_block(T, DEFAULT_BLOCKS[1])
     kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
     impl = get_impl("flash_decode", resolve_backend(backend))
-    return impl(q, k, v, kv_len, bk)
+    plan = _channel_ctx_plan(B)
+    if plan is None:
+        return impl(q, k, v, kv_len, bk)
+    mesh, dp = plan
+    kvspec = P(dp or None, None, None, None)
+    qspec = P(dp or None, None, None)
+
+    def body(q_, k_, v_, len_):
+        return impl(q_, k_, v_, len_, bk)
+
+    return compat.shard_map(
+        body, mesh=mesh, in_specs=(qspec, kvspec, kvspec, P(dp or None)),
+        out_specs=qspec, check_vma=False)(q, k, v, kv_len)
 
 
 def paged_decode(

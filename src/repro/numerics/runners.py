@@ -22,21 +22,38 @@ Kernel implementations are registered here against the backend registry
 Mesh composition
 ----------------
 :func:`tp_shard_plan` turns the installed
-:class:`~repro.parallel.sharding.ShardCtx` into a *static* shard-map plan
-``(mesh, dp_names, tp_names)``; with a plan, :func:`rns_run` /
-:func:`sdrns_run` wrap their whole body in ``kernels/compat.shard_map`` —
-activations row-sharded over ``dp``, pre-encoded planes column-sharded
-over ``tp`` on the output dim, output ``(dp, tp)``-sharded.  Column
-slices of the integer matmul are independent, so each shard runs the
-unchanged per-shard Pallas kernel with **zero collectives** and the
-result is bit-identical to the single-device path.  The plan is passed
-down as a jit static (``numerics/api.py``), never read inside a traced
-body — a context installed after a trace was cached can therefore never
-be silently ignored.
+:class:`~repro.parallel.sharding.ShardCtx` into a *static*, tagged
+shard-map plan; with a plan, :func:`rns_run` / :func:`sdrns_run` wrap
+their whole body in ``kernels/compat.shard_map``.  Two schedules:
+
+* ``("col", ...)`` — the default layout: activations row-sharded over
+  ``dp``, pre-encoded planes column-sharded over ``tp`` on the output
+  dim, output ``(dp, tp)``-sharded.  Column slices of the integer matmul
+  are independent, so each shard runs the unchanged per-shard Pallas
+  kernel with **zero collectives** and the result is bit-identical to
+  the single-device path.
+* ``("chan", ...)`` — the ``channel_shard`` layout: planes split over
+  ``tp`` on the moduli-channel C axis.  Each shard matmuls only its
+  locally resident channels, projects the per-channel outputs to
+  value-domain CRT partials (``ModuliSet.partial_decode``) and the
+  shards fold with **one** ``psum`` + one final ``mod M``
+  (``fold_partials`` / redundancy-aware ``corrected_fold``) — no device
+  ever materializes the full channel axis, and the decode is
+  bit-identical to the gathered single-device path.
+
+The plan is passed down as a jit static (``numerics/api.py``), never
+read inside a traced body — a context installed after a trace was
+cached can therefore never be silently ignored.  When ``channel_shard``
+is requested but the psum path cannot engage (C not divisible by the
+tensor axis, or a set past the int32 partial-CRT bound), the planner
+warns and counts the event (:func:`fallback_gather_count` — surfaced as
+``EngineStats.fallback_gathers``) instead of silently running the slow
+replicated/gathered layout.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +81,7 @@ __all__ = [
     "sdrns_run",
     "sd_add_run",
     "tp_shard_plan",
+    "fallback_gather_count",
 ]
 
 
@@ -71,42 +89,116 @@ __all__ = [
 # Mesh composition: static shard-map plans for the matmul/matvec runners.
 # ---------------------------------------------------------------------------
 
+# Times the channel_shard layout was requested but the partial-CRT psum
+# path could not engage (the plan fell back to the replicated/gathered
+# layout).  Counted per *plan resolution* — the planner runs outside jit on
+# every public matmul/einsum call, so a mis-sharded mesh is visible instead
+# of quietly slow.  Surfaced as ``EngineStats.fallback_gathers``.
+_FALLBACK_GATHERS = 0
 
-def tp_shard_plan(M: int, N: int):
+
+def fallback_gather_count() -> int:
+    """Process-lifetime count of channel_shard psum-path fallbacks."""
+    return _FALLBACK_GATHERS
+
+
+def _fallback(reason: str) -> None:
+    global _FALLBACK_GATHERS
+    _FALLBACK_GATHERS += 1
+    warnings.warn(
+        "channel_shard layout fell back to the replicated/gathered decode "
+        f"path: {reason}", UserWarning, stacklevel=4)
+
+
+def tp_shard_plan(M: int, N: int, *, mset: ModuliSet | None = None):
     """Shard-map plan from the installed ShardCtx, or ``None``.
 
-    Returns ``(mesh, dp_names, tp_names)``, all hashable — the plan is a
-    jit *static*, so traces key on it.  ``None`` (single-device path)
-    when: no context is installed; the tp axes do not divide ``N``; or the
-    ``channel_shard`` layout is active — C-split planes need cross-channel
-    reconstruction, which the XLA-partitioned path handles (it inserts
-    the channel all-gather), so they do not take the shard_map fast path.
-    ``dp_names`` is ``()`` when ``M`` is not divisible (activation rows
-    then run replicated inside the map).
+    Plans are tagged hashable tuples — jit *statics*, so traces key on
+    them:
+
+    * ``("col", mesh, dp_names, tp_names)`` — default layout: plane
+      columns over ``tp`` on the output dim (needs ``N % tp_size == 0``).
+    * ``("chan", mesh, dp_names, tp_names)`` — ``channel_shard`` layout:
+      moduli channels over ``tp``; the runner takes the partial-CRT psum
+      schedule.  Needs the moduli metadata (``mset=``), ``C % tp_size ==
+      0`` and :attr:`ModuliSet.supports_partial_decode`; when any of
+      those fail the planner *warns* and bumps
+      :func:`fallback_gather_count` (the layout silently degrading to a
+      cross-channel gather is exactly the failure mode this PR removes).
+
+    ``None`` = single-device path.  ``dp_names`` is ``()`` when ``M`` is
+    not divisible (activation rows then run replicated inside the map).
     """
     from repro.parallel.sharding import get_shard_ctx
 
     ctx = get_shard_ctx()
-    if ctx is None or ctx.channel_shard:
+    if ctx is None:
         return None
     tp = ctx.resolve("tp")
-    if not tp or ctx.axis_size(tp) <= 1 or N % ctx.axis_size(tp):
+    tp_size = ctx.axis_size(tp) if tp else 1
+    if not tp or tp_size <= 1:
         return None
     dp = ctx.resolve("dp")
     if not dp or M % ctx.axis_size(dp):
         dp = ()
-    return (ctx.mesh, dp, tp)
+    if ctx.channel_shard:
+        if mset is None:
+            _fallback("no moduli metadata reached the planner (legacy "
+                      "entry point passes no mset)")
+            return None
+        if mset.num_channels % tp_size:
+            _fallback(f"C={mset.num_channels} channels do not divide the "
+                      f"tensor axis ({tp_size} devices)")
+            return None
+        if not mset.supports_partial_decode:
+            _fallback(f"moduli set {mset.moduli} exceeds the int32 "
+                      "partial-CRT bound (sequential MRC decode required)")
+            return None
+        return ("chan", ctx.mesh, dp, tp)
+    if N % tp_size:
+        return None
+    return ("col", ctx.mesh, dp, tp)
 
 
 def _shard_mapped(body, shard, *, sd_planes: bool):
-    """Wrap a 2-operand runner body in the plan's shard_map."""
-    mesh, dp, tp = shard
+    """Wrap a 2-operand runner body in a ``("col", ...)`` plan's shard_map."""
+    _, mesh, dp, tp = shard
     b_spec = P(None, None, tp, None) if sd_planes else P(None, None, tp)
     return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(dp or None, None), b_spec),
         out_specs=P(dp or None, tp),
         check_vma=False)
+
+
+def _channel_mapped(body, shard, *, sd_planes: bool):
+    """Wrap a channel-parallel body in a ``("chan", ...)`` plan's shard_map.
+
+    Planes sharded over ``tp`` on the leading C axis, output replicated
+    over ``tp`` (the body's psum makes every shard's fold identical).
+    """
+    _, mesh, dp, tp = shard
+    tp_entry = tp if len(tp) > 1 else tp[0]
+    b_spec = (P(tp_entry, None, None, None) if sd_planes
+              else P(tp_entry, None, None))
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp or None, None), b_spec),
+        out_specs=P(dp or None, None),
+        check_vma=False)
+
+
+def _channel_ids(tp, C_loc: int) -> jax.Array:
+    """Global channel ids of this shard's C-slice (inside a shard_map body).
+
+    The linearized shard index over the (possibly tuple) tp axes follows
+    PartitionSpec's major-to-minor tuple-axis split order, so block ``i``
+    of the C axis lands on linear index ``i``.
+    """
+    idx = jax.lax.axis_index(tp[0])
+    for name in tp[1:]:
+        idx = idx * compat.axis_size(name) + jax.lax.axis_index(name)
+    return idx * C_loc + jnp.arange(C_loc, dtype=jnp.int32)
 
 
 def _round_up(v: int, k: int) -> int:
@@ -160,6 +252,35 @@ def _rns_matmul_ref_impl(a, b, mset, bm, bn, bk):
 
 
 register_impl("rns_matmul", "ref", _rns_matmul_ref_impl)
+
+
+# Array-parameterized sibling of "rns_matmul": the moduli arrive as a
+# runtime (C_loc,) operand instead of static ModuliSet metadata.  Needed by
+# the channel-parallel shard_map body, where the locally resident channels
+# are selected by a *traced* ``axis_index`` — the Pallas kernel already
+# takes its moduli as a runtime operand, so pallas/interpret are the same
+# kernel; ref/cost mirror its lazy-reduction semantics (one int32
+# accumulation, one centered reduction) against the moduli array.
+register_impl(
+    "rns_matmul_planes", "pallas",
+    lambda a, b, moduli, bm, bn, bk: rns_matmul_pallas(
+        a, b, moduli, bm=bm, bn=bn, bk=bk, interpret=False))
+register_impl(
+    "rns_matmul_planes", "interpret",
+    lambda a, b, moduli, bm, bn, bk: rns_matmul_pallas(
+        a, b, moduli, bm=bm, bn=bn, bk=bk, interpret=True))
+
+
+def _rns_matmul_planes_ref_impl(a, b, moduli, bm, bn, bk):
+    acc = jnp.einsum("cmk,ckn->cmn",
+                     a.astype(jnp.int32), b.astype(jnp.int32))
+    m = moduli.reshape(-1, 1, 1)
+    r = jnp.remainder(acc, m)
+    return jnp.where(r > m // 2, r - m, r)
+
+
+register_impl("rns_matmul_planes", "ref", _rns_matmul_planes_ref_impl)
+register_impl("rns_matmul_planes", "cost", _rns_matmul_planes_ref_impl)
 
 
 def _res_dtype(mset: ModuliSet):
@@ -225,6 +346,12 @@ def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend, shard=None,
     info-channel decode (the bench baseline for the check's overhead).
     """
     if shard is not None:
+        if shard[0] == "chan":
+            body = functools.partial(
+                _rns_channel_body, mset=mset, max_abs_a=max_abs_a,
+                max_abs_b=max_abs_b, backend=backend, verify=verify,
+                tp=shard[3])
+            return _channel_mapped(body, shard, sd_planes=False)(a, b_res)
         body = functools.partial(rns_run, mset=mset, max_abs_a=max_abs_a,
                                  max_abs_b=max_abs_b, backend=backend,
                                  verify=verify)
@@ -259,6 +386,72 @@ def rns_run(a, b_res, *, mset, max_abs_a, max_abs_b, backend, shard=None,
         b_p = jnp.zeros((C, Kp, Np), res_dtype).at[:, : hi - lo, :N].set(b_s)
         out_res = impl(a_p, b_p, mset, bm, bn, bk)
         total = total + decode(out_res[:, :M, :N])
+    return total
+
+
+def _rns_channel_body(a, b_res, *, mset, max_abs_a, max_abs_b, backend,
+                      verify, tp):
+    """Channel-parallel rns schedule (inside a ``("chan", ...)`` shard_map).
+
+    ``b_res``: the *local* ``(C_loc, K, N)`` plane slice.  Each shard
+    matmuls only its resident channels, projects the per-channel outputs
+    to value-domain CRT partials (witness channels contribute their
+    canonical residues via one-hot rows instead), and all per-segment rows
+    cross the mesh in **one** stacked ``psum``.  The fold
+    (:meth:`ModuliSet.fold_partials` / redundancy-aware
+    :meth:`~ModuliSet.corrected_fold`) runs per segment — segment partials
+    are separate exact products, so folding their sum would be wrong —
+    and is bit-identical to the gathered single-device decode.
+    """
+    impl = get_impl("rns_matmul_planes", backend)
+    if verify is None:
+        verify = mset.redundant >= 2
+    witness = bool(verify) and mset.redundant >= 2
+    M, K = a.shape
+    C_loc, K2, N = b_res.shape
+    assert K == K2, (a.shape, b_res.shape)
+
+    cid = _channel_ids(tp, C_loc)
+    moduli = jnp.take(jnp.asarray(mset.moduli, jnp.int32), cid)
+    res_dtype = _res_dtype(mset)
+    # Forward conversion needs every channel's residues of the activations;
+    # it is elementwise (cheap, collective-free), so convert all C and keep
+    # the local slice by traced gather.
+    a_all = mset.to_residues(a.astype(jnp.int32))        # (C, M, K)
+    a_res = jnp.take(a_all, cid, axis=0).astype(res_dtype)
+
+    segs = segment_count(K, max_abs_a, max_abs_b, mset)
+    seg_len = _round_up((K + segs - 1) // segs, 128)
+    segs = (K + seg_len - 1) // seg_len
+
+    bm, bn, bk = _choose_blocks(M, N, seg_len)
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    Kp = _round_up(seg_len, bk)
+
+    parts = []
+    for s in range(segs):
+        lo = s * seg_len
+        hi = min(lo + seg_len, K)
+        a_s = a_res[:, :, lo:hi]
+        b_s = b_res[:, lo:hi, :]
+        a_p = jnp.zeros((C_loc, Mp, Kp), res_dtype)
+        a_p = a_p.at[:, :M, : hi - lo].set(a_s)
+        b_p = jnp.zeros((C_loc, Kp, Np), res_dtype)
+        b_p = b_p.at[:, : hi - lo, :N].set(b_s)
+        out_res = impl(a_p, b_p, moduli, bm, bn, bk)[:, :M, :N]
+        rows = mset.partial_decode(out_res, cid)[None]   # (1, M, N)
+        if witness:
+            rows = jnp.concatenate(
+                [rows, mset.partial_witnesses(out_res, cid)], axis=0)
+        parts.append(rows)
+
+    buf = jax.lax.psum(jnp.stack(parts, axis=0), tp)     # (segs, 1+r, M, N)
+    total = jnp.zeros((M, N), jnp.int32)
+    for s in range(segs):
+        if witness:
+            total = total + mset.corrected_fold(buf[s, 0], buf[s, 1:])
+        else:
+            total = total + mset.fold_partials(buf[s, 0])
     return total
 
 
@@ -359,6 +552,45 @@ register_impl("sdrns_matmul", "cost", _sdrns_matmul_cost_impl)
 register_impl("sdrns_matvec", "cost", _sdrns_matmul_cost_impl)
 
 
+# Array-parameterized siblings for the channel-parallel shard_map body:
+# moduli and wrap signs arrive as runtime (C_loc,) operands (gathered by a
+# traced ``axis_index``).  pallas/interpret are the unchanged fused kernels
+# — they already take wrap_signs as a runtime operand.  ref/cost compute
+# the same *decoded* residues against the moduli array (digit vectors are
+# canonical rather than kernel-identical, same contract as the cost
+# backend above — the channel body decodes immediately, so the decoded
+# values stay exact).
+register_impl(
+    "sdrns_matmul_planes", "pallas",
+    lambda ad, bd, moduli, ws, bm, bn: sdrns_matmul_pallas(
+        ad, bd, ws, bm=bm, bn=bn, interpret=False))
+register_impl(
+    "sdrns_matmul_planes", "interpret",
+    lambda ad, bd, moduli, ws, bm, bn: sdrns_matmul_pallas(
+        ad, bd, ws, bm=bm, bn=bn, interpret=True))
+register_impl(
+    "sdrns_matvec_planes", "pallas",
+    lambda ad, bd, moduli, ws, bm, bn: sdrns_matvec_pallas(
+        ad, bd, ws, bn=bn, interpret=False))
+register_impl(
+    "sdrns_matvec_planes", "interpret",
+    lambda ad, bd, moduli, ws, bm, bn: sdrns_matvec_pallas(
+        ad, bd, ws, bn=bn, interpret=True))
+
+
+def _sdrns_planes_cost_impl(ad, bd, moduli, ws, bm, bn):
+    acc = jnp.einsum("cmk,ckn->cmn", sd.to_int(ad), sd.to_int(bd))
+    m = moduli.reshape(-1, 1, 1)
+    r = jnp.remainder(acc, m)
+    return sd.from_int(jnp.where(r > m // 2, r - m, r), bd.shape[-1])
+
+
+register_impl("sdrns_matmul_planes", "ref", _sdrns_planes_cost_impl)
+register_impl("sdrns_matmul_planes", "cost", _sdrns_planes_cost_impl)
+register_impl("sdrns_matvec_planes", "ref", _sdrns_planes_cost_impl)
+register_impl("sdrns_matvec_planes", "cost", _sdrns_planes_cost_impl)
+
+
 def encode_sd_planes(w: jax.Array, mset: ModuliSet) -> jax.Array:
     """Integer values (..., K, N) -> SD digit planes (..., C, K, N, n) int8.
 
@@ -386,6 +618,12 @@ def sdrns_run(a, b_dig, *, mset, max_abs_a, max_abs_b, backend,
     (its grid is (C, N/bn), so column-sharding N just shortens the grid).
     """
     if shard is not None:
+        if shard[0] == "chan":
+            body = functools.partial(
+                _sdrns_channel_body, mset=mset, max_abs_a=max_abs_a,
+                max_abs_b=max_abs_b, backend=backend,
+                force_matvec=force_matvec, tp=shard[3])
+            return _channel_mapped(body, shard, sd_planes=True)(a, b_dig)
         body = functools.partial(sdrns_run, mset=mset, max_abs_a=max_abs_a,
                                  max_abs_b=max_abs_b, backend=backend,
                                  force_matvec=force_matvec)
@@ -428,6 +666,66 @@ def sdrns_run(a, b_dig, *, mset, max_abs_a, max_abs_b, backend,
         bd = bd.at[:, :, :N].set(b_dig[:, lo:hi])
         out_dig = impl(ad, bd, mset, bm, bn)                # (C, Mp, Np, n)
         total = total + sdrns.sdrns_decode(out_dig[:, :M, :N], mset)
+    return total
+
+
+def _sdrns_channel_body(a, b_dig, *, mset, max_abs_a, max_abs_b, backend,
+                        force_matvec, tp):
+    """Channel-parallel sdrns schedule (inside a ``("chan", ...)`` shard_map).
+
+    Mirrors :func:`_rns_channel_body` over the local ``(C_loc, K, N, n)``
+    digit planes: the fused kernel runs per resident channel, the output
+    digit vectors decode locally to a residue representative
+    (``sd.to_int`` — :meth:`ModuliSet.partial_decode` canonicalizes, so
+    the representative choice cannot change the fold), and one stacked
+    psum + per-segment ``fold_partials`` replaces the cross-channel
+    gather.  sdrns carries no witness channels (the fault-tolerant path is
+    rns), so there is no corrected fold here.
+    """
+    n = _sdrns_digit_width(mset)
+    M, K = a.shape
+    C_loc, K2, N, n2 = b_dig.shape
+    assert (K, n) == (K2, n2), (a.shape, b_dig.shape)
+
+    if force_matvec or M <= DECODE_M:
+        op = "sdrns_matvec_planes"
+        bm, bn = _choose_decode_blocks(M, N)
+    else:
+        op = "sdrns_matmul_planes"
+        bm, bn = _choose_digit_blocks(M, N)
+    impl = get_impl(op, backend)
+
+    cid = _channel_ids(tp, C_loc)
+    moduli = jnp.take(jnp.asarray(mset.moduli, jnp.int32), cid)
+    ws = jnp.take(_wrap_signs(mset), cid)
+
+    segs = segment_count(K, max_abs_a, max_abs_b, mset)
+    seg_len = (K + segs - 1) // segs
+    k_cap = max(_PP_BUDGET_BYTES // (n * n * bm * bn), 1)
+    seg_len = min(seg_len, k_cap)
+    segs = (K + seg_len - 1) // seg_len
+
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+
+    parts = []
+    for s in range(segs):
+        lo = s * seg_len
+        hi = min(lo + seg_len, K)
+        a_s = a[:, lo:hi].astype(jnp.int32)
+        a_res = mset.to_residues(a_s, centered=True)     # (C, M, ks)
+        a_res = jnp.take(a_res, cid, axis=0)
+        ad = jnp.zeros((C_loc, Mp, hi - lo, n), jnp.int8)
+        ad = ad.at[:, :M].set(sd.from_int(a_res, n))
+        bd = jnp.zeros((C_loc, hi - lo, Np, n), jnp.int8)
+        bd = bd.at[:, :, :N].set(b_dig[:, lo:hi])
+        out_dig = impl(ad, bd, moduli, ws, bm, bn)       # (C_loc, Mp, Np, n)
+        vals = sd.to_int(out_dig[:, :M, :N])             # residue reps
+        parts.append(mset.partial_decode(vals, cid))
+
+    buf = jax.lax.psum(jnp.stack(parts, axis=0), tp)     # (segs, M, N)
+    total = jnp.zeros((M, N), jnp.int32)
+    for s in range(segs):
+        total = total + mset.fold_partials(buf[s])
     return total
 
 

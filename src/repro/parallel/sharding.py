@@ -92,9 +92,13 @@ class ShardCtx:
     seq_shard: bool = False           # SP: shard residual-stream seq over tp
     # Residue-plane layout knob: split the moduli-channel C axis of
     # ResidueTensor leaves over tp (the paper's channel-parallelism on the
-    # mesh) instead of the default TP-on-N layout.  Subject to the same
-    # divisibility fallback as every other axis: C % tp_size != 0 leaves
-    # the channels replicated (and N replicated too — the layouts are
+    # mesh) instead of the default TP-on-N layout.  C-split matmuls take
+    # the partial-CRT psum schedule (DESIGN.md §14) when the moduli set
+    # supports it; when the plan cannot fire (C % tp_size != 0, no mset,
+    # or an unsupported wide set) the channels fall back to the gathered
+    # layout with a UserWarning and a counter
+    # (runners.fallback_gather_count(), EngineStats.fallback_gathers) —
+    # never silently.  N stays replicated either way (the layouts are
     # alternatives, see ResidueTensor.leaf_roles).
     channel_shard: bool = False
 

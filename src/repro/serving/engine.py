@@ -43,6 +43,7 @@ import numpy as np
 
 from repro import numerics as nx
 from repro.models.api import Model
+from repro.numerics import runners
 from repro.numerics import ResidueTensor
 from repro.numerics import kv_pages as kvp
 from repro.parallel.sharding import get_shard_ctx
@@ -158,6 +159,9 @@ class ServingEngine:
                 f"scrub must be 'off', 'decode' or 'rotate:k', got {scrub!r}")
         self.scrub = scrub
         self.stats = EngineStats()
+        # Baseline for the channel_shard fallback counter: the runner-level
+        # count is process-lifetime, the stat is engine-lifetime.
+        self._fallback_base = runners.fallback_gather_count()
         self._trace_count = 0
         self._last_scrub = (0, 0)   # (detected, corrected) of the last pass
         self._compiled_buckets: dict[str, set[int]] = {}
@@ -259,6 +263,18 @@ class ServingEngine:
                 "total, %d retrace(s))", bucket, cur,
                 self.stats.fused_retraces)
             self._trace_count = cur
+
+    def _sync_fallback_gathers(self) -> None:
+        """Refresh ``stats.fallback_gathers`` from the runner-level counter.
+
+        The planner warns and counts once per plan resolution (i.e. per
+        traced matmul under a channel_shard context that could not take
+        the partial-CRT psum path) — nonzero here means this engine's
+        mesh/moduli pairing is mis-sharded and decode is quietly running
+        the gathered layout.
+        """
+        self.stats.fallback_gathers = (
+            runners.fallback_gather_count() - self._fallback_base)
 
     # -- redundant-residue scrub (DESIGN.md §12) -----------------------------
 
@@ -405,6 +421,7 @@ class ServingEngine:
             tok = self._sample(logits, temperature, key, i + 1)
         self.stats.decode_steps += steps
         self.stats.decode_dispatches += steps
+        self._sync_fallback_gathers()
         return GenerateResult(
             tokens=np.stack(outs, axis=1), prefill_logits=prefill_logits,
             steps=steps,
@@ -451,6 +468,7 @@ class ServingEngine:
         steps = int(steps)
         self.stats.decode_steps += steps
         self.stats.decode_dispatches += 1
+        self._sync_fallback_gathers()
         return GenerateResult(
             tokens=np.asarray(buf)[:, :n], prefill_logits=prefill_logits,
             steps=steps,
@@ -677,6 +695,7 @@ class ServingEngine:
             n = int(counts.max()) if counts.size else 0
             self.stats.decode_steps += steps
             self.stats.decode_dispatches += 1
+            self._sync_fallback_gathers()
             sp = self.stats.spec
             sp.proposed += prop
             sp.accepted += acc
@@ -702,6 +721,7 @@ class ServingEngine:
         steps = int(steps)
         self.stats.decode_steps += steps
         self.stats.decode_dispatches += 1
+        self._sync_fallback_gathers()
         counts = np.full(tok0.shape[0], steps, np.int64)
         return np.asarray(buf)[:, :n], steps, np.asarray(done), counts, 0, 0
 

@@ -122,6 +122,13 @@ class EngineStats:
     decode_steps: int = 0        # decode tokens produced
     decode_dispatches: int = 0   # host->device decode dispatches
     fused_retraces: int = 0      # fused-loop retraces (new length buckets)
+    # channel_shard plan resolutions that fell back to the replicated /
+    # gathered decode layout (C not divisible by the tensor axis, or a
+    # moduli set past the int32 partial-CRT bound).  Counted per plan
+    # resolution — once per traced matmul, not per decode step — so a
+    # nonzero value means the mesh/moduli pairing is mis-sharded, not that
+    # every step gathered.  Mirrors runners.fallback_gather_count().
+    fallback_gathers: int = 0
     faults: FaultStats = dataclasses.field(default_factory=FaultStats)
     pool: PoolStats | None = None   # shared with the engine's KVPagePool
     spec: SpecStats | None = None   # set when the engine runs with spec=

@@ -111,13 +111,97 @@ for system, mset, impl in (("rns", P21, "interpret"),
                                           np.asarray(y_sh), err_msg=str(err))
 print("bit-identity OK")
 
-# shard_map plan engages for the default layout and not for C-split
+# shard_map plan engages for the default layout; C-split needs the moduli
+# metadata and divisibility — failures warn + count instead of silently
+# running the gathered layout
+import warnings
 with shard_ctx(ctx):
-    plan = runners.tp_shard_plan(16, 16)
-    assert plan is not None and plan[2] == ("model",), plan
+    plan = runners.tp_shard_plan(16, 16, mset=P21)
+    assert plan is not None and plan[0] == "col", plan
+    assert plan[3] == ("model",), plan
+base_fb = runners.fallback_gather_count()
 with shard_ctx(ctx_c):
-    assert runners.tp_shard_plan(16, 16) is None
+    with warnings.catch_warnings(record=True) as wrec:
+        warnings.simplefilter("always")
+        # legacy entry point: no mset reaches the planner
+        assert runners.tp_shard_plan(16, 16) is None
+        # C=3 does not divide the 2-device tensor axis
+        assert runners.tp_shard_plan(16, 16, mset=P21) is None
+        # CRT40 divides (C=6) but exceeds the int32 partial-CRT bound
+        assert runners.tp_shard_plan(16, 16, mset=CRT40) is None
+    assert len(wrec) == 3, [str(w.message) for w in wrec]
+    assert all(issubclass(w.category, UserWarning) for w in wrec)
+assert runners.fallback_gather_count() == base_fb + 3
 print("shard plan OK")
+
+# ---- 3b. channel-parallel psum path: (2, 3) mesh fits P21's C=3 ----------
+mesh23 = make_test_mesh((2, 3))
+ctx23 = make_ctx(mesh23, channel_shard=True)
+for system in ("rns", "sdrns"):
+    for M in (2, 16):              # matvec route and matmul route
+        params_d = linear.init_dense(jax.random.PRNGKey(2), 24, 16)
+        x = jax.random.normal(jax.random.PRNGKey(3), (M, 24))
+        prep = residency.prepare_dense(params_d, system=system, bits=4)
+        kw = dict(system=system, mset=P21, impl="interpret",
+                  compute_dtype=jnp.float32)
+        y_base = linear.dense(prep, x, **kw)
+        with shard_ctx(ctx23):
+            plan = runners.tp_shard_plan(M, 16, mset=P21)
+            assert plan is not None and plan[0] == "chan", plan
+            prep_sh = shard_params({"wq": prep}, ctx23)["wq"]
+            y_sh = linear.dense(prep_sh, x, **kw)
+        np.testing.assert_array_equal(np.asarray(y_base), np.asarray(y_sh),
+                                      err_msg=f"chan {system} M={M}")
+# stacked einsum rides the same channel plan (scanned slices)
+qa = jnp.asarray(np.random.default_rng(5).integers(-7, 8, (3, 4, 24)),
+                 jnp.int32)
+wst = jax.random.normal(jax.random.PRNGKey(9), (3, 24, 16))
+t_st = residency.prepare_weight(wst, system="rns", bits=4)
+y_st = nx.einsum("emk,ekn->emn", qa, t_st)
+with shard_ctx(ctx23):
+    t_st_sh = residency.prepare_weight(wst, system="rns", bits=4)
+    y_st_sh = nx.einsum("emk,ekn->emn", qa, t_st_sh)
+np.testing.assert_array_equal(np.asarray(y_st), np.asarray(y_st_sh))
+print("channel psum bit-identity OK")
+
+# ---- 3c. P21R2 split so witnesses live on other devices than info --------
+# (1, 5) mesh: C_loc = 1 -> the witness moduli (131, 133; global channels
+# 3, 4) land on devices 3 and 4, disjoint from every info channel.
+from repro.core.moduli import P21R2
+mesh15 = make_test_mesh((1, 5))
+ctx15 = make_ctx(mesh15, channel_shard=True)
+params_d = linear.init_dense(jax.random.PRNGKey(11), 24, 16)
+x1 = jax.random.normal(jax.random.PRNGKey(12), (2, 24))
+prep_r = residency.prepare_dense(params_d, system="rns", bits=4, mset=P21R2)
+kw_r = dict(system="rns", mset=P21R2, impl="interpret",
+            compute_dtype=jnp.float32)
+y_r_base = linear.dense(prep_r, x1, **kw_r)
+with shard_ctx(ctx15):
+    plan = runners.tp_shard_plan(2, 16, mset=P21R2)
+    assert plan is not None and plan[0] == "chan", plan
+    prep_r_sh = shard_params({"wq": prep_r}, ctx15)["wq"]
+    y_r_sh = linear.dense(prep_r_sh, x1, **kw_r)
+np.testing.assert_array_equal(np.asarray(y_r_base), np.asarray(y_r_sh))
+# single-fault correction across the psum: corrupt an info channel of the
+# sharded planes — the witness syndromes (assembled by the same psum from
+# other devices) must repair the decode to the fault-free output
+t_r = prep_r_sh["w"]
+t_bad = t_r._with_planes(t_r.planes.at[0, 3, 5].add(7))
+with shard_ctx(ctx15):
+    y_r_bad = linear.dense(dict(prep_r_sh, w=t_bad), x1, **kw_r)
+np.testing.assert_array_equal(np.asarray(y_r_base), np.asarray(y_r_bad),
+                              err_msg="psum-path fault correction")
+# nx.scrub on the C-split tensor is bit-exact vs the unsharded scrub
+bad_planes_1dev = jnp.asarray(np.asarray(t_bad.planes))  # host copy, no mesh
+fixed_1dev, det1, cor1 = nx.scrub(prep_r["w"]._with_planes(bad_planes_1dev))
+with shard_ctx(ctx15):
+    fixed_sh, det_s, cor_s = nx.scrub(t_bad)
+assert (det1, cor1) == (det_s, cor_s) and det_s >= 1, (det1, det_s, cor_s)
+np.testing.assert_array_equal(np.asarray(fixed_1dev.planes),
+                              np.asarray(fixed_sh.planes))
+np.testing.assert_array_equal(np.asarray(fixed_sh.planes),
+                              np.asarray(prep_r["w"].planes))
+print("P21R2 witness-split OK")
 
 # ---- 4. C-split layout round-trips encode/decode -------------------------
 w2 = jax.random.normal(jax.random.PRNGKey(7), (12, 8))
@@ -152,6 +236,24 @@ with shard_ctx(ctx):
 np.testing.assert_allclose(np.asarray(logits_mesh),
                            np.asarray(logits_1dev), rtol=1e-5, atol=1e-5)
 print("model decode OK")
+
+# ---- 5b. whole decode step under channel_shard: psum path, bit-identical -
+# (2, 3) mesh fits P21's C=3; rns keeps the residue matmuls on the
+# channel-split psum schedule and the flash dispatchers run inside the
+# same mesh context (models/attention.py keeps the flash path under
+# channel_shard), so the full step lowers with only the partial-CRT psums
+# as collectives — and emits bit-identical logits.
+model_r = build_model(cfg, system="rns", rns_impl="interpret")
+raw_r = model_r.init(jax.random.PRNGKey(0))
+prep_r1 = model_r.prepare_params(raw_r)
+logits_r1, _ = model_r.decode(prep_r1, tok, model_r.init_cache(2, 8),
+                              jnp.int32(3))
+with shard_ctx(ctx23):
+    prep_rc = model_r.prepare_params(raw_r)
+    logits_rc, _ = model_r.decode(prep_rc, tok, model_r.init_cache(2, 8),
+                                  jnp.int32(3))
+np.testing.assert_array_equal(np.asarray(logits_rc), np.asarray(logits_r1))
+print("channel-shard model decode OK")
 print("ALL-SHARDED-RESIDENCY-OK")
 """
 

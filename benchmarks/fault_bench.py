@@ -20,6 +20,14 @@ moduli + 2 redundant witnesses — single-fault correcting):
   product, and ``nx.scrub`` must count the corrupted elements and return a
   plane-exact repair.
 
+* **syndrome_overhead** (asserted in --smoke): the in-kernel syndrome
+  accumulation on the paged decode path — ``paged_decode(...,
+  syndrome=True)`` vs the plain pass over the same rns8r pages.  The
+  witness remainder-compare rides the KV load the kernel already does, so
+  the smoke gate bounds the ratio at 1.05; correctness sub-asserts pin
+  clean pages to zero syndromes, a witness bit flip to exactly one, and
+  interpret-backend parity at the same shape.
+
 * **rotate_scrub** (asserted in --smoke): the ``scrub="rotate:k"`` engine
   policy vs the full ``scrub="decode"`` pass — one unit group checked per
   dispatch must cost less than scrubbing everything, while a persistent
@@ -31,6 +39,7 @@ Writes BENCH_fault[_smoke].json for the CI artifact trail.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -42,15 +51,51 @@ from repro import numerics as nx
 from repro.core.moduli import P21, P21R2
 
 
-def _time_ms(fn, *, reps: int) -> float:
-    """Min-of-reps wall time in ms; one throwaway pass warms the jit."""
-    fn()
-    best = float("inf")
+def _time_ms(fn, *, reps: int, warmup: int = 3) -> float:
+    """Median-of-reps wall time in ms, after ``warmup`` throwaway passes.
+
+    The earlier min-of-reps with a single warmup let one lucky sample set
+    the cell: on a noisy shared CPU the minimum of two jitter-dominated
+    distributions can easily invert their true ordering (the committed
+    BENCH_fault.json once reported a 0.86x "overhead" for the *more*
+    expensive verified path).  Three warmups flush jit tracing *and* the
+    first-touch page faults; the median is robust to stragglers in both
+    directions without rewarding the one-off fast outlier the way min does.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    samples = []
     for _ in range(reps):
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e3
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples)) * 1e3
+
+
+def _time_pair_ms(fa, fb, *, reps: int,
+                  warmup: int = 3) -> tuple[float, float]:
+    """Interleaved A/B timing for ratio cells: (median_a_ms, median_b_ms).
+
+    Back-to-back blocks — all of A's reps, then all of B's — let slow
+    machine-level drift (frequency scaling, co-tenant load on a shared CI
+    runner) land entirely on one side: a 10–20% dip during B's block
+    reports the *more expensive* variant as faster.  Alternating
+    A,B,A,B,... puts every drift epoch on both sides, so the per-side
+    medians stay comparable and the ratio measures the code, not the
+    weather.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fa())
+        jax.block_until_ready(fb())
+    sa, sb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fa())
+        sa.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fb())
+        sb.append(time.perf_counter() - t0)
+    return float(np.median(sa)) * 1e3, float(np.median(sb)) * 1e3
 
 
 def _setup(mset, *, k: int, n: int, m: int = 4):
@@ -62,11 +107,21 @@ def _setup(mset, *, k: int, n: int, m: int = 4):
 
 
 def bench_check_overhead(*, k: int, n: int, reps: int) -> dict:
+    """verify=True vs verify=False on the same redundant matmul.
+
+    The two variants jit to *different* XLA programs (the verified path
+    fuses the base-extension compare into the decode), and at deep K the
+    verified program's fusion choices can come out a few percent faster
+    than the unverified one — a real, order-independent program-level
+    effect (swapping the interleave order reproduces it), not a timing
+    artifact.  The gate is an upper bound only: the check must stay
+    marginal, which a sub-1.0 ratio trivially satisfies.
+    """
     a, t = _setup(P21R2, k=k, n=n)
     f_off = jax.jit(lambda x: nx.matmul(x, t, verify=False))
     f_on = jax.jit(lambda x: nx.matmul(x, t, verify=True))
-    ms_off = _time_ms(lambda: f_off(a), reps=reps)
-    ms_on = _time_ms(lambda: f_on(a), reps=reps)
+    ms_off, ms_on = _time_pair_ms(lambda: f_off(a), lambda: f_on(a),
+                                  reps=reps)
     np.testing.assert_array_equal(np.asarray(f_off(a)), np.asarray(f_on(a)))
     return {"cell": "check_overhead", "k": k, "n": n,
             "unverified_ms": ms_off, "verified_ms": ms_on,
@@ -78,8 +133,8 @@ def bench_redundancy_carry(*, k: int, n: int, reps: int) -> dict:
     a_r, t_r = _setup(P21R2, k=k, n=n)
     f_i = jax.jit(lambda x: nx.matmul(x, t_i))
     f_r = jax.jit(lambda x: nx.matmul(x, t_r, verify=False))
-    ms_i = _time_ms(lambda: f_i(a_i), reps=reps)
-    ms_r = _time_ms(lambda: f_r(a_r), reps=reps)
+    ms_i, ms_r = _time_pair_ms(lambda: f_i(a_i), lambda: f_r(a_r),
+                               reps=reps)
     np.testing.assert_array_equal(np.asarray(f_i(a_i)),
                                   np.asarray(f_r(a_r)))
     return {"cell": "redundancy_carry", "k": k, "n": n,
@@ -106,6 +161,81 @@ def bench_correction(*, k: int, n: int) -> dict:
             "faults_detected": int(detected),
             "faults_corrected": int(corrected),
             "plane_repaired_exactly": repaired}
+
+
+def bench_syndrome_overhead(*, reps: int, smoke: bool) -> dict:
+    """In-kernel syndrome accumulation vs the plain paged-decode pass.
+
+    Times :func:`repro.numerics.attention.paged_decode` with and without
+    ``syndrome=True`` on the ``ref`` backend: both variants jit to the
+    same gather/attention XLA program, so the delta is exactly the witness
+    remainder-compare + masked count the fused kernel folds into its KV
+    load.  The ``interpret`` backend is deliberately *not* timed — Pallas
+    interpret emulation serializes in-register work through the host and
+    mis-prices per-element arithmetic by orders of magnitude; it is used
+    only for the tiny-shape parity sub-assert below.  The smoke gate bounds
+    the syndrome/plain ratio at 1.05 (the ISSUE acceptance ceiling).
+    """
+    from repro.numerics import kv_pages as kvp
+    from repro.numerics.attention import paged_decode
+
+    # even the smoke shape must be deep enough that the witness compare is
+    # measured against real KV traffic, not dispatch jitter — a ~40us cell
+    # reproduces exactly the impossible sub-1.0 "overhead" this benchmark
+    # once committed for the verified matmul.  The witness work is per
+    # KV-element (independent of query heads), so GQA head counts keep the
+    # attention math dominant, as on the real decode path.
+    B, H, Kv, hd = (8, 16, 2, 128) if smoke else (8, 32, 2, 128)
+    ps, n_pmax = 32, 16
+    reps = max(reps, 12)
+    rng = np.random.default_rng(0)
+    pool = kvp.make_paged_kv(1, 1 + B * n_pmax, ps, Kv, hd, fmt="rns8r",
+                             dtype=jnp.float32)
+    kd = rng.normal(0, 1, (1, B, n_pmax * ps, Kv, hd)).astype(np.float32)
+    vd = rng.normal(0, 1, (1, B, n_pmax * ps, Kv, hd)).astype(np.float32)
+    tab = jnp.asarray(np.arange(1, 1 + B * n_pmax,
+                                dtype=np.int32).reshape(B, n_pmax))
+    pool = kvp.scatter_prefill(pool, jnp.asarray(kd), jnp.asarray(vd),
+                               tab, page_size=ps)
+    layer = kvp.layer_slice(pool, 0)
+    q = jnp.asarray(rng.normal(0, 1, (B, H, hd)).astype(np.float32))
+    kv_len = jnp.full((B,), n_pmax * ps - 3, jnp.int32)
+
+    f_plain = jax.jit(lambda x: paged_decode(
+        x, layer, tab, kv_len, page_size=ps, backend="ref"))
+    f_syn = jax.jit(lambda x: paged_decode(
+        x, layer, tab, kv_len, page_size=ps, backend="ref", syndrome=True))
+    ms_plain, ms_syn = _time_pair_ms(lambda: f_plain(q),
+                                     lambda: f_syn(q), reps=reps)
+
+    out_syn, syn = f_syn(q)
+    clean_zero = bool((np.asarray(syn) == 0).all())
+    out_identical = bool(
+        (np.asarray(f_plain(q)) == np.asarray(out_syn)).all())
+    # flip one witness byte in a valid row of slot 0's first page: the
+    # same fused pass must now count exactly one faulty element
+    planes = np.asarray(layer.k.planes).copy()
+    planes[int(tab[0, 0]), 0, 1, 0, 0] ^= 0x01
+    bad = kvp.PagedKV(
+        dataclasses.replace(layer.k, planes=jnp.asarray(planes)), layer.v)
+    _, syn_bad = paged_decode(q, bad, tab, kv_len, page_size=ps,
+                              backend="ref", syndrome=True)
+    flip_counted = bool(int(np.asarray(syn_bad)[0]) == 1
+                        and int(np.asarray(syn_bad)[1:].sum()) == 0)
+    # interpret-backend parity at a tiny shape (emulation is too slow to
+    # time, but the counts must agree with the ref mirror bit-for-bit)
+    _, syn_i = paged_decode(q, bad, tab, kv_len, page_size=ps,
+                            backend="interpret", syndrome=True)
+    interpret_parity = bool(
+        (np.asarray(syn_i) == np.asarray(syn_bad)).all())
+    return {"cell": "syndrome_overhead", "b": B, "h": H, "hd": hd,
+            "page_size": ps, "n_pages": n_pmax,
+            "plain_ms": ms_plain, "syndrome_ms": ms_syn,
+            "overhead_ratio": ms_syn / ms_plain,
+            "clean_syndromes_zero": clean_zero,
+            "output_bit_identical": out_identical,
+            "witness_flip_counted": flip_counted,
+            "interpret_parity": interpret_parity}
 
 
 def bench_rotate_scrub(*, groups: int, reps: int) -> dict:
@@ -154,6 +284,7 @@ def run(*, smoke: bool = False, verbose: bool = True) -> dict:
         bench_check_overhead(k=k, n=n, reps=reps),
         bench_redundancy_carry(k=k, n=n, reps=reps),
         bench_correction(k=k, n=n),
+        bench_syndrome_overhead(reps=reps, smoke=smoke),
         bench_rotate_scrub(groups=4, reps=reps),
     ]
     if verbose:
@@ -187,6 +318,16 @@ def main(argv=None):
         print("[fault_bench] FAIL: fused consistency check cost "
               f"{cells['check_overhead']['overhead_ratio']:.3f}x "
               "(gate: <= 1.10)")
+        return 1
+    syn = cells["syndrome_overhead"]
+    if not (syn["clean_syndromes_zero"] and syn["output_bit_identical"]
+            and syn["witness_flip_counted"] and syn["interpret_parity"]):
+        print("[fault_bench] FAIL: in-kernel syndrome cell broke a "
+              f"correctness sub-assert: {json.dumps(syn)}")
+        return 1
+    if args.smoke and syn["overhead_ratio"] > 1.05:
+        print("[fault_bench] FAIL: in-kernel syndrome accumulation cost "
+              f"{syn['overhead_ratio']:.3f}x (gate: <= 1.05)")
         return 1
     rot = cells["rotate_scrub"]
     if not rot["fault_caught_within_k"]:

@@ -310,7 +310,8 @@ def _unpack_crt(byte: jax.Array, moduli: tuple[int, int]) -> jax.Array:
 
 
 def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, *rest, ps: int,
-                         scale: float, moduli: tuple[int, int] | None):
+                         scale: float, moduli: tuple[int, int] | None,
+                         red_moduli: tuple[int, ...] | None, g: int):
     """One (b, h, j) grid step: page ``tab[b, j]`` of the split-KV schedule.
 
     The scalar-prefetched block table already steered the BlockSpec index
@@ -319,11 +320,23 @@ def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, *rest, ps: int,
     like the dense chunk kernel.  With ``moduli`` set, k/v arrive as packed
     uint8 residue planes plus an f32 per-(slot, head... ) scale block and are
     dequantized in-register before the dot products.
+
+    With ``red_moduli`` the page's witness lanes ride along as extra
+    operands and the kernel emits a fourth reduction output: the count of
+    valid (row, hd) elements on this page whose stored witness residues
+    disagree with the packed info byte it just decoded — KV integrity is
+    checked *while the planes are in VMEM*, for free on the decode hot
+    path.  Only the lead query head of each GQA group (``h % g == 0``)
+    reports its KV head's count, so summing the output over heads and
+    pages counts every faulty element exactly once.
     """
     if moduli is None:
         k_ref, v_ref, o_ref, m_ref, l_ref = rest
-    else:
+    elif red_moduli is None:
         k_ref, v_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        (k_ref, v_ref, ks_ref, vs_ref, kw_ref, vw_ref,
+         o_ref, m_ref, l_ref, syn_ref) = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
     kv_len = kvlen_ref[b]
@@ -333,10 +346,22 @@ def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, *rest, ps: int,
         kb = k_ref[0, :, 0, :]
         vb = v_ref[0, :, 0, :]
     else:
-        kb = _unpack_crt(k_ref[0, :, 0, :].astype(jnp.int32), moduli)
-        vb = _unpack_crt(v_ref[0, :, 0, :].astype(jnp.int32), moduli)
-        kb = kb.astype(jnp.float32) * ks_ref[0, :, 0, :]   # (ps, 1) scale
-        vb = vb.astype(jnp.float32) * vs_ref[0, :, 0, :]
+        k_int = _unpack_crt(k_ref[0, :, 0, :].astype(jnp.int32), moduli)
+        v_int = _unpack_crt(v_ref[0, :, 0, :].astype(jnp.int32), moduli)
+        if red_moduli is not None:
+            def bad(x_int, w_ref):
+                mism = jnp.zeros(x_int.shape, jnp.bool_)
+                for jw, m in enumerate(red_moduli):
+                    wit = w_ref[0, :, jw, 0, :].astype(jnp.int32)
+                    mism = mism | (jnp.remainder(
+                        wit - jnp.remainder(x_int, m), m) != 0)
+                return mism & valid
+            cnt = (jnp.sum(bad(k_int, kw_ref).astype(jnp.int32))
+                   + jnp.sum(bad(v_int, vw_ref).astype(jnp.int32)))
+            lead = pl.program_id(1) % g == 0
+            syn_ref[0, 0, 0] = jnp.where(lead, cnt, 0)
+        kb = k_int.astype(jnp.float32) * ks_ref[0, :, 0, :]  # (ps, 1) scale
+        vb = v_int.astype(jnp.float32) * vs_ref[0, :, 0, :]
     kb = jnp.where(valid, kb, 0.0)
     vb = jnp.where(valid, vb, 0.0)
     qb = q_ref[0]                                        # (1, hd)
@@ -356,7 +381,7 @@ def _paged_decode_kernel(tab_ref, kvlen_ref, q_ref, *rest, ps: int,
 
 
 @functools.partial(jax.jit, static_argnames=("page_size", "moduli",
-                                             "interpret"))
+                                             "red_moduli", "interpret"))
 def flash_paged_decode_pallas(
     q: jax.Array,
     k_pages: jax.Array,
@@ -368,8 +393,11 @@ def flash_paged_decode_pallas(
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
     moduli: tuple[int, int] | None = None,
+    k_witness: jax.Array | None = None,
+    v_witness: jax.Array | None = None,
+    red_moduli: tuple[int, ...] | None = None,
     interpret: bool | None = None,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, ...]:
     """Split-KV decode over a *paged* cache: chunk boundary == page boundary.
 
     The per-request page list is a **scalar-prefetch** operand: the grid's
@@ -386,9 +414,15 @@ def flash_paged_decode_pallas(
       block_tab: (B, n_pmax) int32 page ids per request; entries past the
         live prefix may point anywhere (masked by ``kv_len``).
       kv_len: (B,) int32 valid-prefix length (<= n_pmax * page_size).
+      k_witness, v_witness: with ``red_moduli`` set, the redundant witness
+        lanes (P, ps, r, Kv, hd) uint8 of the same pool — the kernel then
+        also accumulates a per-(b, h, j) syndrome count.
     Returns:
       ``(o (B, H, hd, n_pmax), m (B, H, n_pmax), l (B, H, n_pmax))`` f32
-      partials for :func:`repro.numerics.attention.merge_decode_partials`.
+      partials for :func:`repro.numerics.attention.merge_decode_partials`;
+      with ``red_moduli`` a fourth ``syn (B, H, n_pmax)`` int32 element
+      counting witness mismatches on valid rows (nonzero only on GQA lead
+      heads, so ``syn.sum((1, 2))`` is the per-request faulty-element count).
     """
     interpret = compat.resolve_interpret(interpret)
     B, H, hd = q.shape
@@ -417,26 +451,44 @@ def flash_paged_decode_pallas(
                 (1, ps, 1, 1),
                 lambda b, h, j, tab, kvl: (tab[b, j], 0, h // g, 0)))
         operands += [k_scale, v_scale]
+    if red_moduli is not None:
+        assert moduli is not None
+        assert k_witness is not None and v_witness is not None
+        r = len(red_moduli)
+        assert k_witness.shape[2] == r, (k_witness.shape, red_moduli)
+        for _ in range(2):
+            in_specs.append(pl.BlockSpec(
+                (1, ps, r, 1, hd_store),
+                lambda b, h, j, tab, kvl: (tab[b, j], 0, 0, h // g, 0)))
+        operands += [k_witness, v_witness]
+
+    out_specs = [
+        pl.BlockSpec((1, 1, hd, 1), lambda b, h, j, tab, kvl: (b, h, 0, j)),
+        pl.BlockSpec((1, 1, 1), lambda b, h, j, tab, kvl: (b, h, j)),
+        pl.BlockSpec((1, 1, 1), lambda b, h, j, tab, kvl: (b, h, j)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, H, hd, n_pmax), jnp.float32),
+        jax.ShapeDtypeStruct((B, H, n_pmax), jnp.float32),
+        jax.ShapeDtypeStruct((B, H, n_pmax), jnp.float32),
+    ]
+    if red_moduli is not None:
+        out_specs.append(
+            pl.BlockSpec((1, 1, 1), lambda b, h, j, tab, kvl: (b, h, j)))
+        out_shape.append(jax.ShapeDtypeStruct((B, H, n_pmax), jnp.int32))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, n_pmax),
         in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((1, 1, hd, 1), lambda b, h, j, tab, kvl: (b, h, 0, j)),
-            pl.BlockSpec((1, 1, 1), lambda b, h, j, tab, kvl: (b, h, j)),
-            pl.BlockSpec((1, 1, 1), lambda b, h, j, tab, kvl: (b, h, j)),
-        ],
+        out_specs=out_specs,
     )
     return pl.pallas_call(
         functools.partial(_paged_decode_kernel, ps=ps,
-                          scale=1.0 / (hd ** 0.5), moduli=moduli),
+                          scale=1.0 / (hd ** 0.5), moduli=moduli,
+                          red_moduli=red_moduli, g=g),
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, H, hd, n_pmax), jnp.float32),
-            jax.ShapeDtypeStruct((B, H, n_pmax), jnp.float32),
-            jax.ShapeDtypeStruct((B, H, n_pmax), jnp.float32),
-        ],
+        out_shape=out_shape,
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,

@@ -222,10 +222,11 @@ def build_model(cfg: ArchConfig, *, system: str = "bns",
 
     if cfg.family in ("dense", "moe", "vlm"):
         def decode_paged(params, token, kv, block_tab, pos, *, page_size,
-                         cache_dtype=jnp.bfloat16):
+                         cache_dtype=jnp.bfloat16, with_syndrome=False):
             return tf_mod.lm_decode_paged(
                 params, cfg, token, kv, block_tab, pos, page_size=page_size,
-                dense_kw=dense_kw, cache_dtype=cache_dtype)
+                dense_kw=dense_kw, cache_dtype=cache_dtype,
+                with_syndrome=with_syndrome)
 
         def verify_paged(params, tokens, kv, block_tab, pos, *, page_size,
                          cache_dtype=jnp.bfloat16):

@@ -406,7 +406,8 @@ def paged_decode_attention(
     dense_kw: dict[str, Any] | None = None,
     apply_rope: bool = True,
     cache_dtype=jnp.bfloat16,
-) -> tuple[jax.Array, "nxkv.PagedKV"]:
+    with_syndrome: bool = False,
+):
     """One decode step over one layer's *paged* KV pool.
 
     x: (B, 1, D);  pos: **(B,) int32 per-slot positions** — under continuous
@@ -418,6 +419,9 @@ def paged_decode_attention(
     matches the dense prefill cache so decode-appended residue pages hold
     byte-identical content to prefill-scattered ones (prefix reuse relies on
     page bytes being a pure function of the token prefix).
+
+    ``with_syndrome=True`` (redundant residue formats) also returns the
+    layer's in-kernel KV syndrome count: ``(out, kv_layer, syn (B,))``.
     """
     dense_kw = dense_kw or {}
     B = x.shape[0]
@@ -436,9 +440,15 @@ def paged_decode_attention(
                                  v[:, 0].astype(cache_dtype), pages, offs)
     backend = _paged_backend(B, n_heads, n_pmax)
     o = nxattn.paged_decode(q[:, 0], kv_layer, block_tab, kv_len=pos + 1,
-                            page_size=page_size, backend=backend)
+                            page_size=page_size, backend=backend,
+                            syndrome=with_syndrome)
+    if with_syndrome:
+        o, syn = o
     out = o.astype(q.dtype).reshape(B, 1, n_heads * head_dim)
-    return linear.dense(params["wo"], out, **dense_kw), kv_layer
+    out = linear.dense(params["wo"], out, **dense_kw)
+    if with_syndrome:
+        return out, kv_layer, syn
+    return out, kv_layer
 
 
 def paged_verify_attention(

@@ -575,7 +575,8 @@ def lm_decode_paged(
     page_size: int,
     dense_kw: dict[str, Any] | None = None,
     cache_dtype=jnp.bfloat16,
-) -> tuple[jax.Array, Any]:
+    with_syndrome: bool = False,
+):
     """One decode step against the *paged* KV pool (dense/moe/vlm families).
 
     token: (B, 1) int32;  kv: :class:`~repro.numerics.kv_pages.PagedKV` with
@@ -586,6 +587,11 @@ def lm_decode_paged(
     exactly like the dense cache (in-place update on the donated buffer);
     ResidueTensor pools carry their planes+scale leaves through the same
     scan untouched.
+
+    ``with_syndrome=True`` (redundant residue pools) stacks each layer's
+    in-kernel KV syndrome count off the scan: returns ``(logits, kv,
+    syn (B, L) int32)`` — the per-(slot, layer) fault map the serving
+    engine's escalation policy consumes.
     """
     from repro.numerics import kv_pages as kvp
 
@@ -605,9 +611,14 @@ def lm_decode_paged(
         x, kv = carry
         i, lp = inp
         lay = kvp.layer_slice(kv, i)
-        h, lay2 = attn_mod.paged_decode_attention(
+        att = attn_mod.paged_decode_attention(
             lp["attn"], rmsnorm(lp["attn_norm"], x), lay, block_tab, pos,
-            page_size=page_size, cache_dtype=cache_dtype, **akw)
+            page_size=page_size, cache_dtype=cache_dtype,
+            with_syndrome=with_syndrome, **akw)
+        if with_syndrome:
+            h, lay2, syn = att
+        else:
+            (h, lay2), syn = att, None
         kv = kvp.layer_update(kv, i, lay2)
         x = x + h
         h = rmsnorm(lp["mlp_norm"], x)
@@ -619,11 +630,13 @@ def lm_decode_paged(
             fn = (mlp_mod.gelu_mlp if cfg.mlp_type == "gelu"
                   else mlp_mod.swiglu)
             h = fn(lp["mlp"], h, dense_kw)
-        return (x + h, kv), None
+        return (x + h, kv), syn
 
-    (x, kv), _ = jax.lax.scan(
+    (x, kv), syns = jax.lax.scan(
         body, (x, kv), (jnp.arange(L, dtype=jnp.int32), params["layers"]))
     logits = _logits(params, cfg, x, dense_kw)
+    if with_syndrome:
+        return logits[:, 0], kv, syns.T        # (L, B) -> (B, L)
     return logits[:, 0], kv
 
 

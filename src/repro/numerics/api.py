@@ -121,8 +121,10 @@ def decode(t: ResidueTensor, *, check: bool = False) -> jax.Array:
     compared against the info-channel decode, and a single corrupted
     channel is reconstructed in-line (``ModuliSet.corrected_decode``) —
     the returned value equals the fault-free decode.  Supported for the
-    ``rns`` layout (redundant ``rns_pack`` pages are checked page-wise by
-    :func:`repro.numerics.kv_pages.verify_pages`); a no-op when the set
+    ``rns`` layout only; redundant ``rns_pack`` pages are checked
+    page-wise by :func:`repro.numerics.kv_pages.verify_pages`, and
+    ``check=True`` on any other redundant layout raises rather than
+    silently decoding without the redundancy row.  A no-op when the set
     carries no redundancy.
     """
     if not isinstance(t, ResidueTensor):
@@ -131,21 +133,35 @@ def decode(t: ResidueTensor, *, check: bool = False) -> jax.Array:
         cf = t._channel_first().astype(jnp.int32)
         codes = t.mset.corrected_decode(cf)
     else:
+        if check and t.mset.redundant:
+            raise ValueError(
+                f"decode(check=True) supports the 'rns' layout, got "
+                f"{t.layout!r}: witness channels of this layout are not "
+                "checked by plain decode (redundant rns_pack pages go "
+                "through kv_pages.verify_pages)")
         codes = t.to_int()
     if t.scale is not None:
         return codes.astype(jnp.float32) * t.scale
     return codes
 
 
-@functools.partial(jax.jit, static_argnames=("mset",))
-def _scrub_rns(planes, mset):
+def _scrub_rns_impl(planes, mset):
     cf = jnp.moveaxis(planes, -3, 0).astype(jnp.int32)
     fixed, det, cor = mset.correct(cf)
     fixed = jnp.moveaxis(fixed, 0, -3).astype(planes.dtype)
     return fixed, det.sum(), cor.sum()
 
 
-def scrub(t: ResidueTensor) -> tuple[ResidueTensor, int, int]:
+_scrub_rns = jax.jit(_scrub_rns_impl, static_argnames=("mset",))
+# donated variant for the overlapped scrub: the caller swaps the repaired
+# planes in immediately, so the stale input buffer can be consumed
+_scrub_rns_donated = jax.jit(_scrub_rns_impl, static_argnames=("mset",),
+                             donate_argnums=(0,))
+
+
+def scrub(
+    t: ResidueTensor, *, sync: bool = True, donate: bool = False
+) -> tuple[ResidueTensor, int, int]:
     """Verify and repair a redundant residue-resident tensor.
 
     Runs the syndrome check over every element of an ``rns``-layout tensor
@@ -154,17 +170,27 @@ def scrub(t: ResidueTensor) -> tuple[ResidueTensor, int, int]:
     host-int counts of inconsistent and repaired elements.  Tensors
     without redundancy return unchanged with zero counts.  This is the
     weight-plane scrub behind ``ServingEngine(scrub="decode")``.
+
+    ``sync=False`` returns device-scalar counts so the caller can overlap
+    the scrub with other dispatched work and read the counts later;
+    ``donate=True`` consumes the input planes buffer (only when the caller
+    drops ``t`` right away).
     """
     if not isinstance(t, ResidueTensor):
         raise TypeError(f"scrub expects a ResidueTensor, got {type(t)}")
     if t.mset.redundant == 0:
-        return t, 0, 0
+        return (t, 0, 0) if sync else (
+            t, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
     if t.layout != "rns":
         raise ValueError(
             f"scrub supports the 'rns' layout, got {t.layout!r} (redundant "
             "rns_pack pages go through kv_pages.verify_pages)")
-    fixed, det, cor = _scrub_rns(t.planes, t.mset)
-    return t._with_planes(fixed), int(det), int(cor)
+    fn = _scrub_rns_donated if donate else _scrub_rns
+    fixed, det, cor = fn(t.planes, t.mset)
+    t2 = t._with_planes(fixed)
+    if sync:
+        return t2, int(det), int(cor)
+    return t2, det, cor
 
 
 def _bounds(t: ResidueTensor, max_abs_a: int | None) -> tuple[int, int]:

@@ -149,27 +149,40 @@ register_impl("flash_decode", "ref", _decode_ref_impl)
 register_impl("flash_decode", "cost", _decode_ref_impl)
 
 
-# flash_paged_decode: (q, k_raw, v_raw, k_scale, v_scale, fmt, tab, kv_len,
-#                      page_size) -> (B, H, hd) f32
+# flash_paged_decode: (q, k_raw, v_raw, k_scale, v_scale, k_wit, v_wit,
+#                      fmt, tab, kv_len, page_size) -> (out (B, H, hd) f32,
+#                      syn (B,) int32 | None)
 # k_raw/v_raw are the unwrapped pool leaves: (P, ps, Kv, hd) cache dtype for
 # dense pages, (P, ps, Kv, hd/vpb) uint8 planes (+ (P, ps, Kv, 1) f32
-# scales) for residue pages.  fmt is the static KVFormat.
+# scales) for residue pages.  k_wit/v_wit are the redundant witness lanes
+# (P, ps, r, Kv, hd) uint8 when the caller asked for in-kernel syndrome
+# accumulation, else None.  fmt is the static KVFormat.
 
 def _paged_kernel_impl(interpret: bool):
-    def run(q, k_raw, v_raw, k_scale, v_scale, fmt, tab, kv_len, page_size):
-        # kernels read only the packed info byte; redundant witness lanes
-        # are stripped by the dispatcher and scrubbed at segment boundaries
+    def run(q, k_raw, v_raw, k_scale, v_scale, k_wit, v_wit, fmt, tab,
+            kv_len, page_size):
         moduli = fmt.mset.info_moduli if fmt.is_residue else None
-        o_p, m_p, l_p = flash_paged_decode_pallas(
+        if k_wit is None:
+            # syndrome-free hot path: witness lanes are stripped by the
+            # dispatcher and never reach the kernel
+            o_p, m_p, l_p = flash_paged_decode_pallas(
+                q, k_raw, v_raw, tab, kv_len, page_size=page_size,
+                k_scale=k_scale, v_scale=v_scale, moduli=moduli,
+                interpret=interpret)
+            return merge_decode_partials(o_p, m_p, l_p), None
+        o_p, m_p, l_p, syn = flash_paged_decode_pallas(
             q, k_raw, v_raw, tab, kv_len, page_size=page_size,
             k_scale=k_scale, v_scale=v_scale, moduli=moduli,
+            k_witness=k_wit, v_witness=v_wit,
+            red_moduli=fmt.mset.redundant_moduli,
             interpret=interpret)
-        return merge_decode_partials(o_p, m_p, l_p)
+        # nonzero only on GQA lead heads -> the sum counts each element once
+        return merge_decode_partials(o_p, m_p, l_p), syn.sum(axis=(1, 2))
     return run
 
 
-def _paged_ref_impl(q, k_raw, v_raw, k_scale, v_scale, fmt, tab, kv_len,
-                    page_size):
+def _paged_ref_impl(q, k_raw, v_raw, k_scale, v_scale, k_wit, v_wit, fmt,
+                    tab, kv_len, page_size):
     """Oracle: gather the page list into a dense cache, dequantize, attend."""
     B, n_pmax = tab.shape
 
@@ -183,7 +196,26 @@ def _paged_ref_impl(q, k_raw, v_raw, k_scale, v_scale, fmt, tab, kv_len,
     k = dense_of(k_raw, k_scale)
     v = dense_of(v_raw, v_scale)
     out = gqa_attention_ref(q[:, None], k, v, kv_len, causal=False)
-    return out[:, 0].astype(jnp.float32)
+    syn = None
+    if k_wit is not None:
+        syn = (_ref_syndrome(k_raw, k_wit, fmt, tab, kv_len, page_size)
+               + _ref_syndrome(v_raw, v_wit, fmt, tab, kv_len, page_size))
+    return out[:, 0].astype(jnp.float32), syn
+
+
+def _ref_syndrome(raw, wit, fmt, tab, kv_len, page_size):
+    """Mirror of the kernel's witness check: per-request mismatch count."""
+    B, n_pmax = tab.shape
+    vals = fmt.pack.decode(raw[tab].astype(jnp.int32))  # (B, np, ps, Kv, hd)
+    w = wit[tab].astype(jnp.int32)                      # (B, np, ps, r, Kv, hd)
+    mism = jnp.zeros(vals.shape, jnp.bool_)
+    for jw, m in enumerate(fmt.mset.redundant_moduli):
+        mism = mism | (jnp.remainder(
+            w[:, :, :, jw] - jnp.remainder(vals, m), m) != 0)
+    rows = (jnp.arange(n_pmax * page_size)
+            .reshape(1, n_pmax, page_size, 1, 1))
+    valid = rows < kv_len.reshape(B, 1, 1, 1, 1)
+    return jnp.sum(mism & valid, axis=(1, 2, 3, 4)).astype(jnp.int32)
 
 
 register_impl("flash_paged_decode", "pallas", _paged_kernel_impl(False))
@@ -305,7 +337,8 @@ def paged_decode(
     *,
     page_size: int,
     backend: str | None = None,
-) -> jax.Array:
+    syndrome: bool = False,
+) -> jax.Array | tuple[jax.Array, jax.Array]:
     """One-token split-KV attention over one layer's *paged* cache.
 
     The request's page list (``block_tab`` row) is walked by the kernel's
@@ -315,25 +348,42 @@ def paged_decode(
     q: (B, H, hd);  kv_layer: per-layer :class:`~repro.numerics.kv_pages.
     PagedKV` (no leading L axis);  block_tab: (B, n_pmax) int32;  kv_len:
     scalar or (B,) int32 logical prefix length.  Returns (B, H, hd) f32.
+
+    With ``syndrome=True`` (redundant residue formats only) the same pass
+    also checks every valid KV element against its stored witness residues
+    while the planes are in VMEM and returns ``(out, syn)`` where ``syn``
+    is the (B,) int32 count of mismatching elements — the in-kernel
+    replacement for a separate ``verify_pages`` sweep on the hot path.
     """
     B = q.shape[0]
     fmt = _kv.kv_format_of(kv_layer)
+    if syndrome and not (fmt.is_residue and fmt.redundant):
+        raise ValueError(
+            "syndrome=True requires a redundant residue KV format "
+            f"(e.g. 'rns8r'); got {fmt.name!r}")
+    k_wit = v_wit = None
     if fmt.is_residue:
         # lane 0 is always the packed info byte; redundant formats carry
-        # extra witness lanes that the attention kernels never touch
+        # extra witness lanes that ride along only under syndrome=True
         k_raw = jax.lax.index_in_dim(kv_layer.k.planes, 0, axis=-3,
                                      keepdims=False)
         v_raw = jax.lax.index_in_dim(kv_layer.v.planes, 0, axis=-3,
                                      keepdims=False)
         k_scale, v_scale = kv_layer.k.scale, kv_layer.v.scale
+        if syndrome:
+            k_wit = jax.lax.slice_in_dim(kv_layer.k.planes, 1,
+                                         1 + fmt.redundant, axis=-3)
+            v_wit = jax.lax.slice_in_dim(kv_layer.v.planes, 1,
+                                         1 + fmt.redundant, axis=-3)
     else:
         k_raw, v_raw = kv_layer.k, kv_layer.v
         k_scale = v_scale = None
     block_tab = jnp.asarray(block_tab, jnp.int32)
     kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
     impl = get_impl("flash_paged_decode", resolve_backend(backend))
-    return impl(q, k_raw, v_raw, k_scale, v_scale, fmt, block_tab, kv_len,
-                page_size)
+    out, syn = impl(q, k_raw, v_raw, k_scale, v_scale, k_wit, v_wit, fmt,
+                    block_tab, kv_len, page_size)
+    return (out, syn) if syndrome else out
 
 
 def paged_verify(

@@ -44,6 +44,7 @@ __all__ = [
     "quantize_to_format",
     "dequantize_page_values",
     "verify_pages",
+    "repair_pages",
     "append_token",
     "scatter_prefill",
     "layer_slice",
@@ -180,9 +181,8 @@ def dequantize_page_values(t: ResidueTensor) -> jax.Array:
     return t.to_int().astype(jnp.float32) * t.scale
 
 
-@functools.partial(jax.jit, static_argnames=("mset",))
-def _verify_packed(planes: jax.Array, mset: ModuliSet):
-    """Syndrome-check and repair redundant ``rns_pack`` planes.
+def _check_packed(planes: jax.Array, mset: ModuliSet):
+    """Syndrome-check and repair redundant ``rns_pack`` planes (elementwise).
 
     ``planes``: ``(..., 1 + r, Kv, hd)`` uint8 — lane 0 is the packed info
     byte, lanes 1..r the witness residues.  A flipped bit in a witness lane
@@ -191,7 +191,12 @@ def _verify_packed(planes: jax.Array, mset: ModuliSet):
     at once, so every syndrome fires — the value is then reconstructed
     from the witnesses alone (their product exceeds the info range, the
     ``make()`` condition) and lane 0 is re-encoded.  Returns
-    ``(fixed_planes, detected_count, corrected_count)``.
+    ``(fixed_planes, detected_mask, corrected_mask)`` — the masks are
+    per-element bools over the lane-collapsed value shape, so callers can
+    reduce them at whatever granularity they need (totals, per page, ...).
+    A detected-but-uncorrected element (``detected & ~corrected``) had
+    multiple faulty lanes and no in-range witness decode: a double fault
+    the code cannot fix.
     """
     fmt = mset.packed()
     lanes = jnp.moveaxis(planes, -3, 0).astype(jnp.int32)   # (1+r, ..., Kv, hd)
@@ -216,11 +221,45 @@ def _verify_packed(planes: jax.Array, mset: ModuliSet):
         out.append(jnp.where(witness_fault & syn[j], good, lanes[1 + j]))
     fixed = jnp.moveaxis(jnp.stack(out, axis=0), 0, -3).astype(jnp.uint8)
     corrected = witness_fault | byte_fault
-    return fixed, detected.sum(), corrected.sum()
+    return fixed, detected, corrected
 
 
-def verify_pages(t: ResidueTensor) -> tuple[ResidueTensor, int, int]:
-    """Verify + repair a redundant residue page pool (host-sync counts).
+def _verify_packed_impl(planes: jax.Array, mset: ModuliSet):
+    fixed, det, cor = _check_packed(planes, mset)
+    return fixed, det.sum(), cor.sum()
+
+
+_verify_packed = jax.jit(_verify_packed_impl, static_argnames=("mset",))
+# the donated variant consumes the input planes buffer — for the overlapped
+# scrub pass, which immediately replaces the pool leaf with the fixed one
+_verify_packed_donated = jax.jit(_verify_packed_impl,
+                                 static_argnames=("mset",),
+                                 donate_argnums=(0,))
+
+
+@functools.partial(jax.jit, static_argnames=("mset",))
+def _verify_packed_pages(planes: jax.Array, mset: ModuliSet):
+    """Page-granular verify: counts keep the two leading (layer, page) axes.
+
+    ``planes``: ``(nl, np, ps, 1 + r, Kv, hd)`` uint8 — any slice of the
+    pool with layers and pages leading.  Returns ``(fixed, detected,
+    corrected, uncorrectable)`` with (nl, np) int32 per-page element
+    counts; ``uncorrectable`` counts double faults the code detected but
+    could not repair (those pages must be escalated, not trusted).
+    """
+    fixed, det, cor = _check_packed(planes, mset)
+    axes = tuple(range(2, det.ndim))
+    unc = det & ~cor
+    return (fixed,
+            det.sum(axes).astype(jnp.int32),
+            cor.sum(axes).astype(jnp.int32),
+            unc.sum(axes).astype(jnp.int32))
+
+
+def verify_pages(
+    t: ResidueTensor, *, sync: bool = True, donate: bool = False
+) -> tuple[ResidueTensor, int, int]:
+    """Verify + repair a redundant residue page pool.
 
     The page-side half of the scrub-on-decode policy: K or V pools in the
     ``rns8r`` format are syndrome-checked lane-wise and any single faulty
@@ -228,13 +267,51 @@ def verify_pages(t: ResidueTensor) -> tuple[ResidueTensor, int, int]:
     reconstructed.  Returns ``(fixed, detected, corrected)`` with host-int
     element counts.  Non-redundant pools return unchanged with zeros.
     The f32 scale lane is not covered (it is not residue-coded).
+
+    ``sync=False`` returns the counts as device scalars instead of host
+    ints — the overlapped-scrub path dispatches the pass and reads the
+    counts after the next decode segment is already enqueued, so the check
+    never serializes with decode.  ``donate=True`` additionally donates the
+    input planes buffer (only safe when the caller drops ``t``).
     """
     if not isinstance(t, ResidueTensor) or t.layout != "rns_pack":
         raise TypeError("verify_pages expects an rns_pack ResidueTensor")
     if t.mset.redundant == 0:
-        return t, 0, 0
-    fixed, det, cor = _verify_packed(t.planes, t.mset)
-    return dataclasses.replace(t, planes=fixed), int(det), int(cor)
+        return (t, 0, 0) if sync else (
+            t, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    fn = _verify_packed_donated if donate else _verify_packed
+    fixed, det, cor = fn(t.planes, t.mset)
+    t2 = dataclasses.replace(t, planes=fixed)
+    if sync:
+        return t2, int(det), int(cor)
+    return t2, det, cor
+
+
+def repair_pages(
+    t: ResidueTensor, layers, pages
+):
+    """Targeted verify + repair of specific (layer, page) pool entries.
+
+    The escalation path after a nonzero in-kernel syndrome: instead of
+    sweeping the whole pool, slice out the flagged ``layers`` x ``pages``
+    rectangle, run the CRT repair there, and scatter the fixed planes
+    back.  Returns ``(fixed_tensor, detected, corrected, uncorrectable)``
+    where the counts are host ``(len(layers), len(pages))`` int arrays —
+    the exact per-page fault ledger the engine's quarantine policy needs.
+    """
+    import numpy as np
+
+    if not isinstance(t, ResidueTensor) or t.layout != "rns_pack":
+        raise TypeError("repair_pages expects an rns_pack ResidueTensor")
+    if t.mset.redundant == 0:
+        raise ValueError("repair_pages needs a redundant moduli set")
+    layers = jnp.asarray(layers, jnp.int32)
+    pages = jnp.asarray(pages, jnp.int32)
+    sub = t.planes[layers[:, None], pages[None, :]]
+    fixed, det, cor, unc = _verify_packed_pages(sub, t.mset)
+    planes = t.planes.at[layers[:, None], pages[None, :]].set(fixed)
+    return (dataclasses.replace(t, planes=planes),
+            np.asarray(det), np.asarray(cor), np.asarray(unc))
 
 
 # -- per-token append / prefill scatter ---------------------------------------

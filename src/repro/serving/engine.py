@@ -84,6 +84,11 @@ class SegmentResult:
     counts: np.ndarray | None = None
     proposed: int = 0    # draft tokens proposed this segment (spec only)
     accepted: int = 0    # ... accepted by the greedy verify rule
+    # (B,) bool under policy="strict": slots holding an unrepairable page —
+    # their tokens this segment are untrusted and must be discarded; the
+    # scheduler re-admits the request (prompt + previously emitted tokens)
+    # through prefill instead of emitting corrupt output
+    needs_recompute: np.ndarray | None = None
 
 
 class ServingEngine:
@@ -92,7 +97,8 @@ class ServingEngine:
                  fused_loop: bool = True, paged: bool | None = None,
                  page_size: int = 64, kv_format: str = "bf16",
                  num_pages: int | None = None, prefix_cache: bool = True,
-                 scrub: str = "off", spec=None):
+                 scrub: str = "off", spec=None, policy: str = "off",
+                 quarantine_after: int = 3):
         """``prepare=True`` makes quantized weights residue-resident up
         front (identity under the bns backend); ``prepare=False`` keeps the
         convert-per-call path — useful only as a baseline to measure the
@@ -134,7 +140,23 @@ class ServingEngine:
         batched paged step inside the same single-dispatch fused loop,
         and greedy acceptance emits the longest agreed prefix —
         bit-identical tokens, fewer target steps.  Requires the paged
-        fused loop and greedy sampling."""
+        fused loop and greedy sampling.
+
+        ``policy=`` turns on the fault-escalation layer (DESIGN.md §15)
+        over redundant KV pages (``kv_format="rns8r"``): the paged decode
+        kernel accumulates a per-(slot, layer) *syndrome count* as an
+        extra reduction output — integrity checking rides the decode hot
+        path for free, with no separate ``verify_pages`` sweep.  Nonzero
+        syndromes escalate: ``"detect"`` only counts them
+        (``stats.faults.syndromes``); ``"correct"`` additionally runs a
+        *targeted* page repair on the flagged (slot, layer) pages and
+        replays the segment from repaired state (single faults produce
+        bit-identical tokens); ``"strict"`` further quarantines pages
+        that fail repair or re-fault ``quarantine_after`` times (sticky
+        cells leave the free list for good) and flags requests holding an
+        unrepairable page for *recompute* — corrupt tokens are never
+        emitted.  Needs the paged fused loop; not supported with
+        ``spec=``."""
         self.model = model
         self.params = model.prepare_params(params) if prepare else params
         self.prepared = prepare
@@ -218,6 +240,33 @@ class ServingEngine:
                                        donate_argnums=(2, 3))
             self.stats.spec = SpecStats()
 
+        if policy not in ("off", "detect", "correct", "strict"):
+            raise ValueError(
+                f"policy must be 'off', 'detect', 'correct' or 'strict', "
+                f"got {policy!r}")
+        if policy != "off":
+            if not (self.paged and self.pool.fmt.is_residue
+                    and self.pool.fmt.redundant):
+                raise ValueError(
+                    "policy= needs paged serving with a redundant KV page "
+                    "format (kv_format='rns8r') — the in-kernel syndrome "
+                    "reduction reads the witness lanes")
+            if spec is not None:
+                raise ValueError(
+                    "policy= is not supported with speculative decoding "
+                    "(the spec verify loop is syndrome-free)")
+        if quarantine_after < 1:
+            raise ValueError(
+                f"quarantine_after must be >= 1, got {quarantine_after}")
+        self.policy = policy
+        self._quarantine_after = quarantine_after
+        # bound on repair->replay rounds within one segment before residual
+        # faults escalate (recompute under "strict", counted under
+        # "correct"); sticky cells re-fault every round, so this also caps
+        # the time to quarantine at one segment
+        self._fault_max_replays = max(2, quarantine_after)
+        self._last_recompute = np.zeros(batch, bool)
+
     # legacy counter attributes (see repro.serving.stats)
     decode_steps = deprecated_stat("ServingEngine", "decode_steps")
     decode_dispatches = deprecated_stat("ServingEngine", "decode_dispatches")
@@ -278,16 +327,21 @@ class ServingEngine:
 
     # -- redundant-residue scrub (DESIGN.md §12) -----------------------------
 
-    def _scrub_pass(self) -> tuple[int, int]:
-        """Syndrome-check + repair all redundant residue state in place.
+    def _scrub_launch(self) -> list:
+        """Dispatch the scrub pass *without* host-syncing its counts.
 
         Walks the resident parameter tree (redundant ``rns`` weight planes
         via :func:`repro.numerics.scrub`) and the paged KV pool (redundant
-        page formats via :func:`repro.numerics.kv_pages.verify_pages`).
-        Returns the ``(detected, corrected)`` element counts of this pass
-        and folds them into ``stats.faults``.  No-op unless
-        ``scrub="decode"`` / ``"rotate:k"`` and some state actually
-        carries redundancy.
+        page formats via :func:`repro.numerics.kv_pages.verify_pages`),
+        swapping each unit's repaired (donated) device arrays in
+        immediately and collecting the ``(detected, corrected)`` *device
+        scalars* of every launched pass.  The decode dispatch that follows
+        consumes the repaired arrays, so the device orders scrub before
+        decode through plain data dependencies — but the host never blocks
+        between the two: the counts are read by :meth:`_drain_scrub` after
+        the decode segment is already enqueued.  (The old in-line scrub
+        host-synced its counts before every dispatch, serializing scrub
+        with decode.)
 
         Under ``rotate:k`` the scrubbable units — each redundant weight
         plane, plus the K and V page pools — are numbered in a fixed
@@ -297,11 +351,11 @@ class ServingEngine:
         the per-dispatch cost (gated in BENCH_fault.json).
         """
         if self.scrub == "off":
-            return 0, 0
+            return []
         groups = self._scrub_groups          # 0 => scrub everything
         active = self._scrub_cursor % groups if groups else 0
         unit = 0
-        det = cor = 0
+        pending = []                         # (det, cor) device scalars
         scrubbed_weights = False
 
         def due() -> bool:
@@ -311,12 +365,11 @@ class ServingEngine:
             return mine
 
         def fix(t):
-            nonlocal det, cor, scrubbed_weights
+            nonlocal scrubbed_weights
             if (isinstance(t, ResidueTensor) and t.layout == "rns"
                     and t.mset.redundant and due()):
-                t, d, c = nx.scrub(t)
-                det += d
-                cor += c
+                t, d, c = nx.scrub(t, sync=False, donate=True)
+                pending.append((d, c))
                 scrubbed_weights = True
             return t
 
@@ -331,23 +384,42 @@ class ServingEngine:
             k_pool, v_pool = kv.k, kv.v
             scrubbed_kv = False
             if due():
-                k_pool, dk, ck = kvp.verify_pages(k_pool)
-                det += dk
-                cor += ck
+                k_pool, dk, ck = kvp.verify_pages(k_pool, sync=False,
+                                                  donate=True)
+                pending.append((dk, ck))
                 scrubbed_kv = True
             if due():
-                v_pool, dv, cv = kvp.verify_pages(v_pool)
-                det += dv
-                cor += cv
+                v_pool, dv, cv = kvp.verify_pages(v_pool, sync=False,
+                                                  donate=True)
+                pending.append((dv, cv))
                 scrubbed_kv = True
             if scrubbed_kv:
                 self.pool.kv = kvp.PagedKV(k_pool, v_pool)
                 self.stats.faults.kv_scrubs += 1
         if groups:
             self._scrub_cursor += 1
+        return pending
+
+    def _drain_scrub(self, pending: list) -> tuple[int, int]:
+        """Host-sync the launched scrub counts and fold them into stats."""
+        det = cor = 0
+        for d, c in pending:
+            det += int(d)
+            cor += int(c)
         self.stats.faults.detected += det
         self.stats.faults.corrected += cor
         return det, cor
+
+    def _scrub_pass(self) -> tuple[int, int]:
+        """Synchronous scrub: launch + drain in one call.
+
+        Returns the ``(detected, corrected)`` element counts of this pass.
+        No-op unless ``scrub="decode"`` / ``"rotate:k"`` and some state
+        actually carries redundancy.  The dispatch path uses the split
+        :meth:`_scrub_launch` / :meth:`_drain_scrub` pair instead, so the
+        scrub overlaps with the decode segment.
+        """
+        return self._drain_scrub(self._scrub_launch())
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -552,9 +624,21 @@ class ServingEngine:
         (already exclusive) pages or the dump page, and the scheduler
         truncates their rows on the host — this keeps the loop's sampled
         token stream bit-identical to the dense fused loop.
+
+        Under a fault ``policy`` every decode step also emits the
+        in-kernel per-(slot, layer) KV syndrome counts; the carry folds
+        steps together with ``jnp.maximum`` (a persistent fault is
+        re-counted by every step that reads it — max, not sum, keeps the
+        count equal to the number of faulty elements) and the segment
+        returns the ``(B, L)`` map for the escalation layer.  Without a
+        policy the syndrome output is constant zeros and the decode step
+        runs syndrome-free.
         """
         B = tok0.shape[0]
+        L = self.model.cfg.n_layers
         buf0 = jnp.zeros((B, seg_cap), jnp.int32)
+        syn0 = jnp.zeros((B, L), jnp.int32)
+        with_syn = self.policy != "off"
         done0 = (done_in | ((eos >= 0) & (tok0[:, 0] == eos))
                  | (remaining <= 0))
         fin0 = done0
@@ -571,22 +655,30 @@ class ServingEngine:
             return jnp.logical_not(st[1])
 
         def body(st):
-            i, _, tok, kv, done, buf, steps = st
-            logits, kv2 = self.model.decode_paged(
-                params, tok, kv, tab, pos0 + i,
-                page_size=self.page_size, cache_dtype=self.cache_dtype)
+            i, _, tok, kv, done, buf, steps, syn = st
+            if with_syn:
+                logits, kv2, syn_i = self.model.decode_paged(
+                    params, tok, kv, tab, pos0 + i,
+                    page_size=self.page_size, cache_dtype=self.cache_dtype,
+                    with_syndrome=True)
+                syn = jnp.maximum(syn, syn_i)
+            else:
+                logits, kv2 = self.model.decode_paged(
+                    params, tok, kv, tab, pos0 + i,
+                    page_size=self.page_size, cache_dtype=self.cache_dtype)
             tok2 = sample(logits, key_base + i + 1)
             buf = jax.lax.dynamic_update_slice(buf, tok2, (0, i))
             done = (done | ((eos >= 0) & (tok2[:, 0] == eos))
                     | (i + 1 >= remaining))
             halt = (jnp.all(done) | (i + 1 >= seg)
                     | (stop_flag & jnp.any(done & ~fin0)))
-            return (i + 1, halt, tok2, kv2, done, buf, steps + 1)
+            return (i + 1, halt, tok2, kv2, done, buf, steps + 1, syn)
 
         init = (jnp.int32(0), jnp.all(done0) | (seg <= 0), tok0, kv,
-                done0, buf0, jnp.int32(0))
-        i, _, _, kv, done, buf, steps = jax.lax.while_loop(cond, body, init)
-        return buf, i, steps, kv, done
+                done0, buf0, jnp.int32(0), syn0)
+        (i, _, _, kv, done, buf, steps,
+         syn) = jax.lax.while_loop(cond, body, init)
+        return buf, i, steps, kv, done, syn
 
     # -- speculative decode loop (DESIGN.md §13) -----------------------------
 
@@ -676,7 +768,11 @@ class ServingEngine:
                              "acceptance only; run with temperature=0")
         cap = self._pick_bucket("spec" if self._drafter is not None
                                 else "paged", seg)
-        self._last_scrub = self._scrub_pass()
+        # scrub is *launched* (repaired arrays swapped in, counts left on
+        # device) and drained only after the decode dispatch is enqueued —
+        # the device orders scrub before decode via the data dependency,
+        # the host never blocks between them (DESIGN.md §15)
+        scrub_pending = self._scrub_launch()
         eos_dev = jnp.asarray(np.clip(eos_vec, -1, 2**31 - 1), jnp.int32)
         if self._drafter is not None:
             buf, cnt, steps, kv, dstate, done, prop, acc = self._fused_spec(
@@ -690,6 +786,8 @@ class ServingEngine:
             self.pool.kv = kv          # donated in, aliased out
             self._spec_state = dstate  # ditto (drafter KV / history)
             self._note_fused_dispatch(cap)
+            self._last_scrub = self._drain_scrub(scrub_pending)
+            self._last_recompute = np.zeros(tok0.shape[0], bool)
             counts = np.asarray(cnt)   # the single host sync of the segment
             steps, prop, acc = int(steps), int(prop), int(acc)
             n = int(counts.max()) if counts.size else 0
@@ -704,19 +802,33 @@ class ServingEngine:
             sp.blocks += prop // self._drafter.k
             return (np.asarray(buf)[:, :n], steps, np.asarray(done),
                     counts, prop, acc)
-        buf, n, steps, kv, done = self._fused_paged(
-            self.params, tok0, self.pool.kv,
-            jnp.asarray(tabs, jnp.int32),
-            jnp.asarray(pos0, jnp.int32), eos_dev,
-            jnp.asarray(done0),
-            jnp.asarray(remaining, jnp.int32),
-            jnp.float32(temperature),
-            key if key is not None else jax.random.PRNGKey(0),
-            jnp.int32(seg), jnp.int32(key_base),
-            jnp.bool_(stop_on_finish),
-            seg_cap=cap, greedy=greedy)
+        tab_dev = jnp.asarray(tabs, jnp.int32)
+        pos_dev = jnp.asarray(pos0, jnp.int32)
+        done_dev = jnp.asarray(done0)
+        rem_dev = jnp.asarray(remaining, jnp.int32)
+        key_dev = key if key is not None else jax.random.PRNGKey(0)
+
+        def run_once():
+            # same operands every time: a replay after an in-place page
+            # repair recomputes the segment bit-identically to a fault-free
+            # run (the in-kernel syndrome fires *after* the faulty read, so
+            # the first run's tokens are untrusted once syn != 0)
+            return self._fused_paged(
+                self.params, tok0, self.pool.kv, tab_dev, pos_dev, eos_dev,
+                done_dev, rem_dev, jnp.float32(temperature), key_dev,
+                jnp.int32(seg), jnp.int32(key_base),
+                jnp.bool_(stop_on_finish), seg_cap=cap, greedy=greedy)
+
+        buf, n, steps, kv, done, syn = run_once()
         self.pool.kv = kv      # donated in, aliased out
         self._note_fused_dispatch(cap)
+        self._last_scrub = self._drain_scrub(scrub_pending)
+        if self.policy != "off":
+            buf, n, steps, done, recompute = self._fault_escalate(
+                run_once, buf, n, steps, done, syn, np.asarray(tabs))
+        else:
+            recompute = np.zeros(tok0.shape[0], bool)
+        self._last_recompute = recompute
         n = int(n)             # the single host sync of the segment
         steps = int(steps)
         self.stats.decode_steps += steps
@@ -724,6 +836,112 @@ class ServingEngine:
         self._sync_fallback_gathers()
         counts = np.full(tok0.shape[0], steps, np.int64)
         return np.asarray(buf)[:, :n], steps, np.asarray(done), counts, 0, 0
+
+    # -- fault-domain escalation (DESIGN.md §15) -----------------------------
+
+    def _fault_repair(self, layers, tabs_np, slots) -> dict[int, list[int]]:
+        """Targeted verify/repair of the pages the flagged slots hold.
+
+        Slices the flagged ``layers`` x pages rectangle out of both page
+        pools, runs the CRT repair there (``kv_pages.repair_pages``), and
+        scatters the fixed planes back.  Folds element counts into
+        ``stats.faults`` and returns the per-page ledger
+        ``{page_id: [detected, uncorrectable]}`` for pages that showed any
+        fault.  (The fault-injection harness wraps this method to model
+        sticky cells: it re-flips its bit after every repair.)
+        """
+        pool = self.pool
+        pages = sorted({int(p) for s in slots for p in tabs_np[s] if p})
+        layers = sorted(int(la) for la in layers)
+        ledger: dict[int, list[int]] = {}
+        if not pages or not layers:
+            return ledger
+        new = {}
+        for name, t in (("k", pool.kv.k), ("v", pool.kv.v)):
+            t2, det, cor, unc = kvp.repair_pages(t, layers, pages)
+            new[name] = t2
+            self.stats.faults.detected += int(det.sum())
+            self.stats.faults.corrected += int(cor.sum())
+            self.stats.faults.uncorrected += int(unc.sum())
+            page_det = det.sum(axis=0)
+            page_unc = unc.sum(axis=0)
+            for i, pid in enumerate(pages):
+                if page_det[i]:
+                    rec = ledger.setdefault(pid, [0, 0])
+                    rec[0] += int(page_det[i])
+                    rec[1] += int(page_unc[i])
+        pool.kv = kvp.PagedKV(new["k"], new["v"])
+        return ledger
+
+    def _fault_escalate(self, run_once, buf, n, steps, done, syn, tabs_np):
+        """Escalate nonzero in-kernel syndromes: detect -> correct ->
+        quarantine -> recompute.
+
+        ``syn`` is the segment's ``(B, L)`` per-(slot, layer) faulty-element
+        map.  Clean segments (the overwhelmingly common case) host-read one
+        small int32 array and return immediately — no repair pass, no
+        standalone ``verify_pages`` sweep on the hot path.
+
+        Escalation rounds (``policy="correct"``/``"strict"``): repair the
+        flagged slots' pages at the flagged layers, charge each faulty page
+        one strike (``pool.note_fault``), quarantine pages that failed
+        repair (double faults) or reached ``quarantine_after`` strikes, and
+        replay the segment from repaired state — bit-identical to a
+        fault-free run when the repair stuck.  Slots holding an
+        unrepairable page are flagged for recompute under ``"strict"``
+        (their tokens are discarded by the caller, never emitted); rounds
+        are bounded by ``_fault_max_replays``, after which residual dirty
+        slots escalate to recompute as well.
+        """
+        pool = self.pool
+        B = tabs_np.shape[0]
+        recompute = np.zeros(B, bool)
+        syn_np = np.asarray(syn)
+        total = int(syn_np.sum())
+        if total == 0:
+            return buf, n, steps, done, recompute
+        self.stats.faults.syndromes += total
+        if self.policy == "detect":
+            return buf, n, steps, done, recompute
+        replays = 0
+        while True:
+            flagged = [s for s in np.nonzero(syn_np.sum(axis=1))[0]
+                       if not recompute[s]]
+            if not flagged:
+                break
+            layers = np.nonzero(syn_np.sum(axis=0))[0]
+            ledger = self._fault_repair(layers, tabs_np, flagged)
+            for pid, (det, unc) in sorted(ledger.items()):
+                strikes = pool.note_fault(pid)
+                if unc or strikes >= self._quarantine_after:
+                    if pool.quarantine(pid):
+                        self.stats.faults.pages_quarantined += 1
+                        logger.warning(
+                            "KV page %d quarantined (%d strike(s), %d "
+                            "uncorrectable element(s))", pid, strikes, unc)
+                    if self.policy == "strict":
+                        for s in range(B):
+                            if pid in tabs_np[s]:
+                                recompute[s] = True
+            if recompute.all():
+                break
+            if replays >= self._fault_max_replays:
+                # residual dirty slots: repairs did not stick within the
+                # round budget — never emit their tokens under "strict"
+                if self.policy == "strict":
+                    for s in flagged:
+                        recompute[s] = True
+                break
+            buf, n, steps, kv, done, syn = run_once()
+            self.pool.kv = kv
+            self.stats.faults.replays += 1
+            replays += 1
+            syn_np = np.asarray(syn)
+            fresh = int(syn_np.sum())
+            if fresh == 0:
+                break
+            self.stats.faults.syndromes += fresh
+        return buf, n, steps, done, recompute
 
     def _generate_paged(self, tok, cache, prompt_len, max_new, temperature,
                         key, eos, active, prefill_logits) -> GenerateResult:
@@ -764,10 +982,31 @@ class ServingEngine:
         # tok0 is recorded on the host; the device segment emits the rest.
         # remaining = max_new - 1 further tokens; seg bounds the segment at
         # the same count, so steps/halting match the dense loop exactly.
-        buf, steps, _, counts, prop, acc = self._dispatch_segment(
-            tok, np.full(B, prompt_len, np.int32), eos_vec, done0,
-            np.full(B, max_new - 1, np.int32), tab_dev,
-            max_new - 1, temperature, key, 0, False, greedy)
+        recomputes = 0
+        while True:
+            buf, steps, _, counts, prop, acc = self._dispatch_segment(
+                tok, np.full(B, prompt_len, np.int32), eos_vec, done0,
+                np.full(B, max_new - 1, np.int32), tab_dev,
+                max_new - 1, temperature, key, 0, False, greedy)
+            if not (self.policy == "strict" and self._last_recompute.any()
+                    and recomputes < 2):
+                break
+            # recompute: slots held an unrepairable (now quarantined) page.
+            # Release everything, re-allocate from the shrunk free list, and
+            # re-scatter the surviving dense prefill cache (self._scatter
+            # donates only the pool, so `cache` is still alive) — the retry
+            # recomputes all tokens from position 0, bit-identical to a
+            # fault-free run on healthy pages.
+            recomputes += int(self._last_recompute.sum())
+            self.stats.faults.recomputes += int(self._last_recompute.sum())
+            for p in slot_pages:
+                pool.release(p)
+            slot_pages = [pool.alloc(n_pages) for _ in range(B)]
+            tabs = np.stack([pool.tab_row(p, self.n_pmax)
+                             for p in slot_pages])
+            tab_dev = jnp.asarray(tabs)
+            pool.kv = self._scatter(pool.kv, cache.k, cache.v, tab_dev,
+                                    page_size=self.page_size)
         tokens = np.concatenate([np.asarray(tok), buf], axis=1)
         for p in slot_pages:
             pool.release(p)
@@ -786,7 +1025,7 @@ class ServingEngine:
                                  - a0.pages_allocated),
                 pages_freed=pool.stats.pages_freed - a0.pages_freed,
                 faults_detected=f_det, faults_corrected=f_cor,
-                spec=spec_stats))
+                recomputes=recomputes, spec=spec_stats))
 
     # -- continuous-batching admission / segment API -------------------------
 
@@ -882,7 +1121,8 @@ class ServingEngine:
         f_det, f_cor = self._last_scrub
         return SegmentResult(tokens=buf, steps=steps, done=done,
                              faults_detected=f_det, faults_corrected=f_cor,
-                             counts=counts, proposed=prop, accepted=acc)
+                             counts=counts, proposed=prop, accepted=acc,
+                             needs_recompute=self._last_recompute.copy())
 
     @staticmethod
     def _sample(logits: jax.Array, temperature: float,

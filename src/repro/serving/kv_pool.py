@@ -81,17 +81,27 @@ class KVPagePool:
         self.kv = kvp.make_paged_kv(n_layers, num_pages, page_size, n_kv,
                                     head_dim, fmt=self.fmt, dtype=dtype)
         self.stats = _PoolStats()
+        # quarantine models *sticky hardware* faults: it survives reset()
+        # (the physical page is still bad after the allocator forgets
+        # everything else) and quarantined pages never re-enter the free list
+        self._quarantined: set[int] = set()
+        self._fault_counts: dict[int, int] = {}
         self._init_host_state()
 
     def _init_host_state(self) -> None:
-        self._free: list[int] = list(range(self.num_pages - 1, 0, -1))
+        self._free: list[int] = [p for p in range(self.num_pages - 1, 0, -1)
+                                 if p not in self._quarantined]
         self._ref = np.zeros(self.num_pages, np.int64)
         self._prefix: dict[tuple, int] = {}        # token-prefix -> page
         self._page_key: dict[int, tuple] = {}      # page -> its prefix key
         self._logits: dict[tuple, np.ndarray] = {}  # full prompt -> logits
 
     def reset(self) -> None:
-        """Drop all host allocator state (device bytes just go stale)."""
+        """Drop all host allocator state (device bytes just go stale).
+
+        Quarantined pages stay quarantined — the model is a sticky hardware
+        fault, which a host-state reset does not repair.
+        """
         self._init_host_state()
 
     # -- allocation ----------------------------------------------------------
@@ -108,7 +118,9 @@ class KVPagePool:
             pid = next((p for p in self._page_key if self._ref[p] == 0),
                        None)
             if pid is None:
-                raise RuntimeError("KV page pool exhausted")
+                extra = (f" ({len(self._quarantined)} pages quarantined)"
+                         if self._quarantined else "")
+                raise RuntimeError(f"KV page pool exhausted{extra}")
             self._evict(pid)
         self._ref[pid] = 1
         self.stats.pages_allocated += 1
@@ -133,8 +145,42 @@ class KVPagePool:
             if self._ref[pid] > 0:
                 continue
             self.stats.pages_freed += 1
-            if pid not in self._page_key:
+            if pid not in self._page_key and pid not in self._quarantined:
                 self._free.append(pid)
+
+    # -- fault escalation ----------------------------------------------------
+
+    @property
+    def quarantined_pages(self) -> frozenset[int]:
+        return frozenset(self._quarantined)
+
+    def note_fault(self, pid: int) -> int:
+        """Record one detected fault on a page; returns its running count.
+
+        The engine's escalation policy quarantines a page once its count
+        reaches ``quarantine_after`` — a page that keeps re-faulting after
+        repair is a sticky cell, not a transient upset.
+        """
+        n = self._fault_counts.get(pid, 0) + 1
+        self._fault_counts[pid] = n
+        return n
+
+    def quarantine(self, pid: int) -> bool:
+        """Permanently retire a page from the pool.
+
+        The page is dropped from the free list and the prefix cache; any
+        live holder keeps its reference (the engine recomputes those
+        requests), but once released the page never comes back.  Returns
+        True if the page was newly quarantined.
+        """
+        if pid == 0 or pid in self._quarantined:
+            return False
+        self._quarantined.add(pid)
+        if pid in self._free:
+            self._free.remove(pid)
+        if pid in self._page_key:
+            self._evict(pid)
+        return True
 
     # -- admission -----------------------------------------------------------
 

@@ -94,6 +94,13 @@ class RequestScheduler:
         cap = eng.n_pmax * eng.page_size      # per-request KV capacity
         slots: dict[int, _Slot] = {}
         finished: list[Request] = []
+        # recompute resume prefixes: tokens a request had already (trustedly)
+        # emitted before an unrepairable fault forced its pages to be dropped.
+        # On re-admission the prefix rides the prompt through prefill, so the
+        # request resumes exactly where it left off — bit-identical to a
+        # fault-free run, because prefill logits match decode logits
+        # position-for-position.
+        resume: dict[int, list[int]] = {}
 
         def admit(free: list[int]) -> None:
             batch_toks: dict[int, np.ndarray] = {}
@@ -104,9 +111,16 @@ class RequestScheduler:
                     break
                 r = queue.pop(0)
                 pend[s] = r
-                batch_toks[s] = np.asarray(r.tokens, np.int32)
+                toks = np.asarray(r.tokens, np.int32)
+                resumed = resume.get(id(r))
+                if resumed:
+                    toks = np.concatenate(
+                        [toks, np.asarray(resumed, np.int32)])
+                batch_toks[s] = toks
                 # spec_lookahead: speculative verifies overshoot the last
                 # emitted row by up to k positions — reserve the headroom
+                # (the resumed prefix is part of max_new, so the bound is
+                # unchanged by recompute re-admissions)
                 batch_total[s] = min(
                     len(r.tokens) + r.max_new + eng.spec_lookahead, cap)
             if not pend:
@@ -114,15 +128,29 @@ class RequestScheduler:
             admitted = eng.admit_prefill(batch_toks, batch_total)
             for s, r in pend.items():
                 logits, info = admitted[s]
-                r.stats.pages_allocated = info.pages_allocated
-                r.stats.prefix_hits = info.prefix_hits
+                r.stats.pages_allocated += info.pages_allocated
+                r.stats.prefix_hits += info.prefix_hits
                 r.stats.prefill_skipped = info.cached_logits is not None
-                tok0 = int(np.argmax(logits))
-                slot = _Slot(req=r, emitted=[tok0],
+                resumed = resume.pop(id(r), None)
+                if resumed is None:
+                    emitted = [int(np.argmax(logits))]
+                else:
+                    # re-admission: the prefill only rebuilt the KV pages
+                    # for prompt + trusted prefix.  The next token must come
+                    # from a *decode* step over those (quantized) pages —
+                    # prefill logits attend over the full-precision prefill
+                    # cache, which under a lossy page format (rns8r) need
+                    # not argmax-match the paged decode the clean run took
+                    # at this position.  Seeding the slot with the resumed
+                    # prefix (and no prefill-sampled token) makes the next
+                    # segment retrace the decode path bit-identically.
+                    emitted = list(resumed)
+                tok0 = emitted[-1]
+                slot = _Slot(req=r, emitted=emitted,
                              tab=eng.pool.tab_row(info.pages, eng.n_pmax),
                              pages=info.pages)
                 if (r.eos is not None and tok0 == r.eos) \
-                        or r.max_new <= 1:
+                        or len(slot.emitted) >= r.max_new:
                     retire(slot)          # finished on the prefill token
                 else:
                     slots[s] = slot
@@ -166,6 +194,22 @@ class RequestScheduler:
             res = eng.paged_segment(
                 tok0, pos0, remaining, eos_vec, done0, tabs,
                 seg=seg, stop_on_finish=bool(queue))
+            if res.needs_recompute is not None and res.needs_recompute.any():
+                # strict fault policy: these slots held a page that could not
+                # be repaired — the segment's tokens for them are untrusted.
+                # Discard them, drop the pages (quarantined ones never return
+                # to the free list) and re-admit prompt + trusted prefix
+                # through prefill at the head of the queue.
+                for s in list(slots):
+                    if not res.needs_recompute[s]:
+                        continue
+                    sl = slots.pop(s)
+                    r = sl.req
+                    eng.pool.release(sl.pages)
+                    resume[id(r)] = list(sl.emitted)
+                    r.stats.recomputes += 1
+                    eng.stats.faults.recomputes += 1
+                    queue.insert(0, r)
             for s, sl in list(slots.items()):
                 r = sl.req
                 # per-slot counts: speculative segments advance slots by

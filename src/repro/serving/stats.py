@@ -42,6 +42,14 @@ class FaultStats:
     corrected: int = 0       # faulty channels reconstructed (elements)
     weight_scrubs: int = 0   # scrub passes over resident weight planes
     kv_scrubs: int = 0       # scrub passes over resident KV pages
+    # escalation-policy counters (DESIGN.md §15)
+    syndromes: int = 0           # faulty elements flagged by the in-kernel
+    #                              syndrome reduction (pre-repair)
+    uncorrected: int = 0         # detected-but-uncorrectable elements left
+    #                              in place (policy="detect"/"correct")
+    replays: int = 0             # decode segments replayed after a repair
+    recomputes: int = 0          # requests re-admitted through prefill
+    pages_quarantined: int = 0   # pages retired from the pool for good
 
     def snapshot(self) -> "FaultStats":
         return dataclasses.replace(self)
@@ -104,6 +112,9 @@ class RequestStats:
     latency_s: float = 0.0         # serve() entry -> request completed
     faults_detected: int = 0       # corruption seen while this request rode
     faults_corrected: int = 0      # ... and repaired in-flight
+    recomputes: int = 0            # times this request was recomputed after
+    #                                an unrepairable fault (pages released,
+    #                                prompt + emitted tokens re-admitted)
     spec: SpecStats | None = None  # speculative segments it rode in
 
     def snapshot(self) -> "RequestStats":

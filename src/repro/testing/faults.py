@@ -19,6 +19,19 @@ Faults are described by :class:`FaultSpec`:
   (``which`` picks K or V), addressed either by ``at`` (a multi-index into
   the lane-removed plane array ``(L, P, ps, Kv, hdp)``) or by flat
   ``index``.
+* ``kind="kv_sticky"`` — same as ``"kv"``, but the bit *re-flips after
+  every targeted repair*: the harness wraps the engine's
+  ``_fault_repair`` hook (the fault-policy escalation path) and re-applies
+  the XOR at the recorded location each time the policy repairs it,
+  modeling a sticky hardware cell rather than a transient upset.  This is
+  what drives a page through ``note_fault`` strikes into quarantine.
+  (Scrub-path repairs — ``verify_pages`` inside ``_scrub_launch`` — are
+  not wrapped; drive sticky faults with ``policy=`` engines, scrub off.)
+
+A fault entry may also be a *callable* ``spec(engine) -> location`` for
+corruption shapes :class:`FaultSpec` cannot express (e.g. a crafted
+double fault overwriting both witness lanes of one element); it is
+invoked once when the faults fire and logged like a spec.
 
 Everything operates on host copies and writes the corrupted arrays back,
 so no jit caches are invalidated.
@@ -40,7 +53,7 @@ __all__ = ["FaultSpec", "inject_faults", "flip_weight_bit", "flip_kv_bit"]
 
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
-    kind: str                  # "weight" | "kv"
+    kind: str                  # "weight" | "kv" | "kv_sticky"
     bit: int = 0x01            # XOR mask applied to the stored byte
     channel: int = 0           # residue channel (weight) / plane lane (kv)
     index: int = 0             # flat element index within the channel plane
@@ -49,10 +62,10 @@ class FaultSpec:
     at: tuple[int, ...] | None = None  # multi-index alternative to ``index``
 
     def __post_init__(self):
-        if self.kind not in ("weight", "kv"):
-            raise ValueError(f"kind must be 'weight' or 'kv', got "
-                             f"{self.kind!r}")
-        if self.kind == "kv" and self.which not in ("k", "v"):
+        if self.kind not in ("weight", "kv", "kv_sticky"):
+            raise ValueError(f"kind must be 'weight', 'kv' or 'kv_sticky', "
+                             f"got {self.kind!r}")
+        if self.kind in ("kv", "kv_sticky") and self.which not in ("k", "v"):
             raise ValueError(f"which must be 'k' or 'v', got {self.which!r}")
         if not 0 < self.bit <= 0xFF:
             raise ValueError(f"bit must be a nonzero byte mask, got "
@@ -125,11 +138,21 @@ def flip_kv_bit(engine, spec: FaultSpec) -> tuple[int, ...]:
 
 def _apply(engine, faults, log: list) -> None:
     for spec in faults:
-        if spec.kind == "weight":
+        if callable(spec):
+            loc = spec(engine)
+        elif spec.kind == "weight":
             loc = flip_weight_bit(engine, spec)
         else:
             loc = flip_kv_bit(engine, spec)
         log.append((spec, loc))
+
+
+def _reflip_sticky(engine, log: list) -> None:
+    """Re-corrupt every fired ``kv_sticky`` fault at its recorded byte."""
+    for spec, loc in log:
+        if isinstance(spec, FaultSpec) and spec.kind == "kv_sticky":
+            flip_kv_bit(engine, dataclasses.replace(
+                spec, kind="kv", channel=loc[0], at=loc[1:], index=0))
 
 
 @contextlib.contextmanager
@@ -150,8 +173,19 @@ def inject_faults(engine, faults, *,
         raise ValueError("inject_faults drives the paged dispatch path; "
                          "construct the engine with paged=True")
     orig = engine._dispatch_segment
+    orig_repair = engine._fault_repair
     log: list = []
     armed = {"live": True}
+    sticky = any(isinstance(f, FaultSpec) and f.kind == "kv_sticky"
+                 for f in faults)
+
+    def patched_repair(layers, tabs_np, slots):
+        # sticky-cell model: the policy's targeted repair rewrites the
+        # page with corrected bytes, and the bad cell flips right back
+        ledger = orig_repair(layers, tabs_np, slots)
+        if log:
+            _reflip_sticky(engine, log)
+        return ledger
 
     def patched(tok0, pos0, eos_vec, done0, remaining, tabs, seg,
                 temperature, key, key_base, stop_on_finish, greedy):
@@ -184,7 +218,11 @@ def inject_faults(engine, faults, *,
                 done2, cnt1 + cnt2, 0, 0)
 
     engine._dispatch_segment = patched
+    if sticky:
+        engine._fault_repair = patched_repair
     try:
         yield log
     finally:
         engine._dispatch_segment = orig
+        if sticky:
+            engine._fault_repair = orig_repair

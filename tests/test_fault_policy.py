@@ -1,0 +1,465 @@
+"""In-kernel syndrome accumulation + fault-domain escalation (PR 10).
+
+The acceptance pins, bottom-up:
+
+* the paged flash-decode kernel's **in-kernel syndrome** output (witness
+  lanes checked while the KV planes are already loaded) matches the
+  gather-dequant reference syndrome exactly, and is zero on clean pools;
+* the ``_check_packed`` decision table — witness fault / packed-byte
+  fault / detected-but-uncorrectable double fault — against an
+  independent pure-python mirror, element- and page-granular (hypothesis
+  properties over random corruption);
+* the escalation state machine (DESIGN.md §15): a transient single fault
+  is detected by the in-kernel path (**no** standalone ``verify_pages``
+  sweep on the hot path — ``kv_scrubs == 0``), repaired in place, the
+  segment replayed bit-identically; a **sticky** fault (re-flips after
+  every repair) drives the page through ``note_fault`` strikes into
+  quarantine within one segment; a crafted **double fault** is
+  uncorrectable, quarantines immediately, and under ``policy="strict"``
+  the holding request is recomputed — final tokens bit-identical to a
+  fault-free run at both the engine and the scheduler level;
+* the ``FaultStats`` ledger matches the injected faults exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ArchConfig
+from repro.core.moduli import P21R2
+from repro.models.api import build_model
+from repro.numerics import kv_pages as kvp
+from repro.numerics.attention import paged_decode
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Request, RequestScheduler
+from repro.testing.faults import FaultSpec, inject_faults
+
+CFG = ArchConfig(name="t", family="dense", d_model=64, n_layers=2,
+                 n_heads=4, n_kv=2, d_ff=128, vocab=97,
+                 compute_dtype="float32")
+
+FMT = kvp.KV_FORMATS["rns8r"]
+RED = FMT.mset.redundant_moduli            # (17, 19)
+HALF = FMT.mset.half_range                 # 120
+
+# layer 0, page 1 (the first page slot 0 holds), row 0, kv-head 0, dim 0 —
+# a prompt KV row every generate() below actually attends to
+LIVE = (0, 1, 0, 0, 0)
+
+
+@pytest.fixture(scope="module")
+def rmodel():
+    model = build_model(CFG, system="rns", rns_mset=P21R2)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _engine(rmodel, **kw):
+    model, params = rmodel
+    kw.setdefault("kv_format", "rns8r")
+    kw.setdefault("scrub", "off")
+    return ServingEngine(model, params, batch=2, s_max=32, paged=True,
+                         page_size=4, **kw)
+
+
+def _prompts():
+    rng = np.random.default_rng(7)
+    return {"tokens": rng.integers(0, CFG.vocab, (2, 6)).astype(np.int32)}
+
+
+def _double_fault(engine):
+    """Overwrite BOTH witness lanes of one live K element with the
+    residues of a value outside the info range: every syndrome fires but
+    the witness CRT decode lands out of range — detected, uncorrectable
+    (the ``unc`` row of the decision table), deterministically."""
+    kv = engine.pool.kv
+    t = kv.k
+    arr = np.asarray(t.planes).copy()
+    cf = np.moveaxis(arr.view(np.uint8), arr.ndim - 3, 0)
+    dec = int(FMT.pack.decode(
+        jnp.asarray([[int(cf[(0, *LIVE)])]], jnp.int32))[0, 0])
+    v = next(v for v in range(HALF + 1, 240)
+             if v % RED[0] != dec % RED[0] and v % RED[1] != dec % RED[1])
+    cf[(1, *LIVE)] = v % RED[0]
+    cf[(2, *LIVE)] = v % RED[1]
+    engine.pool.kv = kvp.PagedKV(
+        dataclasses.replace(t, planes=jnp.asarray(arr)), kv.v)
+    return LIVE
+
+
+# ---------------------------------------------------------------------------
+# In-kernel syndrome: kernel vs reference, clean-pool zeros
+# ---------------------------------------------------------------------------
+
+
+def _syndrome_pool():
+    B, Kv, hd, ps, n_pmax = 2, 2, 16, 4, 3
+    rng = np.random.default_rng(3)
+    pool = kvp.make_paged_kv(1, 1 + B * n_pmax, ps, Kv, hd, fmt="rns8r",
+                             dtype=jnp.float32)
+    kd = rng.normal(0, 1, (1, B, n_pmax * ps, Kv, hd)).astype(np.float32)
+    vd = rng.normal(0, 1, (1, B, n_pmax * ps, Kv, hd)).astype(np.float32)
+    tab = jnp.asarray(
+        np.arange(1, 1 + B * n_pmax, dtype=np.int32).reshape(B, n_pmax))
+    pool = kvp.scatter_prefill(pool, jnp.asarray(kd), jnp.asarray(vd),
+                               tab, page_size=ps)
+    q = jnp.asarray(rng.normal(0, 1, (B, 4, hd)).astype(np.float32))
+    kv_len = jnp.asarray(np.array([9, 6], np.int32))
+    return q, pool, tab, kv_len, ps
+
+
+@pytest.mark.parametrize("backend", ["interpret", "ref"])
+def test_paged_decode_syndrome_clean_zero(backend):
+    q, pool, tab, kv_len, ps = _syndrome_pool()
+    layer = kvp.layer_slice(pool, 0)
+    out, syn = paged_decode(q, layer, tab, kv_len, page_size=ps,
+                            backend=backend, syndrome=True)
+    np.testing.assert_array_equal(np.asarray(syn), 0)
+    plain = paged_decode(q, layer, tab, kv_len, page_size=ps,
+                         backend=backend)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(plain))
+
+
+def test_paged_decode_syndrome_kernel_matches_ref():
+    """Faulty elements in valid rows (a witness flip and a packed-byte
+    flip) are counted by both backends identically; a flip in a row
+    beyond ``kv_len`` is masked and counts zero."""
+    q, pool, tab, kv_len, ps = _syndrome_pool()
+    base = kvp.layer_slice(pool, 0)
+    planes = np.asarray(base.k.planes).copy()   # (P, ps, 3, Kv, hd)
+    planes[1, 1, 1, 0, 5] ^= 0x01   # slot 0: page 1, row 1 -> pos 1 < 9
+    planes[2, 2, 0, 1, 3] ^= 0x02   # slot 0: page 2, row 2 -> pos 6 < 9
+    planes[5, 3, 1, 0, 0] ^= 0x01   # slot 1: page 5, row 3 -> pos 7 >= 6
+    layer = kvp.PagedKV(
+        dataclasses.replace(base.k, planes=jnp.asarray(planes)), base.v)
+    syns = {}
+    for backend in ("interpret", "ref"):
+        _, syn = paged_decode(q, layer, tab, kv_len, page_size=ps,
+                              backend=backend, syndrome=True)
+        syns[backend] = np.asarray(syn)
+    np.testing.assert_array_equal(syns["interpret"], syns["ref"])
+    np.testing.assert_array_equal(syns["ref"], np.array([2, 0]))
+
+
+def test_paged_decode_syndrome_requires_redundant_format():
+    B, Kv, hd, ps, n_pmax = 2, 2, 8, 4, 2
+    pool = kvp.make_paged_kv(1, 1 + B * n_pmax, ps, Kv, hd, fmt="rns8",
+                             dtype=jnp.float32)
+    tab = jnp.asarray(
+        np.arange(1, 1 + B * n_pmax, dtype=np.int32).reshape(B, n_pmax))
+    q = jnp.zeros((B, 4, hd), jnp.float32)
+    kv_len = jnp.asarray(np.array([4, 4], np.int32))
+    with pytest.raises(ValueError, match="syndrome"):
+        paged_decode(q, kvp.layer_slice(pool, 0), tab, kv_len,
+                     page_size=ps, syndrome=True)
+
+
+# ---------------------------------------------------------------------------
+# Decision-table properties: _check_packed vs a pure-python mirror
+# ---------------------------------------------------------------------------
+
+
+def _mirror_check(lanes):
+    """Pure-python mirror of the ``_check_packed`` decision table for one
+    element.  ``lanes``: stored bytes ``[packed, wit17, wit19]``.  Returns
+    ``(detected, corrected, fixed_lanes)`` — following the *table*, not
+    ground truth (e.g. a canonical-witness flip ``0 -> 17`` is undetectable
+    by construction; the mirror says so too)."""
+    x = int(FMT.pack.decode(jnp.asarray([[lanes[0]]], jnp.int32))[0, 0])
+    syn = [(int(lanes[1 + j]) - x % m) % m != 0 for j, m in enumerate(RED)]
+    n = sum(syn)
+    if n == 0:
+        return False, False, list(lanes)
+    if n == 1:
+        # single witness inconsistency: trust the packed decode, rewrite
+        # the offending witness lane
+        fixed = list(lanes)
+        for j, m in enumerate(RED):
+            if syn[j]:
+                fixed[1 + j] = x % m
+        return True, True, fixed
+    # every syndrome fired: reconstruct from the witnesses alone, if the
+    # CRT decode lands in the legitimate range
+    m0, m1 = RED
+    crt = next(v for v in range(m0 * m1)
+               if v % m0 == lanes[1] % m0 and v % m1 == lanes[2] % m1)
+    x_w = crt if crt <= (m0 * m1) // 2 else crt - m0 * m1
+    if abs(x_w) <= HALF:
+        fixed = [int(FMT.pack.encode(jnp.asarray([x_w], jnp.int32))[0]),
+                 lanes[1], lanes[2]]
+        return True, True, fixed
+    return True, False, list(lanes)        # double fault: uncorrectable
+
+
+def _encode_elem(val):
+    lane0 = int(FMT.pack.encode(jnp.asarray([val], jnp.int32))[0])
+    return [lane0, val % RED[0], val % RED[1]]
+
+
+@settings(deadline=None, max_examples=60)
+@given(val=st.integers(-HALF, HALF),
+       kind=st.sampled_from(["clean", "wit0", "wit1", "byte", "double"]),
+       bit=st.integers(1, 255),
+       wval=st.integers(-161, 161))
+def test_check_packed_matches_mirror(val, kind, bit, wval):
+    lanes = _encode_elem(val)
+    if kind == "wit0":
+        lanes[1] ^= bit
+    elif kind == "wit1":
+        lanes[2] ^= bit
+    elif kind == "byte":
+        lanes[0] ^= bit
+    elif kind == "double":
+        lanes[1] = wval % RED[0]
+        lanes[2] = wval % RED[1]
+    planes = jnp.asarray(np.asarray(lanes, np.uint8).reshape(3, 1, 1))
+    fixed, det, cor = kvp._check_packed(planes, FMT.mset)
+    exp_det, exp_cor, exp_fixed = _mirror_check(lanes)
+    assert bool(np.asarray(det).any()) == exp_det
+    assert bool(np.asarray(cor).any()) == exp_cor
+    got = [int(b) for b in np.asarray(fixed).reshape(3)]
+    # uncorrectable elements are left untouched (exp_fixed == lanes): no
+    # silent miscorrection of a double fault
+    assert got == [b % 256 for b in exp_fixed]
+
+
+@settings(deadline=None, max_examples=25)
+@given(faults=st.lists(
+    st.tuples(st.integers(0, 1),       # layer
+              st.integers(0, 3),       # page
+              st.integers(0, 2),       # lane
+              st.integers(0, 1),       # ps row
+              st.integers(0, 1),       # kv head
+              st.integers(0, 1),       # hd dim
+              st.integers(1, 255)),    # xor mask
+    min_size=0, max_size=4))
+def test_repair_pages_ledger_matches_mirror(faults):
+    """Page-granular decision table: ``repair_pages`` per-(layer, page)
+    detected/corrected/uncorrectable counts equal the elementwise mirror
+    summed over each page, under arbitrary multi-element corruption."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 2, (2, 4, 2, 2, 2)).astype(np.float32))
+    planes, scale = kvp.quantize_to_format(x, FMT)
+    ref = np.asarray(planes).copy()
+    bad = ref.copy()
+    for (la, pg, lane, row, kvh, d, bit) in faults:
+        bad[la, pg, row, lane, kvh, d] ^= bit
+    t = kvp.ResidueTensor(planes=jnp.asarray(bad), scale=scale,
+                          mset=FMT.mset, layout="rns_pack",
+                          qbits=FMT.qbits, max_abs=1.0)
+    layers, pages = [0, 1], [0, 1, 2, 3]
+    fixed, det, cor, unc = kvp.repair_pages(t, layers, pages)
+    e_det = np.zeros_like(det)
+    e_cor = np.zeros_like(cor)
+    e_unc = np.zeros_like(unc)
+    touched = {(la, pg, row, kvh, d)
+               for (la, pg, lane, row, kvh, d, bit) in faults}
+    for (la, pg, row, kvh, d) in touched:
+        lanes = [int(bad[la, pg, row, ln, kvh, d]) for ln in range(3)]
+        m_det, m_cor, _ = _mirror_check(lanes)
+        e_det[la, pg] += m_det
+        e_cor[la, pg] += m_cor
+        e_unc[la, pg] += m_det and not m_cor
+    np.testing.assert_array_equal(det, e_det)
+    np.testing.assert_array_equal(cor, e_cor)
+    np.testing.assert_array_equal(unc, e_unc)
+    # repaired planes: every touched element lands where the mirror says;
+    # untouched pages come back byte-identical
+    fp = np.asarray(fixed.planes)
+    for (la, pg, row, kvh, d) in touched:
+        lanes = [int(bad[la, pg, row, ln, kvh, d]) for ln in range(3)]
+        _, _, m_fixed = _mirror_check(lanes)
+        got = [int(fp[la, pg, row, ln, kvh, d]) for ln in range(3)]
+        assert got == [b % 256 for b in m_fixed]
+    for la in range(2):
+        for pg in range(4):
+            if not any(f[0] == la and f[1] == pg for f in faults):
+                np.testing.assert_array_equal(fp[la, pg], ref[la, pg])
+
+
+# ---------------------------------------------------------------------------
+# Engine policy knobs + validation
+# ---------------------------------------------------------------------------
+
+
+def test_policy_validation(rmodel):
+    with pytest.raises(ValueError, match="policy"):
+        _engine(rmodel, policy="paranoid")
+    with pytest.raises(ValueError, match="rns8r"):
+        _engine(rmodel, policy="strict", kv_format="rns8")
+    with pytest.raises(ValueError, match="quarantine_after"):
+        _engine(rmodel, policy="strict", quarantine_after=0)
+    with pytest.raises(ValueError, match="spec"):
+        _engine(rmodel, policy="strict", spec="ngram:2")
+
+
+def test_pool_quarantine_semantics():
+    from repro.serving.kv_pool import KVPagePool
+    pool = KVPagePool(1, 6, 4, 2, 8)
+    assert pool.quarantine(0) is False         # the dump page is immune
+    assert pool.quarantine(3) is True
+    assert pool.quarantine(3) is False         # idempotent
+    assert pool.quarantined_pages == frozenset({3})
+    assert 3 not in pool._free
+    pool.reset()                               # sticky hardware: survives
+    assert 3 not in pool._free
+    got = pool.alloc(4)                        # all remaining usable pages
+    assert 3 not in got
+    with pytest.raises(RuntimeError, match="quarantined"):
+        pool.alloc(1)
+    pool.release(got)
+    assert 3 not in pool._free
+    assert pool.note_fault(5) == 1 and pool.note_fault(5) == 2
+
+
+# ---------------------------------------------------------------------------
+# Escalation end to end: detect -> correct -> quarantine -> recompute
+# ---------------------------------------------------------------------------
+
+
+def test_clean_path_zero_syndromes_no_scrub(rmodel):
+    """The clean hot path under policy="strict": zero syndromes, zero
+    repairs, zero scrub sweeps (the in-kernel reduction replaced
+    ``verify_pages`` on the hot path), tokens identical to a no-policy
+    engine."""
+    base = _engine(rmodel).generate(_prompts(), max_new=10)
+    eng = _engine(rmodel, policy="strict")
+    out = eng.generate(_prompts(), max_new=10)
+    np.testing.assert_array_equal(out.tokens, base.tokens)
+    f = eng.stats.faults
+    assert (f.syndromes, f.detected, f.corrected, f.replays,
+            f.recomputes, f.kv_scrubs, f.weight_scrubs) == (0,) * 7
+
+
+def test_single_fault_in_kernel_corrected_bit_identical(rmodel):
+    """A mid-decode transient KV flip under scrub="off": only the
+    in-kernel syndrome can see it.  Detected, repaired in place, segment
+    replayed — tokens bit-identical, ledger exact, no scrub sweep ran."""
+    clean = _engine(rmodel).generate(_prompts(), max_new=10)
+    eng = _engine(rmodel, policy="strict")
+    faults = [FaultSpec(kind="kv", which="k", channel=2, at=LIVE, bit=0x01)]
+    with inject_faults(eng, faults, after_steps=3) as log:
+        out = eng.generate(_prompts(), max_new=10)
+    assert len(log) == 1
+    np.testing.assert_array_equal(out.tokens, clean.tokens)
+    f = eng.stats.faults
+    assert f.syndromes == 1            # exactly the injected element
+    assert f.detected == 1 and f.corrected == 1 and f.uncorrected == 0
+    assert f.replays >= 1
+    assert f.recomputes == 0 and f.pages_quarantined == 0
+    assert f.kv_scrubs == 0 and f.weight_scrubs == 0
+    assert eng.pool.quarantined_pages == frozenset()
+
+
+def test_detect_policy_counts_without_repair(rmodel):
+    """policy="detect": syndromes are counted, nothing is repaired or
+    replayed."""
+    eng = _engine(rmodel, policy="detect")
+    faults = [FaultSpec(kind="kv", which="v", channel=1, at=LIVE, bit=0x01)]
+    with inject_faults(eng, faults, after_steps=3):
+        eng.generate(_prompts(), max_new=10)
+    f = eng.stats.faults
+    assert f.syndromes >= 1
+    assert f.detected == 0 and f.corrected == 0 and f.replays == 0
+
+
+def test_sticky_fault_quarantines_within_budget(rmodel):
+    """kind="kv_sticky" re-flips after every repair: the page collects
+    strikes and is quarantined within ``quarantine_after`` repair rounds
+    of a single segment; the request recomputes on healthy pages and the
+    output stays bit-identical."""
+    clean = _engine(rmodel).generate(_prompts(), max_new=10)
+    eng = _engine(rmodel, policy="strict", quarantine_after=2)
+    faults = [FaultSpec(kind="kv_sticky", which="k", channel=2, at=LIVE,
+                        bit=0x01)]
+    with inject_faults(eng, faults, after_steps=3) as log:
+        out = eng.generate(_prompts(), max_new=10)
+    assert len(log) == 1
+    np.testing.assert_array_equal(out.tokens, clean.tokens)
+    f = eng.stats.faults
+    assert f.pages_quarantined == 1
+    assert eng.pool.quarantined_pages == frozenset({LIVE[1]})
+    assert f.recomputes >= 1 and out.stats.recomputes >= 1
+    assert f.detected == f.corrected > 0   # each round repaired it again
+
+
+def test_double_fault_recompute_engine_bit_identical(rmodel):
+    """The uncorrectable row of the decision table, live: both witnesses
+    rewritten to an out-of-range value.  Repair fails, the page is
+    quarantined on the first strike, the request recomputes — and the
+    final tokens are bit-identical (corrupt tokens never surface)."""
+    clean = _engine(rmodel).generate(_prompts(), max_new=10)
+    eng = _engine(rmodel, policy="strict")
+    with inject_faults(eng, [_double_fault], after_steps=3) as log:
+        out = eng.generate(_prompts(), max_new=10)
+    assert len(log) == 1
+    np.testing.assert_array_equal(out.tokens, clean.tokens)
+    f = eng.stats.faults
+    assert f.uncorrected >= 1 and f.corrected == 0
+    assert f.pages_quarantined == 1 and f.recomputes == 1
+    assert out.stats.recomputes == 1
+    assert eng.pool.quarantined_pages == frozenset({LIVE[1]})
+
+
+def _sched_requests():
+    rng = np.random.default_rng(11)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, CFG.vocab, 5).astype(np.int32),
+                    max_new=8) for i in range(2)]
+
+
+def test_scheduler_recompute_bit_identical(rmodel):
+    """Continuous batching: a request whose page fails repair mid-segment
+    is re-admitted (prompt + trusted emitted prefix re-prefilled, the
+    next token recomputed on the *decode* path) and finishes with
+    bit-identical tokens; the other request is untouched."""
+    clean = [np.asarray(r.result) for r in
+             RequestScheduler(_engine(rmodel)).serve(_sched_requests())]
+    eng = _engine(rmodel, policy="strict")
+    reqs = _sched_requests()
+    with inject_faults(eng, [_double_fault], after_steps=2) as log:
+        out = RequestScheduler(eng).serve(reqs)
+    assert len(log) == 1
+    for r, ref in zip(out, clean):
+        np.testing.assert_array_equal(np.asarray(r.result), ref)
+    assert eng.stats.faults.recomputes == 1
+    assert [r.stats.recomputes for r in out] == [1, 0]
+    assert eng.pool.quarantined_pages == frozenset({LIVE[1]})
+
+
+def test_scheduler_sticky_quarantine_bit_identical(rmodel):
+    clean = [np.asarray(r.result) for r in
+             RequestScheduler(_engine(rmodel)).serve(_sched_requests())]
+    eng = _engine(rmodel, policy="strict", quarantine_after=2)
+    faults = [FaultSpec(kind="kv_sticky", which="k", channel=2, at=LIVE,
+                        bit=0x01)]
+    with inject_faults(eng, faults, after_steps=2) as log:
+        out = RequestScheduler(eng).serve(_sched_requests())
+    assert len(log) == 1
+    for r, ref in zip(out, clean):
+        np.testing.assert_array_equal(np.asarray(r.result), ref)
+    assert eng.stats.faults.pages_quarantined == 1
+    assert eng.pool.quarantined_pages == frozenset({LIVE[1]})
+
+
+def test_policy_composes_with_overlapped_scrub(rmodel):
+    """policy= and scrub="rotate:k" coexist: the async scrub covers
+    weight planes (and idle pages) while the in-kernel syndrome guards
+    the decode hot path; a weight fault and a KV fault in the same run
+    are both healed, tokens bit-identical."""
+    clean = _engine(rmodel).generate(_prompts(), max_new=10)
+    eng = _engine(rmodel, policy="strict", scrub="decode")
+    faults = [FaultSpec(kind="weight", bit=0x11, channel=1, index=5),
+              FaultSpec(kind="kv", which="k", channel=0, at=LIVE, bit=0x20)]
+    with inject_faults(eng, faults, after_steps=3) as log:
+        out = eng.generate(_prompts(), max_new=10)
+    assert len(log) == 2
+    np.testing.assert_array_equal(out.tokens, clean.tokens)
+    f = eng.stats.faults
+    assert f.detected >= 2 and f.detected == f.corrected
+    assert f.weight_scrubs > 0

@@ -247,10 +247,27 @@ def test_fault_spec_validation():
         FaultSpec(kind="cache")
     with pytest.raises(ValueError, match="which"):
         FaultSpec(kind="kv", which="q")
+    with pytest.raises(ValueError, match="which"):
+        FaultSpec(kind="kv_sticky", which="q")
     with pytest.raises(ValueError, match="bit"):
         FaultSpec(kind="weight", bit=0)
     with pytest.raises(ValueError, match="bit"):
         FaultSpec(kind="weight", bit=0x100)
+    # the sticky kind is a valid kv spec (drives the quarantine policy)
+    assert FaultSpec(kind="kv_sticky", which="v").kind == "kv_sticky"
+
+
+def test_decode_check_rejects_redundant_non_rns_layout():
+    """decode(check=True) would silently skip the witness channels on a
+    redundant rns_pack tensor — it must raise and point at verify_pages
+    (ROADMAP: close the redundant-layout checking gap)."""
+    from repro import numerics as nx
+
+    t = _rns8r_pages()                     # redundant rns_pack pages
+    with pytest.raises(ValueError, match="rns_pack"):
+        nx.decode(t, check=True)
+    # plain decode (no check) still works on the packed layout
+    assert np.asarray(nx.decode(t)).shape == (3, 8, 2, 16)
 
 
 # ---------------------------------------------------------------------------
